@@ -1,0 +1,70 @@
+"""Shared benchmark utilities: sim config runners and confidence intervals."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.controller import Controller, ControllerConfig
+from repro.core.profiles import A100_MIG
+from repro.sim.cluster import ClusterSim
+from repro.sim.params import SimParams, default_schedule
+
+T95 = {3: 3.182, 5: 2.776, 7: 2.447}     # two-sided t for n-1 dof
+
+
+def ci95(xs) -> tuple:
+    xs = np.asarray(xs, float)
+    n = len(xs)
+    t = T95.get(n, 1.96)
+    half = t * xs.std(ddof=1) / np.sqrt(n) if n > 1 else 0.0
+    return float(xs.mean()), float(half)
+
+
+def controller_factory(policy_overrides=None, **flags):
+    def make(sim):
+        kwargs = dict(flags)
+        if policy_overrides:
+            from repro.core.policy import PolicyConfig
+            kwargs["policy"] = PolicyConfig(**policy_overrides)
+        cfg = ControllerConfig(**kwargs)
+        c = Controller(sim.topo, sim.lattice, sim, cfg)
+        c.register_tenant("T1", "latency", sim.t1_slot, sim.t1_profile)
+        c.register_tenant("T2", "background", sim.t2_slot, A100_MIG["7g.80gb"])
+        c.register_tenant("T3", "background", sim.t3_slot, A100_MIG["2g.20gb"])
+        return c
+    return make
+
+
+ABLATIONS = {
+    "static": None,
+    "guards_only": dict(enable_mig=False, enable_placement=False,
+                        enable_guardrails=True),
+    "placement_only": dict(enable_mig=False, enable_placement=True,
+                           enable_guardrails=False),
+    "mig_only": dict(enable_mig=True, enable_placement=False,
+                     enable_guardrails=False),
+    "full": dict(enable_mig=True, enable_placement=True,
+                 enable_guardrails=True),
+}
+
+
+def run_config(name: str, seeds=range(7), duration: float = 3600.0,
+               policy_overrides=None, params_overrides=None):
+    """Run one configuration over seeds; returns list of SimResult."""
+    flags = ABLATIONS[name]
+    results = []
+    for seed in seeds:
+        overrides = dict(params_overrides or {})
+        overrides.setdefault("schedule", default_schedule(duration))
+        p = SimParams(seed=seed, duration_s=duration, **overrides)
+        factory = (controller_factory(policy_overrides, **flags)
+                   if flags is not None else None)
+        results.append(ClusterSim(p, factory).run())
+    return results
+
+
+def summarise(results):
+    miss, half_m = ci95([r.miss_rate * 100 for r in results])
+    p99, half_p = ci95([r.p99 * 1e3 for r in results])
+    thr, half_t = ci95([r.throughput_rps for r in results])
+    return {"miss": miss, "miss_ci": half_m, "p99": p99, "p99_ci": half_p,
+            "thr": thr, "thr_ci": half_t}

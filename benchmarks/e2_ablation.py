@@ -1,0 +1,54 @@
+"""E2 — Ablation study (paper Table 3): full system vs each component alone.
+
+Paper reference values (mean +- 95% CI):
+    Static MIG      16.4%+-1.5  20.0+-1.2 ms  1.00
+    Guards-only     14.5%+-1.4  19.0+-1.0 ms  0.99
+    Placement-only  13.0%+-1.2  17.8+-0.9 ms  0.98
+    MIG-only        12.2%+-1.1  17.2+-0.8 ms  0.98
+    Full            11.1%+-1.0  16.5+-0.7 ms  0.97
+"""
+from __future__ import annotations
+
+from benchmarks.common import ABLATIONS, run_config, summarise
+
+PAPER = {
+    "static": (16.4, 20.0, 1.00),
+    "guards_only": (14.5, 19.0, 0.99),
+    "placement_only": (13.0, 17.8, 0.98),
+    "mig_only": (12.2, 17.2, 0.98),
+    "full": (11.1, 16.5, 0.97),
+}
+
+
+def run(seeds=range(7), duration=3600.0, verbose=True):
+    rows = {}
+    base_thr = None
+    for name in ABLATIONS:
+        res = run_config(name, seeds, duration)
+        rows[name] = summarise(res)
+        if name == "static":
+            base_thr = rows[name]["thr"]
+    for name, r in rows.items():
+        r["norm_thr"] = r["thr"] / base_thr
+    if verbose:
+        print("== E2: ablation (paper Table 3) ==")
+        print(f"{'config':16s} {'miss%':>12s} {'p99 ms':>12s} "
+              f"{'norm thr':>9s}   paper(miss/p99/thr)")
+        for name, r in rows.items():
+            pm, pp, pt = PAPER[name]
+            print(f"{name:16s} {r['miss']:5.2f}+-{r['miss_ci']:4.2f} "
+                  f"{r['p99']:7.2f}+-{r['p99_ci']:4.2f} "
+                  f"{r['norm_thr']:9.3f}   {pm}%/{pp}ms/{pt}")
+        # ordering check (the paper's qualitative claim)
+        order = sorted(rows, key=lambda n: rows[n]["p99"])
+        print(f"  p99 ordering: {' < '.join(order)}")
+        ok = (rows['full']['p99'] <= rows['mig_only']['p99'] <=
+              rows['placement_only']['p99'] + 1.0 and
+              rows['placement_only']['p99'] <= rows['guards_only']['p99']
+              and rows['guards_only']['p99'] <= rows['static']['p99'])
+        print(f"  paper ordering reproduced: {ok}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

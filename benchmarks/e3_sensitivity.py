@@ -1,0 +1,69 @@
+"""E3 — Sensitivity analysis (paper §3.3.3): vary tau, persistence Y, and
+the guardrail bounds; measure responsiveness (actions) vs stability."""
+from __future__ import annotations
+
+from benchmarks.common import run_config, summarise
+
+
+def run(seeds=range(3), duration=2400.0, verbose=True):
+    out = {}
+    if verbose:
+        print("== E3: sensitivity (tau, Y, guardrail bounds) ==")
+
+    for tau_ms in (12.0, 15.0, 20.0):
+        res = run_config("full", seeds, duration,
+                         policy_overrides={"tau_s": tau_ms / 1e3})
+        r = summarise(res)
+        actions = sum(sum(x.actions.values()) for x in res) / len(res)
+        out[f"tau_{tau_ms}"] = {**r, "actions": actions}
+        if verbose:
+            print(f"  tau={tau_ms:5.1f}ms -> p99={r['p99']:6.2f}ms "
+                  f"miss={r['miss']:5.2f}% actions/run={actions:.1f}")
+
+    for y in (1, 3, 6):
+        res = run_config("full", seeds, duration,
+                         policy_overrides={"persistence": y})
+        r = summarise(res)
+        actions = sum(sum(x.actions.values()) for x in res) / len(res)
+        out[f"Y_{y}"] = {**r, "actions": actions}
+        if verbose:
+            print(f"  Y={y}        -> p99={r['p99']:6.2f}ms "
+                  f"miss={r['miss']:5.2f}% actions/run={actions:.1f}")
+
+    for cap_mb in (100, 300, 500):
+        # bound both ends of the throttle range at cap_mb
+        from repro.core.guardrails import GuardrailBounds
+        from repro.sim.cluster import ClusterSim
+        from repro.sim.params import SimParams, default_schedule
+        vals = []
+        for seed in seeds:
+            p = SimParams(seed=seed, duration_s=duration,
+                          schedule=default_schedule(duration))
+            def fac(sim, cap_mb=cap_mb):
+                from repro.core.controller import (Controller,
+                                                   ControllerConfig)
+                from repro.core.profiles import A100_MIG
+                cfg = ControllerConfig(
+                    enable_mig=False, enable_placement=False,
+                    enable_guardrails=True,
+                    bounds=GuardrailBounds(
+                        io_throttle=(cap_mb * 1e6, cap_mb * 1e6)))
+                c = Controller(sim.topo, sim.lattice, sim, cfg)
+                c.register_tenant("T1", "latency", sim.t1_slot,
+                                  sim.t1_profile)
+                c.register_tenant("T2", "background", sim.t2_slot,
+                                  A100_MIG["7g.80gb"])
+                c.register_tenant("T3", "background", sim.t3_slot,
+                                  A100_MIG["2g.20gb"])
+                return c
+            vals.append(ClusterSim(p, fac).run())
+        r = summarise(vals)
+        out[f"iocap_{cap_mb}MB"] = r
+        if verbose:
+            print(f"  io.max={cap_mb}MB/s -> p99={r['p99']:6.2f}ms "
+                  f"miss={r['miss']:5.2f}%")
+    return out
+
+
+if __name__ == "__main__":
+    run()

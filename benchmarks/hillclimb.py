@@ -1,0 +1,100 @@
+"""§Perf hillclimbing driver: baseline vs optimization variants for the
+three selected (arch x shape) pairs, hypothesis -> change -> measure.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb [--pair P]
+
+Pairs (chosen per the selection rule):
+  H1 deepseek_v2_236b x train_4k   — worst roofline fraction (Tm 2.9 s) and
+                                     over HBM budget (est 50.7 GiB/dev)
+  H2 mixtral_8x7b x prefill_32k    — most representative of the paper's
+                                     serving technique (TTFT-critical path)
+  H3 jamba_v0_1_52b x train_4k     — most collective-bound (Tx/Tc ~ 10)
+
+Variants are expressed as policy overrides; results land in results/perf/.
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse   # noqa: E402
+import json       # noqa: E402
+
+from repro.configs.base import INPUT_SHAPES, get_config  # noqa: E402
+from repro.launch.dryrun import dryrun  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.shardings import make_policy  # noqa: E402
+
+
+def measure(arch, shape, policy=None, tag="baseline"):
+    res = dryrun(arch, shape, verbose=False, policy_override=policy)
+    row = {
+        "tag": tag,
+        "Tc_ms": res["t_compute"] * 1e3,
+        "Tm_ms": res["t_memory"] * 1e3,
+        "Tx_ms": res["t_collective"] * 1e3,
+        "peak_gib": res["bytes_per_device"]["total_peak"] / 2**30,
+        "est_gib": res["analytic_memory"]["total"] / 2**30,
+        "coll_gb": {k: round(v / 2**30, 2)
+                    for k, v in res["collectives"].items() if v},
+    }
+    print(f"  {tag:28s} Tc={row['Tc_ms']:9.2f} Tm={row['Tm_ms']:9.2f} "
+          f"Tx={row['Tx_ms']:8.2f} peak={row['peak_gib']:7.1f} "
+          f"est={row['est_gib']:6.2f} GiB")
+    return row
+
+
+def seq_parallel_policy(arch, shape_name):
+    mesh = make_production_mesh()
+    return make_policy(get_config(arch), INPUT_SHAPES[shape_name], mesh,
+                       seq_parallel=True)
+
+
+def run_pair(arch, shape_name, variants):
+    print(f"== {arch} x {shape_name} ==")
+    rows = [measure(arch, shape_name)]
+    for tag, policy_fn in variants:
+        rows.append(measure(arch, shape_name, policy=policy_fn(), tag=tag))
+    os.makedirs("results/perf", exist_ok=True)
+    with open(f"results/perf/{arch}__{shape_name}.json", "w") as f:
+        json.dump(rows, f, indent=2)
+    return rows
+
+
+# NOTE: the repository baseline already contains the confirmed §Perf wins
+# (in-place cache carry, moe_buf divisibility, int-scatter MoE dispatch/
+# combine, window clipping, chunked MLA prefill) — the full
+# hypothesis->change->measure history with before/after numbers lives in
+# EXPERIMENTS.md §Perf.  The variants below reproduce the remaining
+# policy-level lever (sequence parallelism) against today's baseline.
+PAIRS = {
+    "h1": ("deepseek_v2_236b", "train_4k",
+           [("seq_parallel", lambda: seq_parallel_policy(
+               "deepseek_v2_236b", "train_4k"))]),
+    "h2": ("mixtral_8x7b", "prefill_32k",
+           [("seq_parallel", lambda: seq_parallel_policy(
+               "mixtral_8x7b", "prefill_32k"))]),
+    "h3": ("jamba_v0_1_52b", "train_4k",
+           [("seq_parallel", lambda: seq_parallel_policy(
+               "jamba_v0_1_52b", "train_4k"))]),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", default=None, choices=list(PAIRS))
+    args = ap.parse_args()
+    pairs = [args.pair] if args.pair else list(PAIRS)
+    for p in pairs:
+        arch, shape, variants = PAIRS[p]
+        run_pair(arch, shape, variants)
+
+
+if __name__ == "__main__":
+    main()
+
+
+def with_env(key, value, fn):
+    os.environ[key] = str(value)
+    try:
+        return fn()
+    finally:
+        os.environ.pop(key, None)

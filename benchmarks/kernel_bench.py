@@ -1,0 +1,81 @@
+"""Pallas kernel microbenchmarks.
+
+On this CPU container the kernels execute in interpret mode, so absolute
+microseconds are NOT TPU numbers — the benchmark's role here is (a) a
+regression harness for kernel call overheads and (b) the oracle-vs-kernel
+speed sanity check.  On a real TPU the same harness times the Mosaic
+binaries.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.paged_attention.ops import paged_attention
+from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.kernels.rwkv6_scan.ops import rwkv6_scan
+from repro.kernels.selective_scan.ops import selective_scan
+
+
+def timeit(fn, *args, iters=3, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(verbose=True):
+    rng = np.random.default_rng(0)
+    rows = []
+    q = jnp.asarray(rng.standard_normal((1, 256, 4, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 256, 2, 64)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 256, 2, 64)), jnp.float32)
+    rows.append(("flash_attention_interp",
+                 timeit(flash_attention, q, k, v)))
+    rows.append(("flash_attention_ref",
+                 timeit(jax.jit(flash_attention_ref), q, k, v)))
+
+    qd = jnp.asarray(rng.standard_normal((4, 4, 64)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((16, 128, 2, 64)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((16, 128, 2, 64)), jnp.float32)
+    bt = jnp.asarray(rng.integers(0, 16, (4, 4)), jnp.int32)
+    ln = jnp.asarray([300, 400, 128, 512], jnp.int32)
+    rows.append(("paged_attention_interp",
+                 timeit(paged_attention, qd, kp, vp, bt, ln)))
+    rows.append(("paged_attention_ref",
+                 timeit(jax.jit(paged_attention_ref), qd, kp, vp, bt, ln)))
+
+    x = jnp.asarray(rng.standard_normal((1, 128, 128)) * 0.3, jnp.float32)
+    dt = jnp.asarray(np.abs(rng.standard_normal((1, 128, 128))) * 0.1,
+                     jnp.float32)
+    a = jnp.asarray(-np.abs(rng.standard_normal((128, 16))) - 0.1, jnp.float32)
+    b = jnp.asarray(rng.standard_normal((1, 128, 16)) * 0.3, jnp.float32)
+    c = jnp.asarray(rng.standard_normal((1, 128, 16)) * 0.3, jnp.float32)
+    d = jnp.asarray(rng.standard_normal((128,)), jnp.float32)
+    rows.append(("selective_scan_interp",
+                 timeit(selective_scan, x, dt, a, b, c, d)))
+
+    r = jnp.asarray(rng.standard_normal((1, 128, 4, 32)) * 0.3, jnp.float32)
+    kk = jnp.asarray(rng.standard_normal((1, 128, 4, 32)) * 0.3, jnp.float32)
+    vv = jnp.asarray(rng.standard_normal((1, 128, 4, 32)) * 0.3, jnp.float32)
+    w = jnp.asarray(np.full((1, 128, 4, 32), 0.9), jnp.float32)
+    u = jnp.asarray(rng.standard_normal((4, 32)) * 0.3, jnp.float32)
+    rows.append(("rwkv6_scan_interp", timeit(rwkv6_scan, r, kk, vv, w, u)))
+
+    if verbose:
+        print("== kernel microbench (interpret mode on CPU) ==")
+        for name, us in rows:
+            print(f"{name},{us:.0f},us_per_call")
+    return dict(rows)
+
+
+if __name__ == "__main__":
+    run()

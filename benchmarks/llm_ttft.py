@@ -1,0 +1,163 @@
+"""LLM serving case study (paper §4.0.1, Table 2): vLLM-style serving of
+OLMo-2-7B-Instruct under T2/T3 interference; SLO TTFT p99 <= 200 ms.
+
+The REAL JAX serving engine (paged accounting, continuous batching, greedy
+decode) runs a reduced OLMo-2 config; its measured per-step compute is
+scaled to the 7B operating point, and the PS fabric model injects the
+transfer/interference component exactly as in the non-LLM experiments.
+The controller is *unchanged* (the paper's point: "without changing the
+controller") — it sees TTFT tails instead of request tails.
+
+Paper Table 2:  Static MIG 232 ms TTFT p99, 1.00 thr
+                Full system 199 ms TTFT p99, 0.96 thr
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.base import get_config, reduced
+from repro.core.controller import Controller, ControllerConfig
+from repro.core.policy import PolicyConfig
+from repro.core.profiles import A100_MIG
+from repro.core.signals import Snapshot, SystemSignals, TenantSignals
+from repro.core.topology import Slot, make_p4d_cluster
+from repro.serving.actuator import FabricState, ServingActuator
+from repro.serving.engine import ServingEngine
+from repro.serving.metrics import LatencyWindow
+from repro.serving.request import Request
+from repro.sim.params import default_schedule
+
+
+def run(duration=1800.0, qps=1.75, seed=0, with_controller=True,
+        verbose=True, compute_scale_7b=34.0):
+    """Virtual-time serving loop.  compute_scale_7b maps the reduced
+    model's measured prefill compute to the 7B-on-A100 operating point."""
+    cfg = reduced(get_config("olmo2_7b"))
+    engine = ServingEngine(cfg, max_slots=8, seq_cap=128, seed=seed)
+    fabric = FabricState()
+    topo = make_p4d_cluster(2)
+    now = [0.0]
+    actuator = ServingActuator(engine, fabric, topo, lambda: now[0])
+    ttft_window = LatencyWindow(max_samples=1 << 14, horizon_s=60.0)
+
+    controller = None
+    if with_controller:
+        ccfg = ControllerConfig(policy=PolicyConfig(tau_s=0.200,
+                                                    stable_obs=120))
+        controller = Controller(topo, A100_MIG, actuator, ccfg)
+        controller.register_tenant("T1", "latency", Slot(0, "h0:g0", 0),
+                                   A100_MIG["2g.20gb"])
+        controller.register_tenant("T2", "background", Slot(0, "h0:g1", 0),
+                                   A100_MIG["7g.80gb"])
+        controller.register_tenant("T3", "background", Slot(0, "h0:g0", 1),
+                                   A100_MIG["2g.20gb"])
+
+    rng = np.random.default_rng(seed)
+    schedule = default_schedule(duration)
+    next_arrival = rng.exponential(1.0 / qps)
+    next_sample = 1.0
+    req_id = 0
+    completed = 0
+    shed = 0
+    # warm every jit shape (3 prompt buckets + the batched decode) so
+    # compile time never leaks into measured compute
+    for j, pl_ in enumerate((32, 64, 96)):
+        engine.submit(Request(req_id=-10 - j, tenant="T1", prompt_len=pl_,
+                              max_new_tokens=2, arrival=0.0))
+    while engine.has_work():
+        engine.finalize_step(engine.step(), 0.0)
+
+    def t2_active_at(t):
+        return any(w.tenant == "T2" and w.start <= t < w.end
+                   for w in schedule)
+
+    while now[0] < duration:
+        fabric.t2_active = t2_active_at(now[0])
+        # arrivals (load-shed 503-style while the tenant is paused for a
+        # reconfiguration/move — counts against throughput, not latency)
+        while next_arrival <= now[0]:
+            if next_arrival < actuator.pause_until:
+                shed += 1
+            else:
+                r = Request(req_id=req_id, tenant="T1",
+                            prompt_len=int(rng.choice([32, 64, 96])),
+                            max_new_tokens=4, arrival=next_arrival,
+                            slo_ms=200.0)
+                engine.submit(r)
+                req_id += 1
+            next_arrival += rng.exponential(1.0 / qps)
+        # controller sampling
+        if controller is not None and now[0] >= next_sample:
+            t1 = TenantSignals(
+                p99=ttft_window.quantile(0.99, now[0]),
+                p95=ttft_window.quantile(0.95, now[0]),
+                p999=ttft_window.quantile(0.999, now[0]),
+                miss_rate=ttft_window.miss_rate(0.200, now[0]),
+                rps=completed / max(now[0], 1.0),
+                ttft_p99=ttft_window.quantile(0.99, now[0]))
+            sys = SystemSignals()
+            t2r = topo.root_of("h0:g1")
+            for root in topo.roots():
+                sys.pcie_bytes[root] = (fabric.t2_demand if
+                                        fabric.t2_active and root == t2r
+                                        else 1e9)
+            sys.host_io[topo.numa_of("h0:g1")] = \
+                2.5e9 if fabric.t2_active else 0.0
+            controller.on_snapshot(Snapshot(now[0], {"T1": t1}, sys))
+            next_sample = now[0] + 1.0
+        def advance_to(*candidates):
+            """Monotone virtual-clock jump to the next future event."""
+            future = [c for c in candidates if c > now[0]]
+            now[0] = min(future) if future else now[0] + 0.05
+
+        # engine work
+        if now[0] < actuator.pause_until:
+            advance_to(actuator.pause_until, next_arrival, next_sample)
+            continue
+        rep = engine.step()
+        if rep.kind == "idle":
+            advance_to(next_arrival, next_sample, now[0] + 0.05)
+            continue
+        compute = rep.compute_s * compute_scale_7b * actuator.compute_scale
+        transfer = 0.0
+        if rep.kind == "prefill":
+            sbytes = rep.tokens * 1.5e6          # per-token transfer bytes
+            transfer = sbytes / fabric.t1_bandwidth()
+        now[0] += compute + transfer
+        engine.finalize_step(rep, now[0])
+        if rep.prefilled is not None:
+            ttft = rep.prefilled.ttft
+            ttft_window.observe(now[0], ttft, slo=0.200)
+        completed += len(rep.completed)
+
+    lats = np.array([v for _, v in ttft_window.samples])
+    out = {
+        "ttft_p99_ms": float(np.quantile(lats, 0.99) * 1e3) if lats.size else 0.0,
+        "ttft_p50_ms": float(np.quantile(lats, 0.50) * 1e3) if lats.size else 0.0,
+        "miss_rate": float(np.mean(lats > 0.200)) if lats.size else 0.0,
+        "throughput_rps": completed / duration,
+        "shed": shed,
+        "actions": controller.audit.counts() if controller else {},
+    }
+    return out
+
+
+def main(verbose=True):
+    static = run(with_controller=False, seed=0)
+    full = run(with_controller=True, seed=0)
+    norm = full["throughput_rps"] / max(static["throughput_rps"], 1e-9)
+    if verbose:
+        print("== LLM serving case study (vLLM-style, OLMo-2-7B) ==")
+        print(f"  static: TTFT p99={static['ttft_p99_ms']:6.1f}ms "
+              f"(paper 232ms) miss={static['miss_rate']*100:.1f}%")
+        print(f"  full  : TTFT p99={full['ttft_p99_ms']:6.1f}ms "
+              f"(paper 199ms) miss={full['miss_rate']*100:.1f}% "
+              f"actions={full['actions']}")
+        print(f"  TTFT p99 reduction: "
+              f"{(1 - full['ttft_p99_ms']/static['ttft_p99_ms'])*100:.1f}% "
+              f"(paper ~13%)  norm throughput: {norm:.3f} (paper 0.96)")
+    return {"static": static, "full": full, "norm_throughput": norm}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Controller overheads (paper Table 4): reconfig time, move frequency,
+controller CPU."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import ci95, run_config
+
+
+def run(seeds=range(5), duration=3600.0, verbose=True):
+    res = run_config("full", seeds, duration)
+    reconfigs = [t for r in res for t in r.reconfig_times]
+    moves_per_hr = [
+        (r.actions.get("reconfigure", 0) + r.actions.get("move", 0))
+        / (duration / 3600.0) for r in res]
+    cpu = [r.controller_cpu_frac * 100 for r in res]
+    m_rc, ci_rc = ci95(reconfigs) if reconfigs else (0.0, 0.0)
+    m_mv, ci_mv = ci95(moves_per_hr)
+    m_cpu, _ = ci95(cpu)
+    out = {"reconfig_s": (m_rc, ci_rc), "moves_per_hr": (m_mv, ci_mv),
+           "controller_cpu_pct": m_cpu}
+    if verbose:
+        print("== Overheads (paper Table 4) ==")
+        print(f"  MIG reconfig time: {m_rc:5.1f}+-{ci_rc:.1f}s "
+              f"(paper 18+-6 s)")
+        print(f"  Move frequency:    {m_mv:5.2f}/hr (paper < 5/hr)")
+        print(f"  Controller CPU:    {m_cpu:5.2f}% (paper < 2%)")
+    return out
+
+
+if __name__ == "__main__":
+    run()

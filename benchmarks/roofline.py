@@ -1,0 +1,98 @@
+"""Roofline table from dry-run artifacts (deliverable g).
+
+Reads results/dryrun/*.json produced by ``repro.launch.dryrun`` and reports
+per (arch x shape x mesh): the three roofline terms, the dominant
+bottleneck, MODEL_FLOPS = 6 N D (train) / 2 N_active D (inference), and the
+useful-compute ratio MODEL_FLOPS / HLO_FLOPS.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict
+
+from repro.configs.base import INPUT_SHAPES, get_config
+from repro.models.model import model_plan
+from repro.models.params import count_params
+
+
+def active_params(arch: str) -> int:
+    """Parameters touched per token (MoE: shared + top-k routed experts)."""
+    cfg = get_config(arch)
+    total = count_params(model_plan(cfg))
+    inactive = 0
+    for layer in cfg.layer_specs():
+        f = cfg.ffn_spec_for(layer)
+        if layer.ffn == "moe" and f.num_experts:
+            per_expert = 3 * cfg.d_model * f.d_ff   # gate+up+down
+            inactive += (f.num_experts - f.top_k) * per_expert
+    return total - inactive
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    shape = INPUT_SHAPES[shape_name]
+    n = active_params(arch)
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def load_results(out_dir: str = "results/dryrun") -> Dict[str, dict]:
+    out = {}
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            out[os.path.basename(path)[:-5]] = json.load(f)
+    return out
+
+
+def run(out_dir: str = "results/dryrun", verbose: bool = True):
+    results = load_results(out_dir)
+    rows = []
+    for tag, r in results.items():
+        mf = model_flops(r["arch"], r["shape"])
+        # analytic terms (exact architecture math) are the metric of
+        # record; fall back to HLO-derived terms for older artifacts
+        tc = r.get("t_compute_analytic", r["t_compute"])
+        tm = r.get("t_memory_analytic", r["t_memory"])
+        fl = r.get("flops_analytic", r["hlo_flops"])
+        ratio = mf / fl if fl else 0.0
+        dom = {"tc": "compute", "tm": "memory", "tx": "collective"}[
+            max((("tc", tc), ("tm", tm), ("tx", r["t_collective"])),
+                key=lambda kv: kv[1])[0]]
+        rows.append({
+            "tag": tag, "arch": r["arch"], "shape": r["shape"],
+            "mesh": "multi" if r["multi_pod"] else "single",
+            "t_compute_ms": tc * 1e3,
+            "t_memory_ms": tm * 1e3,
+            "t_collective_ms": r["t_collective"] * 1e3,
+            "hlo_t_compute_ms": r["t_compute"] * 1e3,
+            "hlo_t_memory_ms": r["t_memory"] * 1e3,
+            "dominant": dom,
+            "model_flops": mf,
+            "useful_ratio": min(ratio, 1.0),
+            "peak_gib": r["bytes_per_device"]["total_peak"] / 2**30,
+            "tpu_est_gib": r.get("analytic_memory", {}).get("total", 0)
+            / 2**30,
+        })
+    if verbose:
+        print("== roofline (from dry-run artifacts) ==")
+        print(f"{'arch':22s} {'shape':12s} {'mesh':6s} "
+              f"{'Tc ms':>9s} {'Tm ms':>9s} {'Tx ms':>9s} "
+              f"{'dominant':>12s} {'useful':>7s} {'est GiB':>8s}")
+        for row in sorted(rows, key=lambda x: (x["arch"], x["shape"],
+                                               x["mesh"])):
+            print(f"{row['arch']:22s} {row['shape']:12s} {row['mesh']:6s} "
+                  f"{row['t_compute_ms']:9.3f} {row['t_memory_ms']:9.3f} "
+                  f"{row['t_collective_ms']:9.3f} {row['dominant']:>12s} "
+                  f"{row['useful_ratio']:7.3f} {row['tpu_est_gib']:8.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

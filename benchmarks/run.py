@@ -1,0 +1,73 @@
+"""Benchmark entry point: one experiment per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+E1  main experiment (Fig 3/4)        — controller vs static
+E2  ablation (Table 3)               — component contributions
+E3  sensitivity (§3.3.3)             — tau / Y / guardrail bounds
+LLM TTFT case study (Table 2)        — real engine + PS fabric
+Overheads (Table 4)                  — reconfig s, moves/hr, CPU%
+Kernels                              — Pallas microbench (interpret)
+Roofline                             — from dry-run artifacts if present
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="3 seeds / shorter runs (CI mode)")
+    ap.add_argument("--only", default=None,
+                    help="comma list: e1,e2,e3,llm,overheads,kernels,roofline")
+    args = ap.parse_args()
+    seeds = range(3) if args.quick else range(7)
+    duration = 1800.0 if args.quick else 3600.0
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name):
+        return only is None or name in only
+
+    t0 = time.time()
+    from benchmarks import (e1_main, e2_ablation, e3_sensitivity,
+                            e4_predictive, kernel_bench, llm_ttft,
+                            overheads, roofline)
+
+    if want("e1"):
+        e1_main.run(seeds=seeds, duration=duration)
+        print()
+    if want("e2"):
+        e2_ablation.run(seeds=seeds, duration=duration)
+        print()
+    if want("e3"):
+        e3_sensitivity.run(seeds=range(2) if args.quick else range(3),
+                           duration=min(duration, 2400.0))
+        print()
+    if want("e4"):
+        e4_predictive.run(seeds=range(3) if args.quick else range(5),
+                          duration=min(duration, 2400.0))
+        print()
+    if want("llm"):
+        llm_ttft.main()
+        print()
+    if want("overheads"):
+        overheads.run(seeds=range(3) if args.quick else range(5),
+                      duration=duration)
+        print()
+    if want("kernels"):
+        kernel_bench.run()
+        print()
+    if want("roofline"):
+        if os.path.isdir("results/dryrun") and os.listdir("results/dryrun"):
+            roofline.run()
+        else:
+            print("(roofline: no results/dryrun artifacts — run "
+                  "PYTHONPATH=src python -m repro.launch.dryrun first)")
+    print(f"\nbenchmarks completed in {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Train a ~small model for a few hundred steps on CPU (deliverable b).
+
+    PYTHONPATH=src python examples/train_small.py [--steps 200]
+
+Uses the reduced Jamba config — the most heterogeneous assigned arch
+(Mamba + attention + MoE) — so one run exercises every mixer/FFN path.
+"""
+import argparse
+
+from repro.configs.base import get_config, reduced
+from repro.training.data import SyntheticTokenPipeline
+from repro.training.optimizer import AdamWConfig
+from repro.training.trainer import train
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=200)
+ap.add_argument("--batch", type=int, default=8)
+ap.add_argument("--seq", type=int, default=64)
+args = ap.parse_args()
+
+cfg = reduced(get_config("jamba_v0_1_52b"))
+pipe = SyntheticTokenPipeline(cfg.vocab_size, args.batch, args.seq, seed=0)
+print(f"training {cfg.name} ({cfg.num_layers} layers: mamba+attn+moe) "
+      f"for {args.steps} steps")
+res = train(
+    cfg, iter(pipe), args.steps,
+    AdamWConfig(lr=1e-3, warmup_steps=20, total_steps=args.steps),
+    log_fn=lambda i, loss, gn: print(f"  step {i:4d} loss={loss:.4f}"),
+    log_every=20)
+print(f"loss: {res.losses[0]:.4f} -> {res.losses[-1]:.4f}")
+assert res.losses[-1] < res.losses[0], "training failed to reduce loss"
+print("OK")

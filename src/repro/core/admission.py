@@ -1,0 +1,121 @@
+"""Admission control (paper §2.3): "In cases where no safe placement can be
+found for a new tenant without violating the SLOs of existing tenants, an
+admission control mechanism will queue or reject the new workload."
+
+Safety is assessed with the paper's own formal substrate:
+  * Claim-1 stability — the new tenant's throttled demand must keep
+    sum_j g_j < B on every fabric it touches;
+  * Kingman guidance — the predicted utilisation rho for each existing
+    latency-sensitive tenant must stay below a conservative bound.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+from repro.core import psmodel
+from repro.core.kingman import GG1
+from repro.core.signals import Snapshot
+from repro.core.topology import ClusterTopology, Slot
+
+
+class AdmissionVerdict(enum.Enum):
+    ADMIT = "admit"
+    QUEUE = "queue"
+    REJECT = "reject"
+
+
+@dataclass(frozen=True)
+class TenantDemand:
+    name: str
+    pcie_bytes_per_s: float           # sustained fabric demand
+    arrival_rate: float = 0.0         # requests/s (0 for batch tenants)
+    mean_service_s: float = 0.0
+
+
+@dataclass(frozen=True)
+class AdmissionConfig:
+    fabric_capacity: float = 25e9     # per root complex (PCIe gen4 x16-ish)
+    rho_bound: float = 0.85           # conservative utilisation bound
+    max_queue: int = 8
+
+
+class AdmissionController:
+    def __init__(self, topo: ClusterTopology,
+                 cfg: AdmissionConfig = AdmissionConfig()):
+        self.topo = topo
+        self.cfg = cfg
+        self.queue: List[TenantDemand] = []
+
+    def _root_demand(self, root: str, placements: Mapping[str, Slot],
+                     demands: Mapping[str, TenantDemand]) -> float:
+        total = 0.0
+        for tenant, slot in placements.items():
+            if self.topo.root_of(slot.device) == root and tenant in demands:
+                total += demands[tenant].pcie_bytes_per_s
+        return total
+
+    def safe_slot_for(self, new: TenantDemand,
+                      placements: Mapping[str, Slot],
+                      demands: Mapping[str, TenantDemand],
+                      latency_tenants: Mapping[str, GG1],
+                      free_slots: Sequence[Slot]) -> Optional[Slot]:
+        """First slot where both safety conditions hold, or None."""
+        for slot in free_slots:
+            root = self.topo.root_of(slot.device)
+            load = self._root_demand(root, placements, demands)
+            # Claim-1: aggregate (throttled) demand under capacity
+            if load + new.pcie_bytes_per_s >= self.cfg.fabric_capacity:
+                continue
+            # Kingman: existing latency tenants on this root keep rho bounded
+            ok = True
+            for tenant, gg1 in latency_tenants.items():
+                t_slot = placements.get(tenant)
+                if t_slot is None or self.topo.root_of(t_slot.device) != root:
+                    continue
+                # service time inflates when the fabric share shrinks
+                share_before = self.cfg.fabric_capacity / max(
+                    1, self._count_on_root(root, placements))
+                share_after = self.cfg.fabric_capacity / (
+                    self._count_on_root(root, placements) + 1)
+                inflation = share_before / max(share_after, 1e-9)
+                rho = gg1.arrival_rate * gg1.mean_service * inflation
+                if rho > self.cfg.rho_bound:
+                    ok = False
+                    break
+            if ok:
+                return slot
+        return None
+
+    def _count_on_root(self, root: str, placements: Mapping[str, Slot]) -> int:
+        return sum(1 for s in placements.values()
+                   if self.topo.root_of(s.device) == root)
+
+    def decide(self, new: TenantDemand, placements: Mapping[str, Slot],
+               demands: Mapping[str, TenantDemand],
+               latency_tenants: Mapping[str, GG1],
+               free_slots: Sequence[Slot]
+               ) -> Tuple[AdmissionVerdict, Optional[Slot]]:
+        slot = self.safe_slot_for(new, placements, demands, latency_tenants,
+                                  free_slots)
+        if slot is not None:
+            return AdmissionVerdict.ADMIT, slot
+        if len(self.queue) < self.cfg.max_queue:
+            self.queue.append(new)
+            return AdmissionVerdict.QUEUE, None
+        return AdmissionVerdict.REJECT, None
+
+    def retry_queued(self, placements, demands, latency_tenants, free_slots
+                     ) -> List[Tuple[TenantDemand, Slot]]:
+        admitted = []
+        still = []
+        for t in self.queue:
+            slot = self.safe_slot_for(t, placements, demands, latency_tenants,
+                                      free_slots)
+            if slot is not None:
+                admitted.append((t, slot))
+            else:
+                still.append(t)
+        self.queue = still
+        return admitted

@@ -1,0 +1,357 @@
+"""The multi-tenancy controller (paper §2, Algorithm 1, Figure 1).
+
+Integrates: signal smoothing -> decision FSM (dwell/cool-down/persistence)
+-> tiered decision space (guardrails -> PCIe-aware placement -> dynamic
+MIG/slice reconfiguration) -> execution via an Actuator -> post-change
+validation with rollback to last-known-good.
+
+The Actuator abstracts the execution backend: the discrete-event cluster
+simulator (faithful reproduction) and the JAX serving stack (engine quotas,
+pipeline throttles, slice re-lowering) implement the same protocol.
+
+Ablation flags (enable_mig / enable_placement / enable_guardrails)
+reproduce the paper's E2 configurations.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Protocol, Tuple
+
+from repro.core.audit import AuditLog, Decision, TenantConfig
+from repro.core.guardrails import GuardrailBounds, GuardrailManager
+from repro.core.placement import (PlacementWeights, intra_device_first,
+                                  placement_score)
+from repro.core.predictor import PredictorConfig, TailTrendPredictor
+from repro.core.policy import DecisionFSM, PolicyConfig, Trigger
+from repro.core.profiles import ProfileLattice, SliceProfile
+from repro.core.optimizer import greedy_upgrade, relax_step
+from repro.core.signals import SignalSmoother, Snapshot
+from repro.core.topology import ClusterTopology, Slot
+
+
+class Actuator(Protocol):
+    def reconfigure(self, tenant: str, profile: SliceProfile) -> float: ...
+    def move(self, tenant: str, slot: Slot) -> float: ...
+    def set_io_throttle(self, tenant: str, bytes_per_s: Optional[float]) -> None: ...
+    def set_mps_quota(self, tenant: str, frac: float) -> None: ...
+    def pin_cpu_away_from_irq(self, tenant: str) -> None: ...
+    def free_slots(self) -> List[Slot]: ...
+    def headroom_units(self, device: str) -> int: ...
+
+
+@dataclass(frozen=True)
+class ControllerConfig:
+    policy: PolicyConfig = field(default_factory=PolicyConfig)
+    bounds: GuardrailBounds = field(default_factory=GuardrailBounds)
+    weights: PlacementWeights = field(default_factory=PlacementWeights)
+    enable_mig: bool = True
+    enable_placement: bool = True
+    enable_guardrails: bool = True
+    placement_improvement: float = 0.25   # min score delta to justify a move
+    relax_score_threshold: float = 0.5    # §2.2.1: conservative threshold
+    pcie_busy_frac: float = 0.35          # root "hot" above this utilisation
+    io_busy_bytes: float = 0.8e9
+    fabric_capacity: float = 25e9
+    ema_alpha: float = 0.35
+    ema_hysteresis: float = 0.02
+    # beyond-paper: proactive trend-predictive triggering (paper §5's
+    # "richer predictors" future work); structural gates still apply
+    proactive: bool = False
+    predictor: PredictorConfig = field(default_factory=PredictorConfig)
+
+
+@dataclass
+class TenantState:
+    role: str                  # "latency" | "background"
+    slot: Slot
+    profile: SliceProfile
+    config: TenantConfig
+    throttle_level: int = 0    # escalation counter for repeated throttles
+
+
+class Controller:
+    def __init__(self, topo: ClusterTopology, lattice: ProfileLattice,
+                 actuator: Actuator, cfg: ControllerConfig = ControllerConfig(),
+                 primary: str = "T1"):
+        self.topo = topo
+        self.lattice = lattice
+        self.actuator = actuator
+        self.cfg = cfg
+        self.primary = primary
+        self.fsm = DecisionFSM(cfg.policy)
+        self.smoother = SignalSmoother(cfg.ema_alpha, cfg.ema_hysteresis)
+        self.guardrails = GuardrailManager(cfg.bounds)
+        self.audit = AuditLog()
+        self.tenants: Dict[str, TenantState] = {}
+        self._baseline_rps = 0.0
+        self._last_throttle_time = -1e9
+        self.throttle_grace_s = 10.0
+        self.cpu_overhead_s = 0.0          # controller's own cost (Table 4)
+        self.predictor = TailTrendPredictor(cfg.predictor) \
+            if cfg.proactive else None
+
+    # -------------------------------------------------------------- set-up
+    def register_tenant(self, name: str, role: str, slot: Slot,
+                        profile: SliceProfile) -> None:
+        cfg = TenantConfig(profile=profile.name, device=slot.device,
+                           slot=slot.index)
+        self.tenants[name] = TenantState(role, slot, profile, cfg)
+        if role == "latency":
+            self.audit.mark_good(name, cfg)
+
+    # ------------------------------------------------------------- helpers
+    def _summary(self, snap: Snapshot) -> Dict[str, float]:
+        t = snap.tenants.get(self.primary)
+        root = self.topo.root_of(self.tenants[self.primary].slot.device)
+        return {
+            "p99": t.p99 if t else 0.0,
+            "miss": t.miss_rate if t else 0.0,
+            "pcie_root": snap.system.pcie_bytes.get(root, 0.0),
+        }
+
+    def _offenders(self) -> Tuple[Optional[str], Optional[str]]:
+        """(bandwidth offender on primary's root, compute offender on
+        primary's device)."""
+        prim = self.tenants[self.primary]
+        same_root = [
+            (name, st) for name, st in self.tenants.items()
+            if st.role == "background"
+            and self.topo.same_root(st.slot.device, prim.slot.device)]
+        comp = next((n for n, st in same_root
+                     if st.slot.device == prim.slot.device), None)
+        # bandwidth offender: prefer the sibling-device tenant (the
+        # ETL/bandwidth class) over a same-device compute tenant
+        bw = next((n for n, st in same_root
+                   if st.slot.device != prim.slot.device),
+                  same_root[0][0] if same_root else None)
+        return bw, comp
+
+    def _diagnose(self, snap: Snapshot) -> str:
+        """Root-cause: "pcie_io" vs "compute_mem" (paper §2.3)."""
+        prim = self.tenants[self.primary]
+        root = self.topo.root_of(prim.slot.device)
+        numa = self.topo.numa_of(prim.slot.device)
+        pcie = snap.system.pcie_bytes.get(root, 0.0)
+        io = snap.system.host_io.get(numa, 0.0)
+        if pcie > self.cfg.pcie_busy_frac * self.cfg.fabric_capacity or \
+                io > self.cfg.io_busy_bytes:
+            return "pcie_io"
+        return "compute_mem"
+
+    # ---------------------------------------------------------------- loop
+    def on_snapshot(self, raw: Snapshot) -> List[Decision]:
+        decisions: List[Decision] = []
+        snap = self.smoother.smooth(raw)
+        now = snap.time
+        self.guardrails.tick(self.actuator, now)
+
+        prim_name = self.primary
+        prim = self.tenants[prim_name]
+        tsig = snap.tenants.get(prim_name)
+        if tsig is None:
+            return decisions
+        p99 = tsig.p99
+
+        # throughput budget bookkeeping (T_i >= 0.95 T_base)
+        self._baseline_rps = max(self._baseline_rps, tsig.rps)
+        throughput_ok = (self._baseline_rps <= 0 or
+                         tsig.rps >= self.cfg.policy.throughput_budget *
+                         self._baseline_rps)
+
+        # -------- post-change validation / rollback (paper §2.4)
+        verdict = self.fsm.validation_result(p99)
+        if verdict is True:
+            self.audit.mark_good(prim_name, prim.config)
+            self.audit.set_validation(True)
+        elif verdict is False:
+            self.audit.set_validation(False)
+            decisions.append(self._rollback(prim_name, snap))
+
+        trig = self.fsm.observe(p99, throughput_ok)
+        if trig == Trigger.NONE and self.predictor is not None \
+                and self.fsm.phase.value == "monitor":
+            # proactive path: act on the predicted breach, same gates
+            self.predictor.update(now, p99)
+            if self.predictor.should_preact(now, p99,
+                                            self.cfg.policy.tau_s,
+                                            rps=tsig.rps):
+                trig = Trigger.BREACH
+        elif self.predictor is not None:
+            self.predictor.update(now, p99)
+        if trig == Trigger.BREACH:
+            decisions.extend(self._mitigate(snap, p99))
+        elif trig == Trigger.STABLE:
+            d = self._relax(snap, p99)
+            if d is not None:
+                decisions.append(d)
+        return decisions
+
+    # ------------------------------------------------------------- actions
+    def _mitigate(self, snap: Snapshot, p99: float) -> List[Decision]:
+        out: List[Decision] = []
+        now = snap.time
+        cause = self._diagnose(snap)
+        bw_off, comp_off = self._offenders()
+
+        # Tier 1 — guardrails: throttle the offending background tenant for
+        # a bounded window Z when PCIe/IO pressure is the diagnosis.
+        # Lightweight: not dwell-gated (only structural actions are).
+        # Escalation memory (§2.3: "if throttling does not resolve the
+        # issue, the controller proceeds to upgrade the tenant's
+        # isolation"): once throttling has been tried repeatedly while a
+        # structural lever exists, go structural instead.
+        structural_available = self.cfg.enable_mig or self.cfg.enable_placement
+        throttle_exhausted = (structural_available and bw_off is not None and
+                              self.tenants[bw_off].throttle_level >= 3)
+        if (self.cfg.enable_guardrails and cause == "pcie_io"
+                and bw_off is not None and not throttle_exhausted
+                and not self.guardrails.is_throttled(bw_off)
+                and not self.guardrails.in_refractory(bw_off, now)):
+            st = self.tenants[bw_off]
+            lo, hi = self.cfg.bounds.io_throttle
+            value = hi if st.throttle_level % 2 == 0 else lo
+            st.throttle_level += 1
+            self._last_throttle_time = now
+            applied = self.guardrails.throttle_io(self.actuator, bw_off,
+                                                  value, now)
+            out.append(self.audit.record(Decision(
+                now, "throttle_io", bw_off, {"bytes_per_s": applied},
+                self._summary(snap))))
+            return out
+
+        # Structural tiers are gated by Algorithm 1's dwell/cool-down and a
+        # grace period after a throttle (give the guardrail time to work).
+        if not self.fsm.at_reconfig_boundary() or self.fsm.is_cooling_down():
+            return out
+        if (self.cfg.enable_guardrails and bw_off is not None
+                and self.guardrails.is_throttled(bw_off)
+                and now - self._last_throttle_time < self.throttle_grace_s):
+            return out
+
+        # Tier 2/3 — upgrade isolation (placement move first, then slice
+        # enlargement; paper §2.2.1 ordering), plus CPU pinning and a
+        # stricter MPS quota on the compute offender.
+        prim = self.tenants[self.primary]
+        before = prim.config.copy()
+
+        if self.cfg.enable_placement:
+            free = self.actuator.free_slots()
+            ranked = intra_device_first(self.topo, prim.slot, free, snap,
+                                        self.cfg.weights)
+            cur_score = placement_score(self.topo, prim.slot, snap,
+                                        self.cfg.weights)
+            if ranked and ranked[0][1] < cur_score - \
+                    self.cfg.placement_improvement:
+                slot = ranked[0][0]
+                pause = self.actuator.move(self.primary, slot)
+                prim.slot = slot
+                prim.config.device, prim.config.slot = slot.device, slot.index
+                self.fsm.action_taken(p99)
+                out.append(self.audit.record(Decision(
+                    now, "move", self.primary,
+                    {"to": slot.key, "score": ranked[0][1],
+                     "from_score": cur_score, "pause_s": pause},
+                    self._summary(snap), before.__dict__,
+                    prim.config.copy().__dict__)))
+                self._side_effects(out, snap, comp_off)
+                return out
+
+        if self.cfg.enable_mig:
+            headroom = self.actuator.headroom_units(prim.slot.device)
+            target = greedy_upgrade(self.lattice, prim.profile, headroom)
+            if target is not None:
+                pause = self.actuator.reconfigure(self.primary, target)
+                prim.profile = target
+                prim.config.profile = target.name
+                self.fsm.action_taken(p99)
+                out.append(self.audit.record(Decision(
+                    now, "reconfigure", self.primary,
+                    {"profile": target.name, "pause_s": pause},
+                    self._summary(snap), before.__dict__,
+                    prim.config.copy().__dict__)))
+                self._side_effects(out, snap, comp_off)
+                return out
+
+        # last resort when structural levers are disabled/exhausted:
+        # guardrail the compute offender
+        if self.cfg.enable_guardrails and comp_off is not None:
+            st = self.tenants[comp_off]
+            new_q = max(self.cfg.bounds.mps_quota[0],
+                        st.config.mps_quota - 0.25)
+            if new_q < st.config.mps_quota:
+                applied = self.guardrails.set_mps_quota(self.actuator,
+                                                        comp_off, new_q)
+                st.config.mps_quota = applied
+                self.fsm.action_taken(p99)
+                out.append(self.audit.record(Decision(
+                    now, "mps", comp_off, {"quota": applied},
+                    self._summary(snap))))
+        return out
+
+    def _side_effects(self, out: List[Decision], snap: Snapshot,
+                      comp_off: Optional[str]) -> None:
+        """Pin CPU away from IRQ-hot cores + stricter MPS quota (§2.3)."""
+        now = snap.time
+        prim = self.tenants[self.primary]
+        if not prim.config.cpu_pinned_away_from_irq:
+            self.actuator.pin_cpu_away_from_irq(self.primary)
+            prim.config.cpu_pinned_away_from_irq = True
+            out.append(self.audit.record(Decision(
+                now, "pin_cpu", self.primary, {}, self._summary(snap))))
+        if self.cfg.enable_guardrails and comp_off is not None:
+            st = self.tenants[comp_off]
+            new_q = max(self.cfg.bounds.mps_quota[0],
+                        st.config.mps_quota - 0.25)
+            if new_q < st.config.mps_quota:
+                applied = self.guardrails.set_mps_quota(self.actuator,
+                                                        comp_off, new_q)
+                st.config.mps_quota = applied
+                out.append(self.audit.record(Decision(
+                    now, "mps", comp_off, {"quota": applied},
+                    self._summary(snap))))
+
+    def _relax(self, snap: Snapshot, p99: float) -> Optional[Decision]:
+        """Relax isolation when stable (smaller profile whose placement
+        score remains below a conservative threshold, §2.2.1)."""
+        if not self.cfg.enable_mig:
+            return None
+        if not self.fsm.at_reconfig_boundary() or self.fsm.is_cooling_down():
+            return None
+        prim = self.tenants[self.primary]
+        smaller = relax_step(self.lattice, prim.profile)
+        if smaller is None:
+            return None
+        score = placement_score(self.topo, prim.slot, snap, self.cfg.weights)
+        if score > self.cfg.relax_score_threshold:
+            return None
+        before = prim.config.copy()
+        pause = self.actuator.reconfigure(self.primary, smaller)
+        prim.profile = smaller
+        prim.config.profile = smaller.name
+        self.fsm.action_taken(p99)
+        return self.audit.record(Decision(
+            snap.time, "relax", self.primary,
+            {"profile": smaller.name, "pause_s": pause},
+            self._summary(snap), before.__dict__,
+            prim.config.copy().__dict__))
+
+    def _rollback(self, tenant: str, snap: Snapshot) -> Decision:
+        prim = self.tenants[tenant]
+        good = self.audit.last_known_good(tenant)
+        before = prim.config.copy()
+        pause = 0.0
+        if good is not None:
+            if good.profile != prim.config.profile:
+                profile = self.lattice[good.profile]
+                pause += self.actuator.reconfigure(tenant, profile)
+                prim.profile = profile
+            if (good.device, good.slot) != (prim.config.device,
+                                            prim.config.slot):
+                slot = Slot(self.topo.host_of(good.device), good.device,
+                            good.slot)
+                pause += self.actuator.move(tenant, slot)
+                prim.slot = slot
+            prim.config = good.copy()
+        return self.audit.record(Decision(
+            snap.time, "rollback", tenant, {"pause_s": pause},
+            self._summary(snap), before.__dict__, prim.config.copy().__dict__))

@@ -1,0 +1,126 @@
+"""Pallas TPU flash attention (prefill), online-softmax with blockwise tiling.
+
+TPU adaptation notes (vs the CUDA flash-attention algorithm):
+  * tiles are sized for VMEM (not shared memory): block_q x hd and
+    block_k x hd tiles with hd padded to a multiple of 128 keep the MXU
+    matmul dims hardware-aligned (128x128 systolic array);
+  * the softmax running stats (m, l) and the accumulator live in VMEM
+    scratch that persists across the innermost (kv-block) grid dimension —
+    the Pallas analogue of the register-resident accumulator on GPU;
+  * GQA is expressed in the BlockSpec index maps (the kv head for query
+    head h is h // (H // KV)), so no repeated K/V materialisation in HBM.
+
+Grid: (batch, q_heads, num_q_blocks, num_kv_blocks), kv innermost.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -2.0e38
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                 scale: float, causal: bool, window: int,
+                 softcap: Optional[float], block_q: int, block_k: int,
+                 seq_q: int, seq_k: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32)          # [bq, hd]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)          # [bk, hd]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)          # [bk, hd]
+    # zero padded K/V rows of a partial last block: OOB reads pad with NaN
+    # in interpret mode, and 0 * NaN would poison the accumulator
+    kv_rows = ki * block_k + \
+        jax.lax.broadcasted_iota(jnp.int32, (k.shape[0], 1), 0)
+    kv_valid = kv_rows < seq_k
+    k = jnp.where(kv_valid, k, 0.0)
+    v = jnp.where(kv_valid, v, 0.0)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+
+    # positions: queries aligned to the end of the key sequence
+    pos_q = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) \
+        + (seq_k - seq_q)
+    pos_k = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = pos_k < seq_k
+    if causal:
+        mask &= pos_q >= pos_k
+    if window:
+        mask &= pos_k > pos_q - window
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    p = jnp.where(mask, p, 0.0)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    m_ref[...] = m_cur
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0, :, 0, :] = (acc_ref[...] /
+                             (l_ref[...][:, None] + 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: Optional[float] = None,
+                    scale: Optional[float] = None, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False):
+    """q: [B,S,H,hd]; k/v: [B,T,KV,hd].  Returns [B,S,H,hd]."""
+    b, s, h, hd = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    if scale is None:
+        scale = 1.0 / float(hd) ** 0.5
+    block_q = min(block_q, s)
+    block_k = min(block_k, t)
+    nq = pl.cdiv(s, block_q)
+    nk = pl.cdiv(t, block_k)
+    grid = (b, h, nq, nk)
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, block_q=block_q, block_k=block_k, seq_q=s, seq_k=t)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, hd),
+                         lambda bi, hi, qi, ki: (bi, qi, hi, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda bi, hi, qi, ki, g=g: (bi, ki, hi // g, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda bi, hi, qi, ki, g=g: (bi, ki, hi // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, hd),
+                               lambda bi, hi, qi, ki: (bi, qi, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            # accumulator + online-softmax stats, persisted across kv blocks
+            pltpu.VMEM((block_q, hd), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

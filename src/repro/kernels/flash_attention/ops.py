@@ -1,0 +1,32 @@
+"""Jit'd public wrapper for the flash attention kernel.
+
+On CPU (this container) ``interpret=True`` executes the kernel body in
+Python for correctness validation; on TPU the same call compiles to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention as _kernel
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "scale", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: Optional[float] = None,
+                    scale: Optional[float] = None, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False):
+    return _kernel(q, k, v, causal=causal, window=window, softcap=softcap,
+                   scale=scale, block_q=block_q, block_k=block_k,
+                   interpret=interpret or not _on_tpu())
+
+
+__all__ = ["flash_attention", "flash_attention_ref"]

@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the flash attention kernel (prefill path)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+_NEG_INF = -2.0e38
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                        softcap: Optional[float] = None,
+                        scale: Optional[float] = None):
+    """q: [B,S,H,hd]; k/v: [B,T,KV,hd] with H % KV == 0.  Returns [B,S,H,hd].
+
+    Query position i is aligned so that the last query attends to the last
+    key: pos_q[i] = i + (T - S).
+    """
+    b, s, h, hd = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    if scale is None:
+        scale = 1.0 / float(hd) ** 0.5
+    qg = q.reshape(b, s, kv, g, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        scores = jnp.tanh(scores / softcap) * softcap
+    pos_q = jnp.arange(s) + (t - s)
+    pos_k = jnp.arange(t)
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= pos_q[:, None] >= pos_k[None, :]
+    if window:
+        mask &= pos_k[None, :] > pos_q[:, None] - window
+    scores = jnp.where(mask[None, None, None], scores, _NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = jnp.where(mask[None, None, None], p, 0.0)
+    p = p / (jnp.sum(p, axis=-1, keepdims=True) + 1e-30)
+    out = jnp.einsum("bkgst,btkh->bskgh", p, v.astype(jnp.float32))
+    return out.reshape(b, s, h, hd).astype(q.dtype)

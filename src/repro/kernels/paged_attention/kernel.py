@@ -1,0 +1,107 @@
+"""Pallas TPU paged decode attention (the vLLM-style serving hot spot).
+
+TPU adaptation notes:
+  * page gathering is done through the BlockSpec index map driven by a
+    *scalar-prefetched* block table (PrefetchScalarGridSpec) — the Pallas
+    analogue of vLLM's gather from the page pool, but resolved by the DMA
+    engine ahead of compute instead of per-warp pointer chasing;
+  * one (batch, kv_head) pair per grid step keeps the whole per-head state
+    (page tile + accumulator) in VMEM; pages stream over the innermost grid
+    dimension with the online-softmax accumulator in VMEM scratch;
+  * page_size is a multiple of 128 so the K^T q matmul hits the MXU.
+
+Grid: (batch, kv_heads, pages_per_seq), pages innermost.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -2.0e38
+
+
+def _paged_kernel(tables_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
+                  acc_ref, m_ref, l_ref, *, scale: float, page: int):
+    bi = pl.program_id(0)
+    pi = pl.program_id(2)
+    np_ = pl.num_programs(2)
+
+    @pl.when(pi == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)               # [G, hd]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)         # [page, hd]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)         # [page, hd]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    pos = pi * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = pos < lengths_ref[bi]
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.where(mask, jnp.exp(s - m_cur[:, None]), 0.0)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    m_ref[...] = m_cur
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(pi == np_ - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] /
+                       (l_ref[...][:, None] + 1e-30)).astype(o_ref.dtype)
+
+
+def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
+                    scale=None, interpret: bool = False):
+    """q: [B,H,hd]; pages: [P,page,KV,hd]; tables: [B,PPS]; lengths: [B]."""
+    b, h, hd = q.shape
+    page = k_pages.shape[1]
+    kv = k_pages.shape[2]
+    g = h // kv
+    pps = block_tables.shape[1]
+    if scale is None:
+        scale = 1.0 / float(hd) ** 0.5
+    qr = q.reshape(b, kv, g, hd)
+
+    grid = (b, kv, pps)
+    kernel = functools.partial(_paged_kernel, scale=scale, page=page)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd),
+                         lambda bi, ki, pi, tables, lens: (bi, ki, 0, 0)),
+            pl.BlockSpec((1, page, 1, hd),
+                         lambda bi, ki, pi, tables, lens:
+                         (tables[bi, pi], 0, ki, 0)),
+            pl.BlockSpec((1, page, 1, hd),
+                         lambda bi, ki, pi, tables, lens:
+                         (tables[bi, pi], 0, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd),
+                               lambda bi, ki, pi, tables, lens: (bi, ki, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, hd), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+        ],
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, hd), q.dtype),
+        interpret=interpret,
+    )(block_tables, lengths, qr, k_pages, v_pages)
+    return out.reshape(b, h, hd)

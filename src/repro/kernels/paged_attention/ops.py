@@ -1,0 +1,23 @@
+"""Jit'd public wrapper for paged decode attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.paged_attention.kernel import paged_attention as _kernel
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
+                    scale=None, interpret: bool = False):
+    return _kernel(q, k_pages, v_pages, block_tables, lengths, scale=scale,
+                   interpret=interpret or not _on_tpu())
+
+
+__all__ = ["paged_attention", "paged_attention_ref"]

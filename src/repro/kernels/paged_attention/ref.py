@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for paged decode attention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_NEG_INF = -2.0e38
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths, *,
+                        scale=None):
+    """Single-token decode attention over a paged KV cache.
+
+    q            [B, H, hd]
+    k_pages      [P, page, KV, hd]   (global page pool)
+    v_pages      [P, page, KV, hd]
+    block_tables [B, pages_per_seq] int32  (page ids per sequence)
+    lengths      [B] int32                 (tokens in each sequence)
+    Returns      [B, H, hd]
+    """
+    b, h, hd = q.shape
+    page = k_pages.shape[1]
+    kv = k_pages.shape[2]
+    g = h // kv
+    if scale is None:
+        scale = 1.0 / float(hd) ** 0.5
+    k = k_pages[block_tables]          # [B, PPS, page, KV, hd]
+    v = v_pages[block_tables]
+    b_, pps = block_tables.shape
+    k = k.reshape(b, pps * page, kv, hd)
+    v = v.reshape(b, pps * page, kv, hd)
+    qg = q.reshape(b, kv, g, hd)
+    s = jnp.einsum("bkgh,btkh->bkgt", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    pos = jnp.arange(pps * page)
+    mask = pos[None] < lengths[:, None]              # [B, T]
+    s = jnp.where(mask[:, None, None], s, _NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = jnp.where(mask[:, None, None], p, 0.0)
+    p = p / (jnp.sum(p, axis=-1, keepdims=True) + 1e-30)
+    out = jnp.einsum("bkgt,btkh->bkgh", p, v.astype(jnp.float32))
+    return out.reshape(b, h, hd).astype(q.dtype)

@@ -1,0 +1,90 @@
+"""Pallas TPU RWKV-6 WKV scan, chunked along the sequence.
+
+TPU adaptation notes (vs the reference CUDA wkv6 kernel):
+  * the CUDA kernel assigns one thread per (head, channel) and keeps a
+    column of the state in registers; on TPU the whole per-head state
+    matrix [hd, hd] (64x64 = one 8x128-lane tile pair) sits in VMEM
+    scratch, persisted across sequence chunks;
+  * the rank-1 update k_t^T v_t and the readout r_t . S are expressed as
+    broadcasts + reductions on the VPU — no MXU needed, so the kernel is
+    bandwidth-bound exactly as on GPU, and chunking amortises HBM->VMEM
+    transfers of r/k/v/w.
+
+Grid: (batch, heads, seq_chunks), chunks innermost.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sout_ref,
+                s_ref, *, chunk: int):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    u = u_ref[0].astype(jnp.float32)                  # [hd]
+
+    def step(t, s):
+        rt = r_ref[0, t, 0, :].astype(jnp.float32)    # [hd]
+        kt = k_ref[0, t, 0, :].astype(jnp.float32)
+        vt = v_ref[0, t, 0, :].astype(jnp.float32)
+        wt = w_ref[0, t, 0, :].astype(jnp.float32)
+        kv = kt[:, None] * vt[None, :]                # [hd, hd]
+        y = jnp.sum(rt[:, None] * (s + u[:, None] * kv), axis=0)
+        y_ref[0, t, 0, :] = y.astype(y_ref.dtype)
+        return wt[:, None] * s + kv
+
+    s = jax.lax.fori_loop(0, chunk, step, s_ref[...])
+    s_ref[...] = s
+
+    @pl.when(ci == nc - 1)
+    def _finalize():
+        sout_ref[0, 0] = s.astype(sout_ref.dtype)
+
+
+def rwkv6_scan(r, k, v, w, u, s0=None, *, chunk: int = 128,
+               interpret: bool = False):
+    """r/k/v/w: [B,S,H,hd]; u: [H,hd]; s0: [B,H,hd,hd].
+
+    Returns (y [B,S,H,hd], s_final [B,H,hd,hd])."""
+    b, s, h, hd = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    chunk = min(chunk, s)
+    if s % chunk != 0:
+        raise ValueError(f"seq {s} must be divisible by chunk {chunk} "
+                         "(pad inputs; OOB padding would poison the state)")
+    nc = pl.cdiv(s, chunk)
+    grid = (b, h, nc)
+
+    kernel = functools.partial(_wkv_kernel, chunk=chunk)
+    seq_spec = pl.BlockSpec((1, chunk, 1, hd), lambda bi, hi, ci: (bi, ci, hi, 0))
+    y, s_final = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            seq_spec, seq_spec, seq_spec, seq_spec,
+            pl.BlockSpec((1, hd), lambda bi, hi, ci: (hi, 0)),
+            pl.BlockSpec((1, 1, hd, hd), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_specs=[
+            seq_spec,
+            pl.BlockSpec((1, 1, hd, hd), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(r.shape, r.dtype),
+            jax.ShapeDtypeStruct((b, h, hd, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, s0)
+    return y, s_final

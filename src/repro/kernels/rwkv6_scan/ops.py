@@ -1,0 +1,23 @@
+"""Jit'd public wrapper for the RWKV-6 WKV scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.rwkv6_scan.kernel import rwkv6_scan as _kernel
+from repro.kernels.rwkv6_scan.ref import rwkv6_scan_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_scan(r, k, v, w, u, s0=None, *, chunk: int = 128,
+               interpret: bool = False):
+    return _kernel(r, k, v, w, u, s0, chunk=chunk,
+                   interpret=interpret or not _on_tpu())
+
+
+__all__ = ["rwkv6_scan", "rwkv6_scan_ref"]

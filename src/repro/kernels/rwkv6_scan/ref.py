@@ -1,0 +1,30 @@
+"""Pure-jnp/numpy oracle for the RWKV-6 WKV recurrence."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def rwkv6_scan_ref(r, k, v, w, u, s0=None):
+    """Sequential reference of the RWKV-6 time-mix recurrence.
+
+    r/k/v/w  [B, S, H, hd]   (w in (0,1): per-step decay)
+    u        [H, hd]          bonus for the current token
+    s0       [B, H, hd, hd]   initial state (optional)
+    Returns (y [B,S,H,hd], s_final [B,H,hd,hd]).
+    """
+    b, s, h, hd = r.shape
+    r = np.asarray(r, np.float32)
+    k = np.asarray(k, np.float32)
+    v = np.asarray(v, np.float32)
+    w = np.asarray(w, np.float32)
+    u = np.asarray(u, np.float32)
+    st = np.zeros((b, h, hd, hd), np.float32) if s0 is None \
+        else np.asarray(s0, np.float32).copy()
+    ys = np.zeros((b, s, h, hd), np.float32)
+    for t in range(s):
+        kv = k[:, t, :, :, None] * v[:, t, :, None, :]        # [B,H,hd,hd]
+        ys[:, t] = np.einsum("bhk,bhkv->bhv", r[:, t],
+                             st + u[None, :, :, None] * kv)
+        st = w[:, t, :, :, None] * st + kv
+    return jnp.asarray(ys), jnp.asarray(st)

@@ -1,0 +1,102 @@
+"""Pallas TPU selective scan (Mamba recurrence), chunked along the sequence.
+
+TPU adaptation notes (vs the CUDA selective-scan kernel):
+  * the GPU kernel parallelises over (batch, channel-block) thread blocks
+    and keeps the recurrent state in registers; on TPU the state tile
+    [block_d, N] lives in VMEM scratch and persists across the innermost
+    (sequence-chunk) grid dimension;
+  * channels are blocked in multiples of 128 lanes so the elementwise
+    recurrence maps onto full 8x128 VREGs; the time loop is a
+    ``fori_loop`` over the chunk inside VMEM — sequential in time (the
+    recurrence is inherently serial) but fully vectorised over channels;
+  * no warp shuffles are needed: the (d, n) state outer product is an
+    elementwise broadcast on the VPU.
+
+Grid: (batch, d_blocks, seq_chunks), chunks innermost.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, h0_ref,
+                 y_ref, hout_ref, h_ref, *, chunk: int):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = h0_ref[0].astype(jnp.float32)
+
+    a = a_ref[...].astype(jnp.float32)               # [bd, N]
+    d = d_ref[...].astype(jnp.float32)               # [bd]
+
+    def step(t, h):
+        xt = x_ref[0, t, :].astype(jnp.float32)       # [bd]
+        dt = dt_ref[0, t, :].astype(jnp.float32)      # [bd]
+        bt = b_ref[0, t, :].astype(jnp.float32)       # [N]
+        ct = c_ref[0, t, :].astype(jnp.float32)       # [N]
+        da = jnp.exp(dt[:, None] * a)                 # [bd, N]
+        h = da * h + (dt * xt)[:, None] * bt[None, :]
+        y = jnp.sum(h * ct[None, :], axis=1) + d * xt
+        y_ref[0, t, :] = y.astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, h_ref[...])
+    h_ref[...] = h
+
+    @pl.when(ci == nc - 1)
+    def _finalize():
+        hout_ref[0] = h.astype(hout_ref.dtype)
+
+
+def selective_scan(x, delta, a, b, c, d, h0=None, *, block_d: int = 256,
+                   chunk: int = 128, interpret: bool = False):
+    """x/delta: [B,S,D]; a: [D,N]; b/c: [B,S,N]; d: [D]; h0: [B,D,N].
+
+    Returns (y [B,S,D], h_final [B,D,N])."""
+    bb, s, dd = x.shape
+    n = a.shape[1]
+    if h0 is None:
+        h0 = jnp.zeros((bb, dd, n), jnp.float32)
+    block_d = min(block_d, dd)
+    chunk = min(chunk, s)
+    if s % chunk != 0:
+        raise ValueError(f"seq {s} must be divisible by chunk {chunk} "
+                         "(pad inputs; OOB padding would poison the state)")
+    if dd % block_d != 0:
+        raise ValueError(f"d {dd} must be divisible by block_d {block_d}")
+    nd = pl.cdiv(dd, block_d)
+    nc = pl.cdiv(s, chunk)
+    grid = (bb, nd, nc)
+
+    kernel = functools.partial(_scan_kernel, chunk=chunk)
+    y, h_final = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda bi, di, ci: (bi, ci, di)),
+            pl.BlockSpec((1, chunk, block_d), lambda bi, di, ci: (bi, ci, di)),
+            pl.BlockSpec((block_d, n), lambda bi, di, ci: (di, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bi, di, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bi, di, ci: (bi, ci, 0)),
+            pl.BlockSpec((block_d,), lambda bi, di, ci: (di,)),
+            pl.BlockSpec((1, block_d, n), lambda bi, di, ci: (bi, di, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda bi, di, ci: (bi, ci, di)),
+            pl.BlockSpec((1, block_d, n), lambda bi, di, ci: (bi, di, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.ShapeDtypeStruct((bb, dd, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_d, n), jnp.float32)],
+        interpret=interpret,
+    )(x, delta, a, b, c, d, h0)
+    return y, h_final

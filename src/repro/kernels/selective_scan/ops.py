@@ -1,0 +1,23 @@
+"""Jit'd public wrapper for the Mamba selective scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.selective_scan.kernel import selective_scan as _kernel
+from repro.kernels.selective_scan.ref import selective_scan_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "chunk", "interpret"))
+def selective_scan(x, delta, a, b, c, d, h0=None, *, block_d: int = 256,
+                   chunk: int = 128, interpret: bool = False):
+    return _kernel(x, delta, a, b, c, d, h0, block_d=block_d, chunk=chunk,
+                   interpret=interpret or not _on_tpu())
+
+
+__all__ = ["selective_scan", "selective_scan_ref"]

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the Mamba selective scan."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def selective_scan_ref(x, delta, a, b, c, d, h0=None):
+    """Sequential reference of  h_t = exp(delta_t A) h_{t-1} + delta_t B_t x_t;
+    y_t = C_t h_t + D x_t.
+
+    x      [B, S, D]      input activations (post conv)
+    delta  [B, S, D]      softplus'd timestep
+    a      [D, N]         negative-definite state matrix (diag, = -exp(A_log))
+    b      [B, S, N]      input matrix
+    c      [B, S, N]      output matrix
+    d      [D]            skip
+    h0     [B, D, N]      initial state (optional)
+    Returns (y [B,S,D], h_final [B,D,N]).
+    """
+    xb, s, dd = x.shape
+    n = a.shape[1]
+    x = np.asarray(x, np.float32)
+    delta = np.asarray(delta, np.float32)
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    c = np.asarray(c, np.float32)
+    d = np.asarray(d, np.float32)
+    h = np.zeros((xb, dd, n), np.float32) if h0 is None \
+        else np.asarray(h0, np.float32).copy()
+    ys = np.zeros((xb, s, dd), np.float32)
+    for t in range(s):
+        da = np.exp(delta[:, t, :, None] * a[None])            # [B,D,N]
+        dbx = delta[:, t, :, None] * b[:, t, None, :] * x[:, t, :, None]
+        h = da * h + dbx
+        ys[:, t] = np.einsum("bdn,bn->bd", h, c[:, t]) + d * x[:, t]
+    return jnp.asarray(ys), jnp.asarray(h)

@@ -1,0 +1,355 @@
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+against the production mesh, and extract the roofline terms.
+
+MUST set the placeholder device count before ANY other import — jax locks
+the device count on first init.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse        # noqa: E402
+import json            # noqa: E402
+import re              # noqa: E402
+import time            # noqa: E402
+from typing import Dict, Optional  # noqa: E402
+
+import jax             # noqa: E402
+import numpy as np     # noqa: E402
+
+from repro.configs.base import (ARCH_IDS, INPUT_SHAPES, InputShape,  # noqa: E402
+                                ModelConfig, get_config)
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.specs import input_specs  # noqa: E402
+from repro.launch.steps import build_step  # noqa: E402
+from repro.models.model import model_plan  # noqa: E402
+from repro.models.params import (count_params, param_bytes,  # noqa: E402
+                                 shardings_from_plan, specs_from_plan)
+from repro.training.optimizer import state_plan  # noqa: E402
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"=\s*\(?([a-z0-9]+)\[([0-9,]*)\]")
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16,
+}
+
+
+def collective_bytes_from_hlo(hlo: str, scan_multipliers: Dict[str, int]
+                              ) -> Dict[str, float]:
+    """Sum result sizes of every collective op in the compiled HLO.
+
+    Collectives inside ``while`` bodies (lax.scan over layers) execute once
+    per trip; we multiply ops found in non-entry computations matching a
+    known scan by its trip count (the layer-stack ``repeats``).
+    """
+    totals = {c: 0.0 for c in _COLLECTIVES}
+    current_comp = ""
+    default_mult = max(scan_multipliers.values()) if scan_multipliers else 1
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if stripped.startswith("%") and "{" in stripped and "(" in stripped \
+                and "=" not in stripped.split("(")[0]:
+            current_comp = stripped.split(" ")[0]
+            continue
+        if stripped.startswith("ENTRY"):
+            current_comp = "ENTRY"
+            continue
+        for coll in _COLLECTIVES:
+            if f" {coll}(" in stripped or f"{coll}-start(" in stripped:
+                m = _SHAPE_RE.search(stripped)
+                if not m:
+                    continue
+                dtype, dims = m.group(1), m.group(2)
+                size = _DTYPE_BYTES.get(dtype, 2)
+                if dims:
+                    size *= int(np.prod([int(d) for d in dims.split(",")]))
+                mult = 1
+                if current_comp != "ENTRY" and (
+                        "body" in current_comp or "while" in current_comp
+                        or "scan" in current_comp):
+                    mult = default_mult
+                totals[coll] += float(size) * mult
+                break
+    return totals
+
+
+def roofline_terms(cost: dict, coll_bytes: float, num_chips: int,
+                   scan_mult: int = 1) -> Dict[str, float]:
+    flops = float(cost.get("flops", 0.0)) * scan_mult
+    hbm = float(cost.get("bytes accessed", 0.0)) * scan_mult
+    return {
+        "hlo_flops": flops,
+        "hlo_bytes": hbm,
+        "collective_bytes": coll_bytes,
+        "t_compute": flops / (num_chips * PEAK_FLOPS),
+        "t_memory": hbm / (num_chips * HBM_BW),
+        "t_collective": coll_bytes / (num_chips * ICI_BW),
+    }
+
+
+def _leaf_bytes_per_device(plan, mesh) -> int:
+    """Analytic per-device bytes for a plan tree under its resolved specs."""
+    import jax.numpy as jnp
+    from repro.models.params import P, resolve_pspec, _axis_size
+
+    def leaf(p: P) -> int:
+        spec = resolve_pspec(mesh, p)
+        n = 1
+        for dim, entry in zip(p.shape, tuple(spec) + (None,) * len(p.shape)):
+            ext = _axis_size(mesh, entry) if entry is not None else 1
+            n *= -(-dim // max(ext, 1))
+        return n * jnp.dtype(p.dtype).itemsize
+
+    leaves = jax.tree.leaves(plan, is_leaf=lambda x: isinstance(x, P))
+    return int(sum(leaf(p) for p in leaves))
+
+
+def analytic_memory(cfg: ModelConfig, shape: InputShape, mesh,
+                    policy=None) -> Dict[str, float]:
+    """TPU-faithful per-device HBM estimate (bf16 params/activations).
+
+    The CPU backend's memory_analysis() over-reports because XLA-on-CPU
+    promotes bf16 compute to f32 and hoists whole-residual-stack converts
+    out of loops (measured 3x on the saved activation stacks).  This model
+    reconstructs the TPU budget from the plans: params (+grads +Adam
+    moments for train), the remat residual stack, decode caches, and a
+    working-set allowance.
+    """
+    from repro.launch.shardings import make_policy
+    from repro.launch.specs import decode_arg_plans
+    from repro.models.model import model_plan as _mp
+
+    policy = policy or make_policy(cfg, shape, mesh)
+    pplan = _mp(cfg)
+    params_b = _leaf_bytes_per_device(pplan, mesh)
+    out: Dict[str, float] = {"params": params_b}
+    data_shards = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            data_shards *= mesh.shape[a]
+    if shape.mode == "train":
+        out["grads"] = params_b
+        out["adam_moments"] = 4 * count_params(pplan) // max(
+            np.prod([mesh.shape[a] for a in mesh.axis_names]), 1) * 2
+        b_local = max(1, shape.global_batch // data_shards)
+        # one bf16 residual per scanned layer (jax.checkpoint saves carries);
+        # sequence parallelism shards the saved stack over `model`
+        seq_shards = 1
+        if policy.act and len(policy.act) > 1 and policy.act[1] == "model":
+            seq_shards = mesh.shape.get("model", 1)
+        out["residual_stack"] = (cfg.num_layers * b_local * shape.seq_len
+                                 * cfg.d_model * 2 // seq_shards)
+        out["working_set"] = 2 << 30
+    else:
+        cplan, _, _ = decode_arg_plans(cfg, shape, mesh)
+        out["kv_cache"] = _leaf_bytes_per_device(cplan, mesh)
+        out["working_set"] = 1 << 30
+    out = {k: float(v) for k, v in out.items()}
+    out["total"] = float(sum(out.values()))
+    return out
+
+
+def analytic_terms(cfg: ModelConfig, shape: InputShape, num_chips: int,
+                   q_chunk: int = 512) -> Dict[str, float]:
+    """Exact per-step FLOPs/bytes from the architecture math (bf16 on TPU).
+
+    Needed because XLA's cost_analysis counts each while body ONCE: the
+    layer scan is corrected by `repeats`, but *nested* scans (the chunked
+    attention) would need per-while trip counts the text dump doesn't
+    carry.  The analytic model is exact for the dense algebra and is the
+    §Roofline/§Perf metric of record; HLO terms are the cross-check.
+    """
+    mode = shape.mode
+    tokens = shape.global_batch * (shape.seq_len if mode != "decode" else 1)
+    d = cfg.d_model
+    flops = 0.0
+    hbm = 0.0
+    cap_of = lambda w: min(shape.seq_len, w) if w else shape.seq_len
+    for layer in cfg.layer_specs():
+        # ---- mixer ----
+        if layer.mixer == "attn":
+            a = cfg.attn
+            if a.kind == "mla":
+                qk = a.nope_head_dim + a.rope_head_dim
+                proj = (d * a.q_lora_rank + a.q_lora_rank * a.num_heads * qk
+                        + d * (a.kv_lora_rank + a.rope_head_dim)
+                        + a.kv_lora_rank * a.num_heads
+                        * (a.nope_head_dim + a.v_head_dim)
+                        + a.num_heads * a.v_head_dim * d)
+                hd_eff = qk
+                kv_bytes_tok = (a.kv_lora_rank + a.rope_head_dim) * 2
+                heads = a.num_heads
+            else:
+                proj = d * (a.num_heads + 2 * a.num_kv_heads) * a.head_dim \
+                    + a.num_heads * a.head_dim * d
+                hd_eff = a.head_dim
+                kv_bytes_tok = 2 * a.num_kv_heads * a.head_dim * 2
+                heads = a.num_heads
+            flops += 2 * tokens * proj
+            if mode == "decode":
+                span = cap_of(layer.window)
+                flops += 4 * shape.global_batch * heads * hd_eff * span
+                hbm += shape.global_batch * span * kv_bytes_tok  # cache read
+            else:
+                # chunked causal attention; windowed layers clip to the span
+                if layer.window and layer.window + q_chunk < shape.seq_len:
+                    span = layer.window + q_chunk
+                    flops += 4 * shape.global_batch * heads * hd_eff \
+                        * shape.seq_len * span
+                else:
+                    flops += 4 * shape.global_batch * heads * hd_eff \
+                        * shape.seq_len * (shape.seq_len + 1) / 2
+        elif layer.mixer == "mamba":
+            m = cfg.mamba
+            d_in = m.expand * d
+            dt_rank = m.dt_rank or -(-d // 16)
+            proj = d * 2 * d_in + d_in * (dt_rank + 2 * m.d_state) \
+                + dt_rank * d_in + d_in * d
+            flops += 2 * tokens * proj + 6 * tokens * d_in * m.d_state
+        elif layer.mixer == "rwkv6":
+            r = cfg.rwkv
+            flops += 2 * tokens * (5 * d * d + d * r.decay_lora * 2) \
+                + 4 * tokens * d * r.head_dim
+        # ---- ffn ----
+        f = cfg.ffn_spec_for(layer)
+        if layer.ffn == "dense":
+            flops += 2 * tokens * 3 * d * f.d_ff
+        elif layer.ffn == "moe":
+            active = f.top_k + f.num_shared_experts
+            flops += 2 * tokens * (d * f.num_experts
+                                   + active * 3 * d * f.d_ff)
+        elif layer.ffn == "rwkv_cm":
+            flops += 2 * tokens * (2 * d * d + 2 * d * cfg.rwkv.d_ffn)
+    # embeddings / logits
+    flops += 2 * tokens * d * cfg.vocab_size if mode != "decode" else \
+        2 * shape.global_batch * d * cfg.vocab_size
+    if cfg.encoder is not None and mode != "decode":
+        enc_tok = shape.global_batch * shape.seq_len
+        enc = cfg.encoder
+        per = 2 * (4 * d * d + 3 * d * enc.d_ff)
+        flops += enc.num_layers * (enc_tok * per
+                                   + 4 * enc_tok * shape.seq_len * d)
+    if mode == "train":
+        flops *= 3.0          # fwd + bwd (2x) ; remat recompute folded into hbm
+    # memory: weights read once per step + activation IO (2 passes bf16)
+    params_bytes = param_bytes(model_plan(cfg))
+    hbm += params_bytes * (3.0 if mode == "train" else 1.0)
+    hbm += tokens * d * 2 * cfg.num_layers * (4.0 if mode == "train" else 2.0)
+    return {
+        "flops_analytic": flops,
+        "hbm_bytes_analytic": hbm,
+        "t_compute_analytic": flops / (num_chips * PEAK_FLOPS),
+        "t_memory_analytic": hbm / (num_chips * HBM_BW),
+    }
+
+
+def dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
+           verbose: bool = True, policy_override=None,
+           extra_tag: str = "") -> Optional[dict]:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    if shape_name == "long_500k" and not cfg.supports_long_context:
+        if verbose:
+            print(f"SKIP {arch} x {shape_name}: full-attention arch "
+                  f"(sub-quadratic rule, see DESIGN.md)")
+        return None
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    num_chips = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+    with mesh:
+        step_fn, args, shardings, out_shardings, donate = build_step(
+            cfg, shape, mesh, policy_override=policy_override)
+        lowered = jax.jit(step_fn, in_shardings=shardings,
+                          out_shardings=out_shardings,
+                          donate_argnums=donate).lower(*args)
+        compiled = lowered.compile()
+    compile_s = time.time() - t0
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    scan_mult = max(cfg.repeats, 1)
+    colls = collective_bytes_from_hlo(hlo, {"layers": scan_mult})
+    coll_total = sum(colls.values())
+    # cost_analysis on CPU counts while bodies once; scale by trip count
+    terms = roofline_terms(cost, coll_total, num_chips, scan_mult=scan_mult)
+    result = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "num_chips": num_chips, "mode": shape.mode,
+        "params": count_params(model_plan(cfg)),
+        "compile_s": round(compile_s, 1),
+        "bytes_per_device": {
+            "arguments": mem.argument_size_in_bytes,
+            "output": mem.output_size_in_bytes,
+            "temp": mem.temp_size_in_bytes,
+            "alias": mem.alias_size_in_bytes,
+            "total_peak": mem.argument_size_in_bytes
+            + mem.temp_size_in_bytes + mem.output_size_in_bytes
+            - mem.alias_size_in_bytes,
+        },
+        "collectives": colls,
+        "analytic_memory": analytic_memory(cfg, shape, mesh,
+                                           policy=policy_override),
+        **terms,
+        **analytic_terms(cfg, shape, num_chips,
+                         q_chunk=int(os.environ.get("REPRO_Q_CHUNK", "512"))),
+    }
+    if verbose:
+        gb = result["bytes_per_device"]["total_peak"] / 2**30
+        agb = result["analytic_memory"]["total"] / 2**30
+        dom = max(("t_compute_analytic", "t_memory_analytic",
+                   "t_collective"), key=lambda k: result[k])
+        print(f"{arch:24s} {shape_name:12s} chips={num_chips:3d} "
+              f"compile={compile_s:6.1f}s peak/dev={gb:7.2f}GiB "
+              f"(tpu-est {agb:6.2f}GiB) "
+              f"Tc={result['t_compute_analytic']*1e3:8.3f}ms "
+              f"Tm={result['t_memory_analytic']*1e3:8.3f}ms "
+              f"Tx={result['t_collective']*1e3:8.3f}ms dom={dom} "
+              f"[hlo Tc={result['t_compute']*1e3:.2f} "
+              f"Tm={result['t_memory']*1e3:.2f}]")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="input shape (default: all)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true",
+                    help="run single-pod and multi-pod")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'multi' if mp else 'single'}"
+                try:
+                    res = dryrun(arch, shape, multi_pod=mp)
+                except Exception as e:  # noqa: BLE001 — report, keep going
+                    failures.append((tag, repr(e)[:200]))
+                    print(f"FAIL {tag}: {repr(e)[:200]}")
+                    continue
+                if res is not None:
+                    with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                        json.dump(res, f, indent=2)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for tag, err in failures:
+            print(" ", tag, err)
+        raise SystemExit(1)
+    print("\nAll dry-runs passed.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Sharding policy resolution per (architecture x input shape x mesh).
+
+Parameters: tensor-parallel over ``model`` (heads / FFN columns / experts),
+FSDP over ``data`` (weights gathered at use), replicated over ``pod``.
+Activations: batch over ("pod","data") when the batch permits; decode KV
+caches shard KV-heads over ``model`` when divisible, otherwise the cache
+*sequence* dimension takes the ``model`` axis (split-K decode); long_500k
+(batch=1) shards sequence over ("data","model").
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models.common import ShardPolicy
+
+
+def _bd(mesh) -> Tuple:
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return axes if len(axes) > 1 else (axes[0] if axes else None)
+
+
+def make_policy(cfg: ModelConfig, shape: InputShape, mesh,
+                seq_parallel: bool = False) -> ShardPolicy:
+    """seq_parallel: Megatron-style sequence parallelism — the residual
+    stream (and hence the remat-saved activation stack) is sharded over
+    ``model`` along the sequence dimension; XLA turns the TP psums into
+    reduce-scatter + all-gather pairs around attention/FFN.  §Perf lever."""
+    bd = _bd(mesh)
+    model_size = mesh.shape.get("model", 1)
+    kv = cfg.attn.num_kv_heads
+    kv_divisible = kv % model_size == 0 and kv >= model_size
+    n_experts = cfg.moe.num_experts if cfg.moe is not None else 0
+    # experts must divide the model axis for expert-parallel dispatch;
+    # otherwise the buffer stays expert-replicated (TP-within-expert)
+    e_divisible = n_experts >= model_size and n_experts % model_size == 0
+    moe_buf = ("model", bd, None) if e_divisible else (None, bd, None)
+    act_seq = "model" if seq_parallel else None
+
+    if shape.mode in ("train", "prefill"):
+        return ShardPolicy(
+            act=(bd, act_seq, None),
+            heads=(bd, None, "model", None),
+            kv_cache=((bd, None, "model", None) if kv_divisible
+                      else (bd, "model", None, None)),
+            mla_cache=(bd, "model", None),
+            state=(bd, "model", None),
+            moe_buf=moe_buf,
+            logits=(bd, None, "model"),
+        )
+
+    if shape.global_batch == 1:
+        # long-context decode: batch unshardable — sequence-shard the cache
+        seq_axes = tuple(a for a in ("data", "model") if a in mesh.axis_names)
+        return ShardPolicy(
+            act=None,
+            heads=(None, None, "model", None),
+            kv_cache=(None, seq_axes, None, None) if not kv_divisible
+            else (None, "data", "model", None),
+            mla_cache=(None, seq_axes, None),
+            state=(None, "model", None),
+            moe_buf=("model", None, None),
+            logits=(None, None, "model"),
+        )
+
+    # batched decode
+    return ShardPolicy(
+        act=(bd, None, None),
+        heads=(bd, None, "model", None),
+        kv_cache=((bd, None, "model", None) if kv_divisible
+                  else (bd, "model", None, None)),
+        mla_cache=(bd, "model", None),
+        state=(bd, "model", None),
+        moe_buf=moe_buf,
+        logits=(bd, None, "model"),
+    )

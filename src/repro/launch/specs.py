@@ -1,0 +1,85 @@
+"""ShapeDtypeStruct input stand-ins + shardings for every model input —
+the dry-run's contract: weak-type-correct, shardable, no device allocation.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.launch.shardings import _bd, make_policy
+from repro.models.model import cache_plan
+from repro.models.params import P, shardings_from_plan, specs_from_plan
+from repro.training.optimizer import state_plan
+
+
+def _decoder_text_len(cfg: ModelConfig, shape: InputShape) -> int:
+    """Text positions for multimodal models so total tokens == seq_len."""
+    if cfg.frontend.kind == "vision":
+        return shape.seq_len - cfg.frontend.num_prefix
+    if cfg.encoder is not None:
+        # enc-dec: encoder consumes seq_len frames; decoder gets a prompt
+        return min(128, shape.seq_len) if shape.mode == "prefill" \
+            else shape.seq_len
+    return shape.seq_len
+
+
+def batch_plan(cfg: ModelConfig, shape: InputShape, mesh) -> Dict[str, P]:
+    bd = _bd(mesh)
+    b = shape.global_batch
+    tok = (bd, None) if b > 1 else ()
+    s_text = _decoder_text_len(cfg, shape)
+    plan: Dict[str, P] = {}
+    if cfg.encoder is not None:
+        plan["frames"] = P((b, shape.seq_len, cfg.frontend.embed_dim),
+                           dtype="bfloat16", pspec=tok + (None,))
+        plan["tokens"] = P((b, s_text), dtype="int32", pspec=tok)
+    elif cfg.frontend.kind == "vision":
+        plan["embeds"] = P((b, cfg.frontend.num_prefix,
+                            cfg.frontend.embed_dim), dtype="bfloat16",
+                           pspec=tok + (None,))
+        plan["tokens"] = P((b, s_text), dtype="int32", pspec=tok)
+    else:
+        plan["tokens"] = P((b, shape.seq_len), dtype="int32", pspec=tok)
+    if shape.mode == "train":
+        plan["labels"] = P(plan["tokens"].shape, dtype="int32", pspec=tok)
+    return plan
+
+
+def decode_arg_plans(cfg: ModelConfig, shape: InputShape, mesh):
+    """(cache_plan, token_plan, positions_plan) for serve_step lowering."""
+    policy = make_policy(cfg, shape, mesh)
+    b = shape.global_batch
+    bd = _bd(mesh)
+    tok = (bd,) if b > 1 else ()
+    enc_len = shape.seq_len if cfg.encoder is not None else 0
+    cplan = cache_plan(cfg, b, shape.seq_len, policy, enc_len=enc_len)
+    return (cplan,
+            P((b,), dtype="int32", pspec=tok),
+            P((b,), dtype="int32", pspec=tok))
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, mesh) -> Dict[str, Any]:
+    """All ShapeDtypeStruct stand-ins + NamedShardings for one combo.
+
+    Returns {"args": tuple, "shardings": tuple, "policy": ShardPolicy} where
+    args excludes params/opt-state (those come from the model plan).
+    """
+    policy = make_policy(cfg, shape, mesh)
+    if shape.mode in ("train", "prefill"):
+        bplan = batch_plan(cfg, shape, mesh)
+        return {
+            "args": (specs_from_plan(bplan),),
+            "shardings": (shardings_from_plan(bplan, mesh),),
+            "policy": policy,
+        }
+    cplan, tplan, pplan = decode_arg_plans(cfg, shape, mesh)
+    args = (specs_from_plan(cplan), specs_from_plan(tplan),
+            specs_from_plan(pplan))
+    shardings = (shardings_from_plan(cplan, mesh),
+                 shardings_from_plan(tplan, mesh),
+                 shardings_from_plan(pplan, mesh))
+    return {"args": args, "shardings": shardings, "policy": policy}

@@ -1,0 +1,80 @@
+"""Step-function assembly for the dry-run and the launchers.
+
+``build_step(cfg, shape, mesh)`` returns (fn, args, in_shardings,
+out_shardings) ready for ``jax.jit(...).lower(*args).compile()``:
+  * train_4k      -> train_step(params, opt_state, batch)
+  * prefill_32k   -> prefill_step(params, batch)
+  * decode shapes -> serve_step(params, cache, token, positions)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.launch.shardings import make_policy
+from repro.launch.specs import decode_arg_plans, batch_plan, input_specs
+from repro.models.model import decode_step, model_plan, prefill, train_loss
+from repro.models.params import shardings_from_plan, specs_from_plan
+from repro.training import optimizer as opt
+
+
+def build_step(cfg: ModelConfig, shape: InputShape, mesh, *,
+               policy_override=None, remat: bool = True,
+               ocfg: Optional[opt.AdamWConfig] = None):
+    policy = policy_override or make_policy(cfg, shape, mesh)
+    pplan = model_plan(cfg)
+    p_specs = specs_from_plan(pplan)
+    p_shard = shardings_from_plan(pplan, mesh)
+    replicated = NamedSharding(mesh, PartitionSpec())
+
+    if shape.mode == "train":
+        ocfg = ocfg or opt.AdamWConfig()
+        splan = opt.state_plan(pplan)
+        s_specs = specs_from_plan(splan)
+        s_shard = shardings_from_plan(splan, mesh)
+        bplan = batch_plan(cfg, shape, mesh)
+
+        def train_step(params, opt_state, batch):
+            def loss_fn(p):
+                return train_loss(p, cfg, batch, policy, remat=remat)
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            params2, opt2, diag = opt.apply_updates(ocfg, params, grads,
+                                                    opt_state)
+            return params2, opt2, {"loss": loss, **diag}
+
+        args = (p_specs, s_specs, specs_from_plan(bplan))
+        in_sh = (p_shard, s_shard, shardings_from_plan(bplan, mesh))
+        out_sh = (p_shard, s_shard, None)
+        return train_step, args, in_sh, out_sh, (0, 1)
+
+    if shape.mode == "prefill":
+        bplan = batch_plan(cfg, shape, mesh)
+        cplan, _, _ = decode_arg_plans(cfg, shape, mesh)
+        c_shard = shardings_from_plan(cplan, mesh)
+
+        def prefill_step(params, batch):
+            return prefill(params, cfg, batch, policy,
+                           seq_cap=shape.seq_len)
+
+        args = (p_specs, specs_from_plan(bplan))
+        in_sh = (p_shard, shardings_from_plan(bplan, mesh))
+        out_sh = (None, c_shard)
+        return prefill_step, args, in_sh, out_sh, ()
+
+    # decode
+    cplan, tplan, qplan = decode_arg_plans(cfg, shape, mesh)
+    c_shard = shardings_from_plan(cplan, mesh)
+
+    def serve_step(params, cache, token, positions):
+        return decode_step(params, cfg, cache, token, positions, policy)
+
+    args = (p_specs, specs_from_plan(cplan), specs_from_plan(tplan),
+            specs_from_plan(qplan))
+    in_sh = (p_shard, c_shard, shardings_from_plan(tplan, mesh),
+             shardings_from_plan(qplan, mesh))
+    out_sh = (None, c_shard)
+    return serve_step, args, in_sh, out_sh, (1,)

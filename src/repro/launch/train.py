@@ -1,0 +1,63 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch stablelm_3b \
+        --steps 200 --batch 8 --seq 128 [--reduced/--full]
+
+``--reduced`` (default) trains the smoke-scale variant on local devices;
+``--full`` lowers the full config against the production mesh (dry-run
+compile only on CPU — real execution requires the TPU pod).
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm_3b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--full", action="store_true",
+                    help="lower the full config on the production mesh")
+    ap.add_argument("--checkpoint", default=None)
+    args = ap.parse_args()
+
+    from repro.configs.base import INPUT_SHAPES, get_config, reduced
+    if args.full:
+        from repro.launch.dryrun import dryrun   # sets 512 devices? no —
+        # full-config execution is a dry-run on CPU
+        dryrun(args.arch, "train_4k")
+        return
+
+    from repro.training.data import SyntheticTokenPipeline
+    from repro.training.optimizer import AdamWConfig
+    from repro.training.trainer import train
+    cfg = reduced(get_config(args.arch))
+    frontend = None
+    if cfg.frontend.kind == "vision":
+        frontend = {"kind": "vision", "num_prefix": cfg.frontend.num_prefix,
+                    "embed_dim": cfg.frontend.embed_dim}
+    elif cfg.frontend.kind == "audio":
+        frontend = {"kind": "audio", "embed_dim": cfg.frontend.embed_dim}
+    pipe = SyntheticTokenPipeline(cfg.vocab_size, args.batch, args.seq,
+                                  frontend=frontend)
+    print(f"training {cfg.name} for {args.steps} steps "
+          f"(batch={args.batch}, seq={args.seq})")
+    res = train(cfg, iter(pipe), args.steps,
+                AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                            total_steps=args.steps),
+                log_fn=lambda i, loss, gn:
+                print(f"  step {i:4d}  loss={loss:.4f}  gnorm={gn:.2f}"))
+    print(f"final loss: {res.losses[-1]:.4f} "
+          f"(start {res.losses[0]:.4f})")
+    if args.checkpoint:
+        from repro.training import checkpoint
+        n = checkpoint.save(args.checkpoint, res.final_params,
+                            {"arch": args.arch, "steps": args.steps})
+        print(f"checkpoint written: {args.checkpoint} ({n} bytes)")
+
+
+if __name__ == "__main__":
+    main()

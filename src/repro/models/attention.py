@@ -1,0 +1,461 @@
+"""Attention family: GQA (with RoPE / sliding-window / logit softcap) and
+MLA (DeepSeek-V2 multi-head latent attention), plus enc-dec cross-attention.
+
+Decode uses a fixed-capacity cache passed in and out of ``serve_step``:
+  * full attention  — capacity = max seq_len, write slot = position
+  * sliding window  — capacity = window, ring buffer, write slot = pos % W
+  * MLA             — compressed (c_kv, k_rope) cache, absorbed-matmul decode
+Every cache carries a per-slot ``pos`` array (int32, -1 = empty) used for
+masking — this keeps ring buffers and continuous batching exact.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttentionSpec, LayerSpec, ModelConfig
+from repro.models.common import ShardPolicy, apply_rope, rms_norm, shard, softcap
+from repro.models.params import P
+
+_NEG_INF = -2.0e38
+
+
+# ---------------------------------------------------------------------------
+# Parameter plans
+# ---------------------------------------------------------------------------
+
+def attention_plan(cfg: ModelConfig, layer: LayerSpec) -> dict:
+    a = cfg.attn
+    d = cfg.d_model
+    if a.kind == "mla":
+        qk_in = a.nope_head_dim + a.rope_head_dim
+        plan = {
+            "wq_a": P((d, a.q_lora_rank), pspec=("data", None)),
+            "q_norm": P((a.q_lora_rank,), dtype="float32", init="zeros", pspec=()),
+            "wq_b": P((a.q_lora_rank, a.num_heads, qk_in), fan_in=a.q_lora_rank,
+                      pspec=(None, "model", None)),
+            "wkv_a": P((d, a.kv_lora_rank + a.rope_head_dim), pspec=("data", None)),
+            "kv_norm": P((a.kv_lora_rank,), dtype="float32", init="zeros", pspec=()),
+            "wk_b": P((a.kv_lora_rank, a.num_heads, a.nope_head_dim),
+                      fan_in=a.kv_lora_rank, pspec=(None, "model", None)),
+            "wv_b": P((a.kv_lora_rank, a.num_heads, a.v_head_dim),
+                      fan_in=a.kv_lora_rank, pspec=(None, "model", None)),
+            "wo": P((a.num_heads, a.v_head_dim, d),
+                    fan_in=a.num_heads * a.v_head_dim,
+                    pspec=("model", None, "data")),
+        }
+        return plan
+    plan = {
+        "wq": P((d, a.num_heads, a.head_dim), pspec=("data", "model", None)),
+        "wk": P((d, a.num_kv_heads, a.head_dim), pspec=("data", "model", None),
+                alt=("data", None, None)),
+        "wv": P((d, a.num_kv_heads, a.head_dim), pspec=("data", "model", None),
+                alt=("data", None, None)),
+        "wo": P((a.num_heads, a.head_dim, d), fan_in=a.num_heads * a.head_dim,
+                pspec=("model", None, "data")),
+    }
+    return plan
+
+
+def cross_attention_plan(cfg: ModelConfig) -> dict:
+    a = cfg.attn
+    d = cfg.d_model
+    return {
+        "wq": P((d, a.num_heads, a.head_dim), pspec=("data", "model", None)),
+        "wk": P((d, a.num_kv_heads, a.head_dim), pspec=("data", "model", None),
+                alt=("data", None, None)),
+        "wv": P((d, a.num_kv_heads, a.head_dim), pspec=("data", "model", None),
+                alt=("data", None, None)),
+        "wo": P((a.num_heads, a.head_dim, d), fan_in=a.num_heads * a.head_dim,
+                pspec=("model", None, "data")),
+    }
+
+
+def kv_quantized() -> bool:
+    """Opt-in int8 KV cache (beyond-paper; halves the decode memory term).
+    Per-(token, kv-head) symmetric scales; MLA caches are already
+    rank-compressed and stay bf16."""
+    import os
+    return os.environ.get("REPRO_KV_INT8", "0") == "1"
+
+
+def attn_cache_plan(cfg: ModelConfig, layer: LayerSpec, batch: int, seq_len: int,
+                    policy: ShardPolicy) -> dict:
+    """Decode-cache plan for one attention layer."""
+    a = cfg.attn
+    cap = min(seq_len, layer.window) if layer.window else seq_len
+    kvp = policy.kv_cache or ()
+    pos_spec = tuple(kvp[:2])
+    if a.kind == "mla":
+        mp = policy.mla_cache or ()
+        return {
+            "ckv": P((batch, cap, a.kv_lora_rank), pspec=mp),
+            "krope": P((batch, cap, a.rope_head_dim), pspec=tuple(mp[:2])),
+            "pos": P((batch, cap), dtype="int32", pspec=tuple(mp[:2])),
+        }
+    if kv_quantized():
+        scale_spec = tuple(kvp[:3])
+        return {
+            "k": P((batch, cap, a.num_kv_heads, a.head_dim), dtype="int8",
+                   pspec=kvp),
+            "v": P((batch, cap, a.num_kv_heads, a.head_dim), dtype="int8",
+                   pspec=kvp),
+            "k_scale": P((batch, cap, a.num_kv_heads), dtype="bfloat16",
+                         pspec=scale_spec),
+            "v_scale": P((batch, cap, a.num_kv_heads), dtype="bfloat16",
+                         pspec=scale_spec),
+            "pos": P((batch, cap), dtype="int32", pspec=pos_spec),
+        }
+    return {
+        "k": P((batch, cap, a.num_kv_heads, a.head_dim), pspec=kvp),
+        "v": P((batch, cap, a.num_kv_heads, a.head_dim), pspec=kvp),
+        "pos": P((batch, cap), dtype="int32", pspec=pos_spec),
+    }
+
+
+def _quantize_kv(x):
+    """x: [..., hd] -> (int8 values, per-row scale)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def _dequantize_kv(q, scale, dtype):
+    return (q.astype(jnp.float32)
+            * scale.astype(jnp.float32)[..., None]).astype(dtype)
+
+
+def cross_cache_plan(cfg: ModelConfig, batch: int, enc_len: int,
+                     policy: ShardPolicy) -> dict:
+    a = cfg.attn
+    kvp = policy.kv_cache or ()
+    return {
+        "ck": P((batch, enc_len, a.num_kv_heads, a.head_dim), pspec=kvp),
+        "cv": P((batch, enc_len, a.num_kv_heads, a.head_dim), pspec=kvp),
+    }
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def _split_heads(q, num_kv):
+    """[B, S, H, hd] -> [B, S, KV, G, hd]."""
+    b, s, h, hd = q.shape
+    return q.reshape(b, s, num_kv, h // num_kv, hd)
+
+
+def _gqa_scores(q, k, scale, cap):
+    """q: [B,S,KV,G,hd], k: [B,T,KV,hd] -> [B,KV,G,S,T] float32."""
+    scores = jnp.einsum("bskgh,btkh->bkgst", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    return softcap(scores, cap)
+
+
+def _masked_softmax(scores, mask):
+    scores = jnp.where(mask, scores, _NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - jax.lax.stop_gradient(m))
+    p = jnp.where(mask, p, 0.0)
+    return p / (jnp.sum(p, axis=-1, keepdims=True) + 1e-30)
+
+
+_CHUNK_THRESHOLD = 1 << 21   # S*T above which the q dimension is chunked
+
+
+def _q_chunk() -> int:
+    """Query-chunk size for the blockwise jnp attention path; overridable
+    for §Perf experiments (the Pallas kernel's block_q analogue)."""
+    import os
+    return int(os.environ.get("REPRO_Q_CHUNK", "512"))
+
+
+def _attend_block(qg, k, v, pos_q, pos_k, scale, a, layer, causal, dtype):
+    """qg: [B,bq,KV,G,hd]; k/v: [B,T,KV,hd]; pos_q: [B,bq]; pos_k: [B,T]."""
+    scores = _gqa_scores(qg, k, scale, a.logit_softcap)   # [B,KV,G,bq,T]
+    ps = pos_q[:, None, None, :, None]
+    pt = pos_k[:, None, None, None, :]
+    mask = (pt <= ps) if causal else jnp.broadcast_to(
+        jnp.bool_(True), scores.shape)
+    if layer.window:
+        mask = mask & (pt > ps - layer.window)
+    p = _masked_softmax(scores, mask)
+    return jnp.einsum("bkgst,btkh->bskgh", p.astype(dtype), v)
+
+
+def gqa_prefill(params, x, positions, layer: LayerSpec, cfg: ModelConfig,
+                policy: ShardPolicy, *, causal: bool = True):
+    """x: [B,S,d]; positions: [B,S] int32.  Returns (out, cache|None).
+
+    When S*T exceeds a threshold the query dimension is processed in
+    chunks under lax.scan with an inner checkpoint — the pure-jnp analogue
+    of the flash kernel's blockwise tiling, bounding live memory at one
+    [B,KV,G,chunk,T] score block instead of the full quadratic tensor.
+    """
+    a = cfg.attn
+    b, s, _ = x.shape
+    scale = 1.0 / jnp.sqrt(a.head_dim).astype(jnp.float32)
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    q = shard(apply_rope(q, positions, cfg.rope_theta), policy.heads)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    qg = _split_heads(q, a.num_kv_heads)                  # [B,S,KV,G,hd]
+
+    qc = _q_chunk()
+    if s * s <= _CHUNK_THRESHOLD or s % qc != 0:
+        ctx = _attend_block(qg, k, v, positions, positions, scale, a, layer,
+                            causal, x.dtype)
+    else:
+        nc = s // qc
+        q_cs = jnp.moveaxis(
+            qg.reshape(b, nc, qc, a.num_kv_heads, qg.shape[3], -1),
+            1, 0)                                          # [nc,B,qc,KV,G,hd]
+        pos_cs = jnp.moveaxis(positions.reshape(b, nc, qc), 1, 0)
+        starts = jnp.arange(nc, dtype=jnp.int32) * qc
+        # window clipping: a sliding-window layer's q chunk only sees keys
+        # in [chunk_start - window, chunk_end) — skip the rest entirely
+        # (~T/(window+qc) less attention compute + K/V traffic)
+        clip = bool(layer.window) and (layer.window + qc) < s
+        span = min(layer.window + qc, s) if clip else s
+
+        @jax.checkpoint
+        def body(carry, inp):
+            q_blk, pos_blk, start = inp
+            if clip:
+                lo = jnp.clip(start - layer.window, 0, s - span)
+                k_blk = jax.lax.dynamic_slice_in_dim(k, lo, span, axis=1)
+                v_blk = jax.lax.dynamic_slice_in_dim(v, lo, span, axis=1)
+                pos_k = jax.lax.dynamic_slice_in_dim(positions, lo, span,
+                                                     axis=1)
+            else:
+                k_blk, v_blk, pos_k = k, v, positions
+            out_blk = _attend_block(q_blk, k_blk, v_blk, pos_blk, pos_k,
+                                    scale, a, layer, causal, x.dtype)
+            return carry, out_blk
+
+        _, ctx_cs = jax.lax.scan(body, (), (q_cs, pos_cs, starts))
+        ctx = jnp.moveaxis(ctx_cs, 0, 1).reshape(
+            b, s, a.num_kv_heads, qg.shape[3], a.head_dim)
+    ctx = ctx.reshape(b, s, a.num_heads, a.head_dim)
+    out = jnp.einsum("bshk,hkd->bsd", ctx, params["wo"])
+    return shard(out, policy.act), (k, v)
+
+
+def build_gqa_cache(k, v, positions, layer: LayerSpec, seq_cap: int,
+                    policy: ShardPolicy):
+    """Turn prefill K/V into a decode cache (ring-buffered if windowed)."""
+    b, s = positions.shape
+    cap = min(seq_cap, layer.window) if layer.window else seq_cap
+    kvh, hd = k.shape[2], k.shape[3]
+    quant = kv_quantized()
+    store_dt = jnp.int8 if quant else k.dtype
+    ck = jnp.zeros((b, cap, kvh, hd), store_dt)
+    cv = jnp.zeros((b, cap, kvh, hd), store_dt)
+    cpos = jnp.full((b, cap), -1, jnp.int32)
+    take = min(s, cap)
+    k_t, v_t, p_t = k[:, -take:], v[:, -take:], positions[:, -take:]
+    slots = p_t % cap                                     # [B, take]
+    bidx = jnp.arange(b)[:, None]
+    out = {"pos": cpos.at[bidx, slots].set(p_t)}
+    if quant:
+        kq, ks = _quantize_kv(k_t)
+        vq, vs = _quantize_kv(v_t)
+        out["k"] = shard(ck.at[bidx, slots].set(kq), policy.kv_cache)
+        out["v"] = shard(cv.at[bidx, slots].set(vq), policy.kv_cache)
+        zs = jnp.zeros((b, cap, kvh), jnp.bfloat16)
+        out["k_scale"] = zs.at[bidx, slots].set(ks)
+        out["v_scale"] = zs.at[bidx, slots].set(vs)
+    else:
+        out["k"] = shard(ck.at[bidx, slots].set(k_t), policy.kv_cache)
+        out["v"] = shard(cv.at[bidx, slots].set(v_t), policy.kv_cache)
+    return out
+
+
+def gqa_decode(params, x, cache, positions, layer: LayerSpec, cfg: ModelConfig,
+               policy: ShardPolicy):
+    """x: [B,1,d]; positions: [B] int32.  Returns (out, new_cache)."""
+    a = cfg.attn
+    b = x.shape[0]
+    scale = 1.0 / jnp.sqrt(a.head_dim).astype(jnp.float32)
+    pos2 = positions[:, None]
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    q = apply_rope(q, pos2, cfg.rope_theta)
+    k = apply_rope(k, pos2, cfg.rope_theta)
+    cap = cache["k"].shape[1]
+    slots = positions % cap if layer.window else positions
+    bidx = jnp.arange(b)
+    quant = "k_scale" in cache
+    new_cache = {}
+    if quant:
+        kq, ks = _quantize_kv(k[:, 0])
+        vq, vs = _quantize_kv(v[:, 0])
+        ck = shard(cache["k"].at[bidx, slots].set(kq), policy.kv_cache)
+        cv = shard(cache["v"].at[bidx, slots].set(vq), policy.kv_cache)
+        k_sc = cache["k_scale"].at[bidx, slots].set(ks)
+        v_sc = cache["v_scale"].at[bidx, slots].set(vs)
+        k_read = _dequantize_kv(ck, k_sc, x.dtype)
+        v_read = _dequantize_kv(cv, v_sc, x.dtype)
+        new_cache.update({"k_scale": k_sc, "v_scale": v_sc})
+    else:
+        ck = shard(cache["k"].at[bidx, slots].set(k[:, 0]), policy.kv_cache)
+        cv = shard(cache["v"].at[bidx, slots].set(v[:, 0]), policy.kv_cache)
+        k_read, v_read = ck, cv
+    cpos = cache["pos"].at[bidx, slots].set(positions)
+    new_cache.update({"k": ck, "v": cv, "pos": cpos})
+    qg = _split_heads(q, a.num_kv_heads)                  # [B,1,KV,G,hd]
+    scores = _gqa_scores(qg, k_read, scale, a.logit_softcap)  # [B,KV,G,1,T]
+    pt = cpos[:, None, None, None, :]
+    ps = positions[:, None, None, None, None]
+    mask = (pt >= 0) & (pt <= ps)
+    if layer.window:
+        mask = mask & (pt > ps - layer.window)
+    p = _masked_softmax(scores, mask)
+    ctx = jnp.einsum("bkgst,btkh->bskgh", p.astype(x.dtype), v_read)
+    ctx = ctx.reshape(b, 1, a.num_heads, a.head_dim)
+    out = jnp.einsum("bshk,hkd->bsd", ctx, params["wo"])
+    return shard(out, policy.act), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+def _mla_qkv_prefill(params, x, positions, cfg):
+    a = cfg.attn
+    q_lat = rms_norm(jnp.einsum("bsd,dr->bsr", x, params["wq_a"]),
+                     params["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", q_lat, params["wq_b"])
+    q_nope, q_rope = (q[..., : a.nope_head_dim], q[..., a.nope_head_dim:])
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    kv = jnp.einsum("bsd,dr->bsr", x, params["wkv_a"])
+    ckv = rms_norm(kv[..., : a.kv_lora_rank], params["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(kv[..., None, a.kv_lora_rank:], positions,
+                        cfg.rope_theta)[..., 0, :]        # [B,S,rope]
+    return q_nope, q_rope, ckv, k_rope
+
+
+def _mla_attend_block(q_nope, q_rope, k_nope, k_rope, v, pos_q, pos_k,
+                      scale, dtype):
+    """q_*: [B,bq,H,*]; k/v: [B,T,H,*]; returns ctx [B,bq,H,v]."""
+    s_nope = jnp.einsum("bshk,bthk->bhst", q_nope, k_nope,
+                        preferred_element_type=jnp.float32)
+    s_rope = jnp.einsum("bshk,btk->bhst", q_rope, k_rope,
+                        preferred_element_type=jnp.float32)
+    scores = (s_nope + s_rope) * scale
+    mask = pos_q[:, None, :, None] >= pos_k[:, None, None, :]
+    p = _masked_softmax(scores, mask)
+    return jnp.einsum("bhst,bthv->bshv", p.astype(dtype), v)
+
+
+def mla_prefill(params, x, positions, layer: LayerSpec, cfg: ModelConfig,
+                policy: ShardPolicy):
+    """Chunked like gqa_prefill: the [B,H,chunk,T] score block replaces the
+    full quadratic tensor (decompressed K/V are still materialised once —
+    the prefill-side asymptotics favour decompression; decode uses the
+    absorbed form)."""
+    a = cfg.attn
+    b, s, _ = x.shape
+    scale = 1.0 / jnp.sqrt(float(a.nope_head_dim + a.rope_head_dim))
+    q_nope, q_rope, ckv, k_rope = _mla_qkv_prefill(params, x, positions, cfg)
+    k_nope = jnp.einsum("btr,rhk->bthk", ckv, params["wk_b"])
+    v = jnp.einsum("btr,rhv->bthv", ckv, params["wv_b"])
+
+    qc = _q_chunk()
+    if s * s <= _CHUNK_THRESHOLD or s % qc != 0:
+        ctx = _mla_attend_block(q_nope, q_rope, k_nope, k_rope, v,
+                                positions, positions, scale, x.dtype)
+    else:
+        nc = s // qc
+
+        def resplit(t):
+            return jnp.moveaxis(
+                t.reshape((b, nc, qc) + t.shape[2:]), 1, 0)
+
+        @jax.checkpoint
+        def body(carry, inp):
+            qn_blk, qr_blk, pos_blk = inp
+            out_blk = _mla_attend_block(qn_blk, qr_blk, k_nope, k_rope, v,
+                                        pos_blk, positions, scale, x.dtype)
+            return carry, out_blk
+
+        _, ctx_cs = jax.lax.scan(
+            body, (), (resplit(q_nope), resplit(q_rope), resplit(positions)))
+        ctx = jnp.moveaxis(ctx_cs, 0, 1).reshape(
+            b, s, a.num_heads, a.v_head_dim)
+    out = jnp.einsum("bshv,hvd->bsd", ctx, params["wo"])
+    return shard(out, policy.act), (ckv, k_rope)
+
+
+def build_mla_cache(ckv, k_rope, positions, seq_cap: int, policy: ShardPolicy):
+    b, s = positions.shape
+    out_ckv = jnp.zeros((b, seq_cap) + ckv.shape[2:], ckv.dtype)
+    out_kr = jnp.zeros((b, seq_cap) + k_rope.shape[2:], k_rope.dtype)
+    cpos = jnp.full((b, seq_cap), -1, jnp.int32)
+    take = min(s, seq_cap)
+    bidx = jnp.arange(b)[:, None]
+    slots = positions[:, -take:]
+    out_ckv = out_ckv.at[bidx, slots].set(ckv[:, -take:])
+    out_kr = out_kr.at[bidx, slots].set(k_rope[:, -take:])
+    cpos = cpos.at[bidx, slots].set(positions[:, -take:])
+    return {"ckv": shard(out_ckv, policy.mla_cache), "krope": out_kr, "pos": cpos}
+
+
+def mla_decode(params, x, cache, positions, layer: LayerSpec, cfg: ModelConfig,
+               policy: ShardPolicy):
+    """Absorbed-matmul MLA decode: never materialises per-head K/V."""
+    a = cfg.attn
+    b = x.shape[0]
+    scale = 1.0 / jnp.sqrt(float(a.nope_head_dim + a.rope_head_dim))
+    pos2 = positions[:, None]
+    q_nope, q_rope, ckv_new, kr_new = _mla_qkv_prefill(params, x, pos2, cfg)
+    bidx = jnp.arange(b)
+    ckv = shard(cache["ckv"].at[bidx, positions].set(ckv_new[:, 0]),
+                policy.mla_cache)
+    krope = cache["krope"].at[bidx, positions].set(kr_new[:, 0])
+    cpos = cache["pos"].at[bidx, positions].set(positions)
+    # absorb W_k_b into the query:  q_abs[b,h,r] = sum_k q_nope[b,h,k] wk_b[r,h,k]
+    q_abs = jnp.einsum("bshk,rhk->bshr", q_nope, params["wk_b"])
+    s_nope = jnp.einsum("bshr,btr->bhst", q_abs, ckv,
+                        preferred_element_type=jnp.float32)
+    s_rope = jnp.einsum("bshk,btk->bhst", q_rope, krope,
+                        preferred_element_type=jnp.float32)
+    scores = (s_nope + s_rope) * scale
+    mask = (cpos[:, None, None, :] >= 0) & \
+           (cpos[:, None, None, :] <= positions[:, None, None, None])
+    p = _masked_softmax(scores, mask)
+    ctx_c = jnp.einsum("bhst,btr->bshr", p.astype(x.dtype), ckv)  # compressed ctx
+    ctx = jnp.einsum("bshr,rhv->bshv", ctx_c, params["wv_b"])
+    out = jnp.einsum("bshv,hvd->bsd", ctx, params["wo"])
+    return shard(out, policy.act), {"ckv": ckv, "krope": krope, "pos": cpos}
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (enc-dec decoder layers)
+# ---------------------------------------------------------------------------
+
+def cross_attn_kv(params, memory):
+    """memory: [B, F, d] encoder output -> (ck, cv) [B, F, KV, hd]."""
+    ck = jnp.einsum("bfd,dhk->bfhk", memory, params["wk"])
+    cv = jnp.einsum("bfd,dhk->bfhk", memory, params["wv"])
+    return ck, cv
+
+
+def cross_attn(params, x, ck, cv, cfg: ModelConfig, policy: ShardPolicy):
+    """x: [B,S,d]; attends (non-causal) over encoder memory K/V."""
+    a = cfg.attn
+    scale = 1.0 / jnp.sqrt(a.head_dim).astype(jnp.float32)
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    qg = _split_heads(q, a.num_kv_heads)
+    scores = _gqa_scores(qg, ck, scale, None)
+    p = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bkgst,btkh->bskgh", p.astype(x.dtype), cv)
+    ctx = ctx.reshape(x.shape[0], x.shape[1], a.num_heads, a.head_dim)
+    out = jnp.einsum("bshk,hkd->bsd", ctx, params["wo"])
+    return shard(out, policy.act)

@@ -1,0 +1,96 @@
+"""Shared model components: norms, RoPE, activations, sharding helpers."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec
+
+from jax._src import mesh as _mesh_lib
+
+
+def in_mesh_context() -> bool:
+    m = _mesh_lib.thread_resources.env.physical_mesh
+    return not m.empty
+
+
+def shard(x, spec: Optional[Tuple]):
+    """with_sharding_constraint that is a no-op outside a mesh context."""
+    if spec is None or not in_mesh_context():
+        return x
+    entries = tuple(spec[: x.ndim]) + (None,) * max(0, x.ndim - len(spec))
+    return jax.lax.with_sharding_constraint(x, PartitionSpec(*entries))
+
+
+@dataclass(frozen=True)
+class ShardPolicy:
+    """Activation sharding policy, resolved per (arch x input-shape x mesh).
+
+    Each field is a PartitionSpec-style tuple (or None = no constraint).
+    ``batch`` names the mesh axes carrying the batch dimension.
+    """
+    act: Optional[Tuple] = None          # [B, S, d]
+    heads: Optional[Tuple] = None        # [B, S, H, hd]
+    kv_cache: Optional[Tuple] = None     # [B, S, KV, hd]
+    mla_cache: Optional[Tuple] = None    # [B, S, ckv(+rope)]
+    state: Optional[Tuple] = None        # [B, d_inner, ...] recurrent state
+    moe_buf: Optional[Tuple] = None      # [E, C, d]
+    logits: Optional[Tuple] = None       # [B, S, V] / [B, V]
+
+
+NO_POLICY = ShardPolicy()
+
+
+def rms_norm(x, weight, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """x: [..., S, H, hd]; positions: broadcastable to [..., S]."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                                  # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs      # [..., S, hd/2]
+    cos = jnp.cos(angles)[..., None, :]                            # [..., S, 1, hd/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x, cap: Optional[float]):
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+def gated_ffn(x, w_in, w_out, activation: str, policy: ShardPolicy):
+    """w_in: [d, 2, ff] (gate, up); w_out: [ff, d]."""
+    gu = jnp.einsum("bsd,dcf->bscf", x, w_in)
+    gate, up = gu[..., 0, :], gu[..., 1, :]
+    h = act_fn(activation)(gate) * up
+    out = jnp.einsum("bsf,fd->bsd", h, w_out)
+    return shard(out, policy.act)
+
+
+def cross_entropy_loss(logits, labels, policy: ShardPolicy):
+    """logits: [B, S, V] (possibly vocab-sharded), labels: [B, S] int32."""
+    logits = shard(logits.astype(jnp.float32), policy.logits)
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    shifted = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0]
+    tgt = jnp.take_along_axis(shifted, labels[..., None], axis=-1)[..., 0] + m[..., 0]
+    return jnp.mean(lse - tgt)

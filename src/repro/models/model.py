@@ -1,0 +1,490 @@
+"""Unified model assembly for all assigned architectures.
+
+A model is a layer *pattern* (prefix + period x repeats, see configs.base).
+The periodic part runs under ``jax.lax.scan`` over parameters stacked on a
+leading ``repeats`` axis, so HLO size and compile time are depth-independent.
+
+Three entry points (all pure functions of (params, inputs)):
+  * ``train_loss``   — full-sequence forward + causal-LM cross-entropy
+  * ``prefill``      — full-sequence forward, returns last-token logits and a
+                       decode cache (ring-buffered for windowed layers)
+  * ``decode_step``  — one token against the cache (``serve_step`` in launch)
+
+Enc-dec models (seamless) additionally run ``encode`` over (stubbed) frame
+embeddings; decoder layers cross-attend to the encoder memory.
+VLM models prepend projected (stubbed) patch embeddings to the token stream.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import (NO_POLICY, ShardPolicy, cross_entropy_loss,
+                                 gated_ffn, rms_norm, shard, softcap)
+from repro.models.params import (P, init_from_plan, shardings_from_plan,
+                                 specs_from_plan)
+
+
+# ---------------------------------------------------------------------------
+# Parameter plans
+# ---------------------------------------------------------------------------
+
+def dense_ffn_plan(cfg: ModelConfig, spec) -> dict:
+    d = cfg.d_model
+    return {
+        "w_in": P((d, 2, spec.d_ff), pspec=("data", None, "model")),
+        "w_out": P((spec.d_ff, d), fan_in=spec.d_ff, pspec=("model", "data")),
+    }
+
+
+def layer_plan(cfg: ModelConfig, layer: LayerSpec) -> dict:
+    d = cfg.d_model
+    plan: Dict[str, Any] = {"norm1": P((d,), dtype="float32", init="zeros",
+                                       pspec=())}
+    if layer.mixer == "attn":
+        plan["attn"] = attn_mod.attention_plan(cfg, layer)
+    elif layer.mixer == "mamba":
+        plan["mamba"] = ssm_mod.mamba_plan(cfg)
+    elif layer.mixer == "rwkv6":
+        plan["rwkv"] = rwkv_mod.rwkv_plan(cfg)
+    else:
+        raise ValueError(layer.mixer)
+    if layer.cross_attn:
+        plan["norm_x"] = P((d,), dtype="float32", init="zeros", pspec=())
+        plan["cross"] = attn_mod.cross_attention_plan(cfg)
+    if layer.ffn in ("dense", "moe"):
+        plan["norm2"] = P((d,), dtype="float32", init="zeros", pspec=())
+        fspec = cfg.ffn_spec_for(layer)
+        if layer.ffn == "moe":
+            plan["moe"] = moe_mod.moe_plan(cfg, fspec)
+        else:
+            plan["ffn"] = dense_ffn_plan(cfg, fspec)
+    # rwkv channel-mix params live inside the rwkv plan ("ffn" == "rwkv_cm")
+    return plan
+
+
+def _stack_leaf(p: P, n: int) -> P:
+    return P((n,) + tuple(p.shape), dtype=p.dtype, init=p.init, fan_in=p.fan_in,
+             pspec=(None,) + tuple(p.pspec),
+             alt=(None,) + tuple(p.alt) if p.alt is not None else None)
+
+
+def stack_plan(plan, n: int):
+    return jax.tree.map(lambda p: _stack_leaf(p, n), plan,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def model_plan(cfg: ModelConfig) -> dict:
+    d, v = cfg.d_model, cfg.vocab_size
+    plan: Dict[str, Any] = {
+        "embed": P((v, d), init="small", pspec=("model", "data")),
+        "final_norm": P((d,), dtype="float32", init="zeros", pspec=()),
+    }
+    if not cfg.tie_embeddings:
+        plan["lm_head"] = P((d, v), pspec=("data", "model"))
+    if cfg.frontend.kind != "none":
+        plan["frontend_proj"] = P((cfg.frontend.embed_dim, d),
+                                  pspec=(None, "data"))
+    if cfg.prefix:
+        plan["prefix"] = {f"layer{i}": layer_plan(cfg, l)
+                          for i, l in enumerate(cfg.prefix)}
+    if cfg.period:
+        period = {f"sub{i}": layer_plan(cfg, l)
+                  for i, l in enumerate(cfg.period)}
+        plan["period"] = stack_plan(period, cfg.repeats)
+    if cfg.encoder:
+        enc_layer = LayerSpec(mixer="attn", ffn="dense")
+        enc = {"sub0": layer_plan(cfg, enc_layer)}
+        plan["encoder"] = {
+            "period": stack_plan(enc, cfg.encoder.num_layers),
+            "final_norm": P((d,), dtype="float32", init="zeros", pspec=()),
+        }
+    return plan
+
+
+def layer_cache_plan(cfg: ModelConfig, layer: LayerSpec, batch: int,
+                     seq_cap: int, policy: ShardPolicy,
+                     enc_len: int = 0) -> dict:
+    plan: Dict[str, Any] = {}
+    if layer.mixer == "attn":
+        plan["self"] = attn_mod.attn_cache_plan(cfg, layer, batch, seq_cap, policy)
+    elif layer.mixer == "mamba":
+        plan["self"] = ssm_mod.mamba_state_plan(cfg, batch, policy)
+    elif layer.mixer == "rwkv6":
+        plan["self"] = rwkv_mod.rwkv_state_plan(cfg, batch, policy)
+    if layer.cross_attn and enc_len:
+        plan["cross"] = attn_mod.cross_cache_plan(cfg, batch, enc_len, policy)
+    return plan
+
+
+def cache_plan(cfg: ModelConfig, batch: int, seq_cap: int, policy: ShardPolicy,
+               enc_len: int = 0) -> dict:
+    plan: Dict[str, Any] = {}
+    if cfg.prefix:
+        plan["prefix"] = {
+            f"layer{i}": layer_cache_plan(cfg, l, batch, seq_cap, policy, enc_len)
+            for i, l in enumerate(cfg.prefix)}
+    if cfg.period:
+        period = {f"sub{i}": layer_cache_plan(cfg, l, batch, seq_cap, policy,
+                                              enc_len)
+                  for i, l in enumerate(cfg.period)}
+        plan["period"] = stack_plan(period, cfg.repeats)
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# Layer application
+# ---------------------------------------------------------------------------
+
+def _apply_ffn(lp, h, layer: LayerSpec, cfg: ModelConfig, policy: ShardPolicy,
+               cache_shift=None):
+    """Returns (h, aux, new_cm_shift)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_shift = None
+    if layer.ffn == "dense":
+        x = rms_norm(h, lp["norm2"], cfg.norm_eps)
+        fspec = cfg.ffn_spec_for(layer)
+        h = h + gated_ffn(x, lp["ffn"]["w_in"], lp["ffn"]["w_out"],
+                          fspec.activation, policy)
+    elif layer.ffn == "moe":
+        x = rms_norm(h, lp["norm2"], cfg.norm_eps)
+        out, aux = moe_mod.moe_ffn(lp["moe"], x, cfg.ffn_spec_for(layer), cfg,
+                                   policy)
+        h = h + out
+    elif layer.ffn == "rwkv_cm":
+        # channel-mix shares the rwkv param dict and token-shift state
+        x = rms_norm(h, lp["norm2_cm"], cfg.norm_eps) if "norm2_cm" in lp else h
+        prev = cache_shift if cache_shift is not None else \
+            jnp.zeros((h.shape[0], h.shape[-1]), h.dtype)
+        out, new_shift = rwkv_mod.rwkv_channel_mix(lp["rwkv"], x, prev, policy)
+        h = h + out
+    return h, aux, new_shift
+
+
+def apply_layer_seq(lp, h, layer: LayerSpec, cfg: ModelConfig,
+                    positions, policy: ShardPolicy, *, want_cache: bool,
+                    seq_cap: int, memory=None, init_state=None):
+    """Full-sequence (train/prefill) layer application.
+
+    Returns (h, cache_out, aux).  ``cache_out`` matches layer_cache_plan when
+    want_cache, else ().
+    """
+    aux = jnp.zeros((), jnp.float32)
+    cache_out: Dict[str, Any] = {}
+    xin = rms_norm(h, lp["norm1"], cfg.norm_eps)
+    if layer.mixer == "attn":
+        if cfg.attn.kind == "mla":
+            out, (ckv, krope) = attn_mod.mla_prefill(lp["attn"], xin, positions,
+                                                     layer, cfg, policy)
+            if want_cache:
+                cache_out["self"] = attn_mod.build_mla_cache(
+                    ckv, krope, positions, seq_cap, policy)
+        else:
+            out, (k, v) = attn_mod.gqa_prefill(lp["attn"], xin, positions,
+                                               layer, cfg, policy)
+            if want_cache:
+                cache_out["self"] = attn_mod.build_gqa_cache(
+                    k, v, positions, layer, seq_cap, policy)
+        h = h + out
+    elif layer.mixer == "mamba":
+        conv0 = ssm0 = None
+        if init_state is not None:
+            conv0, ssm0 = init_state["self"]["conv"], init_state["self"]["ssm"]
+        out, state = ssm_mod.mamba_prefill(lp["mamba"], xin, cfg, policy,
+                                           conv_init=conv0, ssm_init=ssm0)
+        if want_cache:
+            cache_out["self"] = state
+        h = h + out
+    elif layer.mixer == "rwkv6":
+        b = h.shape[0]
+        prev = init_state["self"]["shift_att"] if init_state is not None else \
+            jnp.zeros((b, h.shape[-1]), h.dtype)
+        wkv0 = init_state["self"]["wkv"] if init_state is not None else \
+            jnp.zeros((b, cfg.d_model // cfg.rwkv.head_dim,
+                       cfg.rwkv.head_dim, cfg.rwkv.head_dim), jnp.float32)
+        out, (new_shift, new_wkv) = rwkv_mod.rwkv_time_mix(
+            lp["rwkv"], xin, prev, wkv0, cfg, policy)
+        h = h + out
+        # channel-mix (rwkv ffn) with its own shift state
+        x2 = h
+        prev_cm = init_state["self"]["shift_ffn"] if init_state is not None \
+            else jnp.zeros((b, h.shape[-1]), h.dtype)
+        cm_out, new_cm = rwkv_mod.rwkv_channel_mix(lp["rwkv"], x2, prev_cm,
+                                                   policy)
+        h = h + cm_out
+        if want_cache:
+            cache_out["self"] = {"shift_att": new_shift, "shift_ffn": new_cm,
+                                 "wkv": new_wkv}
+        return h, (cache_out if want_cache else ()), aux
+
+    if layer.cross_attn and memory is not None:
+        xq = rms_norm(h, lp["norm_x"], cfg.norm_eps)
+        ck, cv = attn_mod.cross_attn_kv(lp["cross"], memory)
+        h = h + attn_mod.cross_attn(lp["cross"], xq, ck, cv, cfg, policy)
+        if want_cache:
+            cache_out["cross"] = {"ck": shard(ck, policy.kv_cache),
+                                  "cv": shard(cv, policy.kv_cache)}
+
+    if layer.ffn in ("dense", "moe"):
+        h, aux, _ = _apply_ffn(lp, h, layer, cfg, policy)
+    return h, (cache_out if want_cache else ()), aux
+
+
+def apply_layer_decode(lp, h, layer: LayerSpec, cfg: ModelConfig, positions,
+                       cache, policy: ShardPolicy):
+    """Single-token layer application.  h: [B,1,d]; positions: [B].
+
+    Returns (h, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = dict(cache)
+    xin = rms_norm(h, lp["norm1"], cfg.norm_eps)
+    if layer.mixer == "attn":
+        if cfg.attn.kind == "mla":
+            out, cs = attn_mod.mla_decode(lp["attn"], xin, cache["self"],
+                                          positions, layer, cfg, policy)
+        else:
+            out, cs = attn_mod.gqa_decode(lp["attn"], xin, cache["self"],
+                                          positions, layer, cfg, policy)
+        new_cache["self"] = cs
+        h = h + out
+    elif layer.mixer == "mamba":
+        out, cs = ssm_mod.mamba_decode(lp["mamba"], xin, cache["self"], cfg,
+                                       policy)
+        new_cache["self"] = cs
+        h = h + out
+    elif layer.mixer == "rwkv6":
+        st = cache["self"]
+        out, (new_shift, new_wkv) = rwkv_mod.rwkv_time_mix(
+            lp["rwkv"], xin, st["shift_att"], st["wkv"], cfg, policy)
+        h = h + out
+        cm_out, new_cm = rwkv_mod.rwkv_channel_mix(lp["rwkv"], h,
+                                                   st["shift_ffn"], policy)
+        h = h + cm_out
+        new_cache["self"] = {"shift_att": new_shift, "shift_ffn": new_cm,
+                             "wkv": new_wkv}
+        return h, new_cache, aux
+
+    if layer.cross_attn and "cross" in cache:
+        xq = rms_norm(h, lp["norm_x"], cfg.norm_eps)
+        h = h + attn_mod.cross_attn(lp["cross"], xq, cache["cross"]["ck"],
+                                    cache["cross"]["cv"], cfg, policy)
+
+    if layer.ffn in ("dense", "moe"):
+        h, aux, _ = _apply_ffn(lp, h, layer, cfg, policy)
+    return h, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Full-model forward passes
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params, cfg: ModelConfig, tokens, policy: ShardPolicy):
+    h = params["embed"][tokens]
+    return shard(h.astype(jnp.dtype(cfg.dtype)), policy.act)
+
+
+def _merge_frontend(params, cfg: ModelConfig, tokens, embeds,
+                    policy: ShardPolicy):
+    """VLM: project patch embeds and prepend to the token embeddings."""
+    h_tok = embed_tokens(params, cfg, tokens, policy)
+    if embeds is None or cfg.frontend.kind == "none":
+        return h_tok
+    proj = jnp.einsum("bpe,ed->bpd", embeds.astype(jnp.dtype(cfg.dtype)),
+                      params["frontend_proj"])
+    return shard(jnp.concatenate([proj, h_tok], axis=1), policy.act)
+
+
+def forward_seq(params, cfg: ModelConfig, h, positions, policy: ShardPolicy,
+                *, want_cache: bool, seq_cap: int, memory=None,
+                remat: bool = False):
+    """Runs prefix + scanned period.  Returns (h, caches, aux)."""
+    aux_total = jnp.zeros((), jnp.float32)
+    caches: Dict[str, Any] = {}
+    if cfg.prefix:
+        caches["prefix"] = {}
+        for i, layer in enumerate(cfg.prefix):
+            lp = params["prefix"][f"layer{i}"]
+            h, c, aux = apply_layer_seq(lp, h, layer, cfg, positions, policy,
+                                        want_cache=want_cache, seq_cap=seq_cap,
+                                        memory=memory)
+            caches["prefix"][f"layer{i}"] = c
+            aux_total = aux_total + aux
+    if cfg.period:
+        def body(carry, lp_stack):
+            hh, aux_c = carry
+            cache_outs = {}
+            for i, layer in enumerate(cfg.period):
+                hh, c, aux = apply_layer_seq(
+                    lp_stack[f"sub{i}"], hh, layer, cfg, positions, policy,
+                    want_cache=want_cache, seq_cap=seq_cap, memory=memory)
+                cache_outs[f"sub{i}"] = c
+                aux_c = aux_c + aux
+            return (hh, aux_c), cache_outs
+
+        if remat:
+            body = jax.checkpoint(body)
+        (h, aux_total), period_caches = jax.lax.scan(
+            body, (h, aux_total), params["period"])
+        caches["period"] = period_caches
+    return h, caches, aux_total
+
+
+def encode(params, cfg: ModelConfig, frames, policy: ShardPolicy):
+    """Encoder for enc-dec models.  frames: [B, F, embed_dim] (stubbed)."""
+    h = jnp.einsum("bfe,ed->bfd", frames.astype(jnp.dtype(cfg.dtype)),
+                   params["frontend_proj"])
+    h = shard(h, policy.act)
+    positions = jnp.broadcast_to(jnp.arange(h.shape[1], dtype=jnp.int32),
+                                 h.shape[:2])
+    enc_layer = LayerSpec(mixer="attn", ffn="dense")
+
+    def body(carry, lp_stack):
+        hh, _ = carry
+        xin = rms_norm(hh, lp_stack["sub0"]["norm1"], cfg.norm_eps)
+        out, _ = attn_mod.gqa_prefill(lp_stack["sub0"]["attn"], xin, positions,
+                                      enc_layer, cfg, policy, causal=False)
+        hh = hh + out
+        hh, _, _ = _apply_ffn(lp_stack["sub0"], hh, enc_layer, cfg, policy)
+        return (hh, jnp.zeros((), jnp.float32)), ()
+
+    (h, _), _ = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)),
+                             params["encoder"]["period"])
+    return rms_norm(h, params["encoder"]["final_norm"], cfg.norm_eps)
+
+
+def _logits(params, cfg: ModelConfig, h, policy: ShardPolicy):
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", h, params["embed"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"])
+    logits = softcap(logits.astype(jnp.float32), cfg.final_logit_softcap)
+    return shard(logits, policy.logits)
+
+
+def train_loss(params, cfg: ModelConfig, batch, policy: ShardPolicy = NO_POLICY,
+               remat: bool = True):
+    """batch: {tokens [B,S], labels [B,S], embeds? [B,P,E], frames? [B,F,E]}."""
+    memory = None
+    if cfg.encoder is not None:
+        memory = encode(params, cfg, batch["frames"], policy)
+        h = embed_tokens(params, cfg, batch["tokens"], policy)
+    else:
+        h = _merge_frontend(params, cfg, batch["tokens"],
+                            batch.get("embeds"), policy)
+    positions = jnp.broadcast_to(jnp.arange(h.shape[1], dtype=jnp.int32),
+                                 h.shape[:2])
+    h, _, aux = forward_seq(params, cfg, h, positions, policy,
+                            want_cache=False, seq_cap=h.shape[1],
+                            memory=memory, remat=remat)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = _logits(params, cfg, h, policy)
+    # align: labels correspond to the *text* tokens (last S_text positions)
+    s_text = batch["labels"].shape[1]
+    loss = cross_entropy_loss(logits[:, -s_text:], batch["labels"], policy)
+    return loss + aux
+
+
+def prefill(params, cfg: ModelConfig, batch, policy: ShardPolicy = NO_POLICY,
+            seq_cap: Optional[int] = None):
+    """Returns (last-token logits [B, V], decode cache)."""
+    memory = None
+    if cfg.encoder is not None:
+        memory = encode(params, cfg, batch["frames"], policy)
+        h = embed_tokens(params, cfg, batch["tokens"], policy)
+    else:
+        h = _merge_frontend(params, cfg, batch["tokens"],
+                            batch.get("embeds"), policy)
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(h.shape[1], dtype=jnp.int32),
+                                     h.shape[:2])
+    cap = seq_cap or h.shape[1]
+    h, caches, _ = forward_seq(params, cfg, h, positions, policy,
+                               want_cache=True, seq_cap=cap, memory=memory)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = _logits(params, cfg, h[:, -1:], policy)[:, 0]
+    return logits, caches
+
+
+def decode_step(params, cfg: ModelConfig, cache, token, positions,
+                policy: ShardPolicy = NO_POLICY):
+    """token: [B] int32; positions: [B] int32.  Returns (logits [B,V], cache)."""
+    h = embed_tokens(params, cfg, token[:, None], policy)
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: Dict[str, Any] = {}
+    if cfg.prefix:
+        new_cache["prefix"] = {}
+        for i, layer in enumerate(cfg.prefix):
+            lp = params["prefix"][f"layer{i}"]
+            h, c, _ = apply_layer_decode(lp, h, layer, cfg, positions,
+                                         cache["prefix"][f"layer{i}"], policy)
+            new_cache["prefix"][f"layer{i}"] = c
+    if cfg.period:
+        # The stacked period cache rides in the scan *carry* and is updated
+        # in place with dynamic_update_index_in_dim.  Passing it through
+        # xs/ys instead would double-buffer the whole KV cache in HBM
+        # (measured: 12.9 GiB temp vs ~2 GiB for stablelm decode_32k).
+        def body(carry, xs):
+            hh, cache_all = carry
+            lp_stack, idx = xs
+            for i, layer in enumerate(cfg.period):
+                sub = f"sub{i}"
+                cache_i = jax.tree.map(
+                    lambda a: jax.lax.dynamic_index_in_dim(
+                        a, idx, 0, keepdims=False), cache_all[sub])
+                hh, c_new, _ = apply_layer_decode(
+                    lp_stack[sub], hh, layer, cfg, positions, cache_i, policy)
+                # write back only the mutable self-cache; cross-attention
+                # K/V is read-only during decode
+                upd = {k: v for k, v in c_new.items() if k != "cross"}
+                cache_all[sub] = dict(cache_all[sub]) if not isinstance(
+                    cache_all[sub], dict) else cache_all[sub]
+                cache_all = dict(cache_all)
+                cache_all[sub] = {
+                    **cache_all[sub],
+                    **jax.tree.map(
+                        lambda a, u: jax.lax.dynamic_update_index_in_dim(
+                            a, u, idx, 0),
+                        {k: cache_all[sub][k] for k in upd}, upd),
+                }
+            return (hh, cache_all), ()
+
+        idxs = jnp.arange(cfg.repeats, dtype=jnp.int32)
+        (h, period_cache), _ = jax.lax.scan(
+            body, (h, cache["period"]), (params["period"], idxs))
+        new_cache["period"] = period_cache
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = _logits(params, cfg, h, policy)[:, 0]
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Convenience bundle
+# ---------------------------------------------------------------------------
+
+class Model:
+    """Thin namespace bundling a config with its plan-derived artifacts."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.plan = model_plan(cfg)
+
+    def init(self, key):
+        return init_from_plan(self.plan, key)
+
+    def param_specs(self):
+        return specs_from_plan(self.plan)
+
+    def param_shardings(self, mesh):
+        return shardings_from_plan(self.plan, mesh)
+
+    def cache_plan(self, batch: int, seq_cap: int, policy: ShardPolicy,
+                   enc_len: int = 0):
+        return cache_plan(self.cfg, batch, seq_cap, policy, enc_len)

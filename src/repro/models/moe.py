@@ -1,0 +1,119 @@
+"""Mixture-of-Experts FFN with sort-based (permutation) token dispatch.
+
+The dispatch is the TPU-idiomatic analogue of MegaBlocks-style grouped
+matmul: flatten (token, choice) pairs, stable-sort by expert id, compute
+intra-expert slots via searchsorted, scatter into a capacity-bounded
+``[E, C, d]`` buffer, run the expert FFN as a batched einsum, and gather
+back.  Under pjit the buffer is sharded experts->``model`` (expert
+parallelism) and capacity->``data``; the scatter/gather lower to
+all-to-all-class collectives.  When E < |model| (e.g. Mixtral's 8 experts
+on a 16-way axis) the parameter plan falls back to tensor-parallel within
+experts (d_ff on ``model``) via the plan's ``alt`` spec.
+
+DeepSeek-V2 shared experts are computed densely on every token.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FFNSpec, ModelConfig
+from repro.models.common import ShardPolicy, act_fn, shard
+from repro.models.params import P
+
+
+def moe_plan(cfg: ModelConfig, spec: FFNSpec) -> dict:
+    d = cfg.d_model
+    plan = {
+        "router": P((d, spec.num_experts), dtype="float32", init="small",
+                     pspec=("data", None)),
+        "wi": P((spec.num_experts, d, 2, spec.d_ff), fan_in=d,
+                pspec=("model", "data", None, None),
+                alt=(None, "data", None, "model")),
+        "wo": P((spec.num_experts, spec.d_ff, d), fan_in=spec.d_ff,
+                pspec=("model", None, "data"),
+                alt=(None, "model", "data")),
+    }
+    if spec.num_shared_experts:
+        sd = spec.d_ff * spec.num_shared_experts
+        plan["shared_wi"] = P((d, 2, sd), pspec=("data", None, "model"))
+        plan["shared_wo"] = P((sd, d), fan_in=sd, pspec=("model", "data"))
+    return plan
+
+
+def _capacity(num_tokens: int, spec: FFNSpec) -> int:
+    c = int(num_tokens * spec.top_k * spec.capacity_factor / spec.num_experts)
+    return max(8, min(c, num_tokens))
+
+
+def moe_ffn(params, x, spec: FFNSpec, cfg: ModelConfig, policy: ShardPolicy):
+    """x: [B, S, d] -> (out [B, S, d], aux_loss scalar)."""
+    b, s, d = x.shape
+    tokens = x.reshape(-1, d)                       # [T, d]
+    t = tokens.shape[0]
+    k = spec.top_k
+    e = spec.num_experts
+
+    logits = jnp.einsum("td,de->te", tokens.astype(jnp.float32),
+                        params["router"])           # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)            # [T, k]
+    gates = gates / (jnp.sum(gates, axis=-1, keepdims=True) + 1e-9)
+
+    # load-balance auxiliary loss (Switch-style)
+    me = jnp.mean(probs, axis=0)                                   # [E]
+    ce = jnp.mean(jax.nn.one_hot(idx[:, 0], e, dtype=jnp.float32), axis=0)
+    aux = spec.router_aux_coef * e * jnp.sum(me * ce)
+
+    # ---- permutation dispatch ----
+    expert_ids = idx.reshape(-1)                    # [T*k]
+    order = jnp.argsort(expert_ids, stable=True)    # sorted (token,choice) pairs
+    sorted_eids = expert_ids[order]
+    # slot within expert segment = rank - first occurrence index of that expert
+    first = jnp.searchsorted(sorted_eids, sorted_eids, side="left")
+    slot = jnp.arange(t * k, dtype=jnp.int32) - first.astype(jnp.int32)
+    cap = _capacity(t, spec)
+    keep = slot < cap
+    src_tok = order // k                            # originating token per pair
+    safe_slot = jnp.where(keep, slot, 0)
+
+    # dispatch via int-only scatter + d-wide gather (see combine below for
+    # why wide scatters are poison under GSPMD); dropped pairs scatter to a
+    # sacrificial extra slot so they can't clobber slot 0
+    drop_slot = jnp.where(keep, slot, cap)
+    tok_for_slot = jnp.full((e, cap + 1), t, jnp.int32).at[
+        sorted_eids, drop_slot].set(src_tok.astype(jnp.int32))[:, :cap]
+    tokens_pad = jnp.concatenate(
+        [tokens, jnp.zeros((1, d), tokens.dtype)], axis=0)   # row t = zeros
+    buf = tokens_pad[tok_for_slot].astype(x.dtype)           # [E, C, d]
+    buf = shard(buf, policy.moe_buf)
+
+    # ---- expert FFN: gated MLP as batched einsum over experts ----
+    gu = jnp.einsum("ecd,edgf->ecgf", buf, params["wi"])
+    h = act_fn(spec.activation)(gu[..., 0, :]) * gu[..., 1, :]
+    out_buf = jnp.einsum("ecf,efd->ecd", h, params["wo"])
+    out_buf = shard(out_buf, policy.moe_buf)
+
+    # ---- combine: gather back to (token, choice) pairs, weight, sum ----
+    # Unsort via an int-only scatter (slot ids, [T*k] s32) + a gather of the
+    # d-wide rows, instead of scattering [T*k, d] activations: the wide
+    # scatter loses sharding under GSPMD and lowers to replicated
+    # all-reduces of the full [T*k, d] buffer (measured 30x32 GiB on
+    # jamba train_4k — see EXPERIMENTS.md §Perf H3).
+    tok_spec = (policy.act[0], None) if policy.act else None
+    slot_unsorted = jnp.zeros((t * k,), jnp.int32).at[order].set(
+        safe_slot.astype(jnp.int32))
+    keep_unsorted = jnp.zeros((t * k,), jnp.bool_).at[order].set(keep)
+    eid_orig = expert_ids.astype(jnp.int32)
+    flat_idx = eid_orig * cap + slot_unsorted                  # [T*k]
+    picked = shard(out_buf.reshape(e * cap, d)[flat_idx], tok_spec)
+    picked = picked * keep_unsorted[:, None].astype(x.dtype)
+    per_choice = picked.reshape(t, k, d)
+    out = jnp.einsum("tkd,tk->td", per_choice, gates.astype(x.dtype))
+
+    if spec.num_shared_experts:
+        gu_s = jnp.einsum("td,dgf->tgf", tokens, params["shared_wi"])
+        hs = act_fn(spec.activation)(gu_s[:, 0]) * gu_s[:, 1]
+        out = out + jnp.einsum("tf,fd->td", hs, params["shared_wo"])
+
+    return shard(out.reshape(b, s, d), policy.act), aux

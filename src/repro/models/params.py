@@ -1,0 +1,136 @@
+"""Parameter *plans*: single source of truth for shapes, dtypes, init and
+sharding of every parameter.
+
+A plan is a pytree (nested dict) whose leaves are :class:`P`.  From one plan
+we derive:
+  * ``init_from_plan``      — concrete initialised parameters (smoke tests)
+  * ``specs_from_plan``     — ``jax.ShapeDtypeStruct`` stand-ins (dry-run)
+  * ``shardings_from_plan`` — ``NamedSharding`` tree for pjit in_shardings
+
+Sharding rules live *on the leaf* (``pspec``), with an optional fallback
+``alt`` used when the primary spec would leave mesh devices idle (dimension
+smaller than the mesh axis it maps to) — e.g. Mixtral's 8 experts on a
+16-way ``model`` axis fall back to tensor-parallel-within-expert.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
+
+
+@dataclass(frozen=True)
+class P:
+    shape: Tuple[int, ...]
+    dtype: str = "bfloat16"
+    init: str = "normal"          # normal | zeros | ones | small | identity_decay
+    fan_in: Optional[int] = None  # override for scaled-normal init
+    pspec: Tuple = ()             # PartitionSpec entries (axis name, tuple, or None)
+    alt: Optional[Tuple] = None   # fallback spec when pspec under-utilises mesh
+
+
+def _axis_size(mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        return int(np.prod([mesh.shape[a] for a in entry]))
+    return mesh.shape[entry]
+
+
+def _spec_fits(mesh, shape, pspec) -> bool:
+    """True if every sharded dim divides evenly by its mesh extent (jit
+    argument shardings require exact divisibility, unlike constraints)."""
+    for dim, entry in zip(shape, pspec):
+        ext = _axis_size(mesh, entry)
+        if ext > 1 and (dim < ext or dim % ext != 0):
+            return False
+    return True
+
+
+def resolve_pspec(mesh, leaf: P) -> PartitionSpec:
+    spec = leaf.pspec
+    if leaf.alt is not None and not _spec_fits(mesh, leaf.shape, leaf.pspec):
+        spec = leaf.alt
+    # trim entries beyond rank, drop axes not in the mesh
+    names = set(mesh.axis_names)
+
+    def keep(e, dim):
+        if e is None:
+            return None
+        if isinstance(e, (tuple, list)):
+            kept = tuple(a for a in e if a in names)
+            e = kept if kept else None
+            if e is None:
+                return None
+        else:
+            e = e if e in names else None
+            if e is None:
+                return None
+        # per-dim divisibility fallback: replicate dims that don't divide
+        # (e.g. starcoder2's 36 heads or granite's 49155 vocab on a 16-way
+        # axis) — jit in_shardings reject uneven partitions.
+        ext = _axis_size(mesh, e)
+        if ext > 1 and (dim < ext or dim % ext != 0):
+            return None
+        return e
+
+    entries = tuple(keep(e, d)
+                    for e, d in zip(spec[: len(leaf.shape)], leaf.shape))
+    return PartitionSpec(*entries)
+
+
+def _is_leaf(x):
+    return isinstance(x, P)
+
+
+def specs_from_plan(plan):
+    return jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.dtype(p.dtype)), plan,
+        is_leaf=_is_leaf)
+
+
+def shardings_from_plan(plan, mesh):
+    return jax.tree.map(
+        lambda p: NamedSharding(mesh, resolve_pspec(mesh, p)), plan,
+        is_leaf=_is_leaf)
+
+
+def pspecs_from_plan(plan, mesh):
+    return jax.tree.map(lambda p: resolve_pspec(mesh, p), plan, is_leaf=_is_leaf)
+
+
+def _init_leaf(key, p: P):
+    dtype = jnp.dtype(p.dtype)
+    if p.init == "zeros":
+        return jnp.zeros(p.shape, dtype)
+    if p.init == "ones":
+        return jnp.ones(p.shape, dtype)
+    if p.init == "identity_decay":
+        # mamba A_log init: log of [1..d_state] broadcast
+        d_state = p.shape[-1]
+        a = jnp.tile(jnp.log(jnp.arange(1, d_state + 1, dtype=jnp.float32)),
+                     p.shape[:-1] + (1,))
+        return a.astype(dtype)
+    fan_in = p.fan_in if p.fan_in is not None else (p.shape[0] if p.shape else 1)
+    scale = 0.02 if p.init == "small" else 1.0 / np.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, p.shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_from_plan(plan, key):
+    leaves, treedef = jax.tree.flatten(plan, is_leaf=_is_leaf)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(treedef, [_init_leaf(k, p) for k, p in zip(keys, leaves)])
+
+
+def count_params(plan) -> int:
+    leaves = jax.tree.leaves(plan, is_leaf=_is_leaf)
+    return int(sum(np.prod(p.shape) for p in leaves))
+
+
+def param_bytes(plan) -> int:
+    leaves = jax.tree.leaves(plan, is_leaf=_is_leaf)
+    return int(sum(np.prod(p.shape) * jnp.dtype(p.dtype).itemsize for p in leaves))

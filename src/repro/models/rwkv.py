@@ -1,0 +1,134 @@
+"""RWKV-6 "Finch" mixer: token-shift + data-dependent decay WKV recurrence
+[arXiv:2404.05892].
+
+Per-head state S in R^{hd x hd}:
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)      (u = "bonus" for current token)
+with w_t = exp(-exp(w0 + lora_w(x_t))) elementwise in (0,1).
+
+Prefill runs a chunked ``lax.scan`` along the sequence; decode is a single
+state update.  State per layer:
+  shift_att [B, d], shift_ffn [B, d]   (previous token for token-shift)
+  wkv       [B, H, hd, hd]             (float32)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ShardPolicy, shard
+from repro.models.params import P
+
+
+def _dims(cfg: ModelConfig):
+    hd = cfg.rwkv.head_dim
+    return cfg.d_model // hd, hd
+
+
+def rwkv_plan(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    r = cfg.rwkv
+    heads, hd = _dims(cfg)
+    return {
+        # token-shift interpolation weights (r,k,v,g,w)
+        "mu": P((5, d), init="small", pspec=(None, "data")),
+        "wr": P((d, d), pspec=("data", "model")),
+        "wk": P((d, d), pspec=("data", "model")),
+        "wv": P((d, d), pspec=("data", "model")),
+        "wg": P((d, d), pspec=("data", "model")),
+        "wo": P((d, d), pspec=("model", "data")),
+        "w0": P((d,), dtype="float32", init="small", pspec=("model",)),
+        "w_lora_a": P((d, r.decay_lora), init="small", pspec=("data", None)),
+        "w_lora_b": P((r.decay_lora, d), init="small", pspec=(None, "model")),
+        "u": P((heads, hd), dtype="float32", init="small", pspec=("model", None)),
+        "ln_x": P((d,), dtype="float32", init="zeros", pspec=()),
+        # channel-mix
+        "cm_mu": P((2, d), init="small", pspec=(None, "data")),
+        "cm_wr": P((d, d), pspec=("data", "model")),
+        "cm_wk": P((d, r.d_ffn), pspec=("data", "model")),
+        "cm_wv": P((r.d_ffn, d), fan_in=r.d_ffn, pspec=("model", "data")),
+    }
+
+
+def rwkv_state_plan(cfg: ModelConfig, batch: int, policy: ShardPolicy) -> dict:
+    heads, hd = _dims(cfg)
+    sp = policy.state or ()
+    return {
+        "shift_att": P((batch, cfg.d_model), pspec=tuple(sp[:1]) + (None,)),
+        "shift_ffn": P((batch, cfg.d_model), pspec=tuple(sp[:1]) + (None,)),
+        "wkv": P((batch, heads, hd, hd), dtype="float32",
+                 pspec=tuple(sp[:1]) + ("model", None, None)),
+    }
+
+
+def _token_shift(x, prev, mu):
+    """x: [B,S,d]; prev: [B,d] last token of previous chunk."""
+    shifted = jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+    return x + mu * (shifted - x)
+
+
+def _rkvgw(params, x, prev, cfg):
+    """Project token-shifted inputs to r,k,v,g and decay w."""
+    heads, hd = _dims(cfg)
+    mu = params["mu"]
+    xr = _token_shift(x, prev, mu[0])
+    xk = _token_shift(x, prev, mu[1])
+    xv = _token_shift(x, prev, mu[2])
+    xg = _token_shift(x, prev, mu[3])
+    xw = _token_shift(x, prev, mu[4])
+    b, s, _ = x.shape
+    r = (xr @ params["wr"]).reshape(b, s, heads, hd)
+    k = (xk @ params["wk"]).reshape(b, s, heads, hd)
+    v = (xv @ params["wv"]).reshape(b, s, heads, hd)
+    g = jax.nn.silu(xg @ params["wg"])
+    w_log = params["w0"] + (xw @ params["w_lora_a"]) @ params["w_lora_b"]
+    w = jnp.exp(-jnp.exp(w_log.astype(jnp.float32))).reshape(b, s, heads, hd)
+    return r, k, v, g, w
+
+
+def _group_norm(y, weight, heads, eps=1e-5):
+    """Per-head LayerNorm of [B,S,H,hd] flattened back to [B,S,d]."""
+    mean = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    yn = (y - mean) * jax.lax.rsqrt(var + eps)
+    b, s, h, hd = y.shape
+    return yn.reshape(b, s, h * hd) * (1.0 + weight)
+
+
+def rwkv_time_mix(params, x, state_shift, state_wkv, cfg: ModelConfig,
+                  policy: ShardPolicy):
+    """x: [B,S,d]. Returns (out, (new_shift, new_wkv))."""
+    heads, hd = _dims(cfg)
+    r, k, v, g, w = _rkvgw(params, x, state_shift, cfg)
+    u = params["u"]
+
+    def step(s_state, inp):
+        r_t, k_t, v_t, w_t = inp                          # [B,H,hd] each
+        kv = k_t[..., :, None] * v_t[..., None, :]        # [B,H,hd,hd]
+        y = jnp.einsum("bhk,bhkv->bhv", r_t,
+                       s_state + u[..., None] * kv)
+        s_new = w_t[..., None] * s_state + kv
+        return s_new, y
+
+    xs = (jnp.moveaxis(r, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(k, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(v, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(w, 1, 0))
+    s_final, ys = jax.lax.scan(step, state_wkv, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(x.shape[0], x.shape[1], heads, hd)
+    y = _group_norm(y, params["ln_x"], heads).astype(x.dtype) * g
+    out = y @ params["wo"]
+    new_shift = x[:, -1]
+    return shard(out, policy.act), (new_shift, shard(s_final, policy.state))
+
+
+def rwkv_channel_mix(params, x, state_shift, policy: ShardPolicy):
+    """RWKV channel-mix FFN.  x: [B,S,d]."""
+    mu = params["cm_mu"]
+    xr = _token_shift(x, state_shift, mu[0])
+    xk = _token_shift(x, state_shift, mu[1])
+    r = jax.nn.sigmoid(xr @ params["cm_wr"])
+    kk = jnp.square(jax.nn.relu(xk @ params["cm_wk"]))
+    out = r * (kk @ params["cm_wv"])
+    return shard(out, policy.act), x[:, -1]

@@ -1,0 +1,131 @@
+"""Mamba-1 selective state-space mixer (Jamba's SSM layers).
+
+Prefill/train uses an associative scan over the sequence (log-depth HLO);
+decode is a single recurrent state update.  State per layer:
+  conv_state [B, d_inner, d_conv-1]  (depthwise conv tail)
+  ssm_state  [B, d_inner, d_state]   (float32)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MambaSpec, ModelConfig
+from repro.models.common import ShardPolicy, shard
+from repro.models.params import P
+
+
+def _dims(cfg: ModelConfig):
+    m = cfg.mamba
+    d_inner = m.expand * cfg.d_model
+    dt_rank = m.dt_rank or -(-cfg.d_model // 16)
+    return d_inner, dt_rank
+
+
+def mamba_plan(cfg: ModelConfig) -> dict:
+    m = cfg.mamba
+    d = cfg.d_model
+    d_inner, dt_rank = _dims(cfg)
+    return {
+        "in_proj": P((d, 2, d_inner), pspec=("data", None, "model")),
+        "conv_w": P((d_inner, m.d_conv), init="small", pspec=("model", None)),
+        "conv_b": P((d_inner,), init="zeros", pspec=("model",)),
+        "x_proj": P((d_inner, dt_rank + 2 * m.d_state), pspec=("model", None)),
+        "dt_proj": P((dt_rank, d_inner), fan_in=dt_rank, pspec=(None, "model")),
+        "dt_bias": P((d_inner,), dtype="float32", init="small", pspec=("model",)),
+        "A_log": P((d_inner, m.d_state), dtype="float32",
+                   init="identity_decay", pspec=("model", None)),
+        "D": P((d_inner,), dtype="float32", init="ones", pspec=("model",)),
+        "out_proj": P((d_inner, d), fan_in=d_inner, pspec=("model", "data")),
+    }
+
+
+def mamba_state_plan(cfg: ModelConfig, batch: int, policy: ShardPolicy) -> dict:
+    m = cfg.mamba
+    d_inner, _ = _dims(cfg)
+    sp = policy.state or ()
+    return {
+        "conv": P((batch, d_inner, m.d_conv - 1), pspec=sp),
+        "ssm": P((batch, d_inner, m.d_state), dtype="float32", pspec=sp),
+    }
+
+
+def _ssm_coeffs(params, xc, cfg: ModelConfig):
+    """xc: [B, S, d_inner] post-conv activations -> (dA, dBx, C) coefficients."""
+    m = cfg.mamba
+    _, dt_rank = _dims(cfg)
+    proj = jnp.einsum("bsd,dr->bsr", xc, params["x_proj"])
+    dt = proj[..., :dt_rank]
+    bmat = proj[..., dt_rank: dt_rank + m.d_state].astype(jnp.float32)
+    cmat = proj[..., dt_rank + m.d_state:].astype(jnp.float32)
+    delta = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dt, params["dt_proj"]).astype(jnp.float32)
+        + params["dt_bias"])                                    # [B,S,d_inner]
+    a = -jnp.exp(params["A_log"])                               # [d_inner, n]
+    dA = jnp.exp(delta[..., None] * a)                          # [B,S,d,n]
+    dBx = (delta[..., None] * bmat[..., None, :]
+           * xc.astype(jnp.float32)[..., None])                 # [B,S,d,n]
+    return dA, dBx, cmat
+
+
+def mamba_prefill(params, x, cfg: ModelConfig, policy: ShardPolicy,
+                  conv_init=None, ssm_init=None):
+    """x: [B,S,d].  Returns (out [B,S,d], state dict for decode)."""
+    m = cfg.mamba
+    xz = jnp.einsum("bsd,dci->bsci", x, params["in_proj"])
+    xin, z = xz[..., 0, :], xz[..., 1, :]                       # [B,S,d_inner]
+    if policy.act:
+        xin = shard(xin, (policy.act[0], None, "model"))
+    # depthwise causal conv along S
+    pad = m.d_conv - 1
+    if conv_init is not None:
+        tail = jnp.swapaxes(conv_init, 1, 2)                    # [B,pad,d_inner]
+    else:
+        tail = jnp.zeros((xin.shape[0], pad, xin.shape[2]), xin.dtype)
+    xpad = jnp.concatenate([tail, xin], axis=1)                 # [B,S+pad,d_in]
+    stacked = jnp.stack(
+        [xpad[:, i: i + xin.shape[1]] for i in range(m.d_conv)], axis=-1)
+    xc = jax.nn.silu(jnp.einsum("bsdc,dc->bsd", stacked, params["conv_w"])
+                     + params["conv_b"])
+    dA, dBx, cmat = _ssm_coeffs(params, xc, cfg)
+    h0 = ssm_init if ssm_init is not None else \
+        jnp.zeros((x.shape[0], dA.shape[2], m.d_state), jnp.float32)
+
+    # associative scan over S:  h_t = dA_t * h_{t-1} + dBx_t
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    dA_s = jnp.moveaxis(dA, 1, 0)                               # [S,B,d,n]
+    dBx_s = jnp.moveaxis(dBx, 1, 0)
+    # fold initial state into the first element
+    dBx_s = dBx_s.at[0].add(dA_s[0] * h0)
+    aa, hh = jax.lax.associative_scan(combine, (dA_s, dBx_s), axis=0)
+    h = jnp.moveaxis(hh, 0, 1)                                  # [B,S,d,n]
+    y = jnp.einsum("bsdn,bsn->bsd", h, cmat)
+    y = (y + params["D"] * xc.astype(jnp.float32)).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsd,do->bso", y, params["out_proj"])
+    # conv tail: last (d_conv-1) inputs, shape [B, d_inner, d_conv-1]
+    state = {"conv": jnp.swapaxes(xpad[:, -pad:], 1, 2), "ssm": h[:, -1]}
+    return shard(out, policy.act), state
+
+
+def mamba_decode(params, x, state, cfg: ModelConfig, policy: ShardPolicy):
+    """x: [B,1,d]; state: {conv [B,d_inner,pad], ssm [B,d_inner,n]}."""
+    m = cfg.mamba
+    xz = jnp.einsum("bsd,dci->bsci", x, params["in_proj"])
+    xin, z = xz[:, 0, 0, :], xz[:, 0, 1, :]                     # [B,d_inner]
+    window = jnp.concatenate([state["conv"], xin[..., None]], axis=-1)
+    xc = jax.nn.silu(jnp.einsum("bdc,dc->bd", window, params["conv_w"])
+                     + params["conv_b"])
+    dA, dBx, cmat = _ssm_coeffs(params, xc[:, None], cfg)
+    h = dA[:, 0] * state["ssm"] + dBx[:, 0]                     # [B,d,n]
+    y = jnp.einsum("bdn,bn->bd", h, cmat[:, 0])
+    y = (y + params["D"] * xc.astype(jnp.float32)).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bd,do->bo", y, params["out_proj"])[:, None]
+    new_state = {"conv": shard(window[..., 1:], policy.state),
+                 "ssm": shard(h, policy.state)}
+    return shard(out, policy.act), new_state

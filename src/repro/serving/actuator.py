@@ -1,0 +1,84 @@
+"""Serving-side controller actuator: the real JAX engine + PS fabric.
+
+FabricState models the shared PCIe/ICI path with the paper's PS law;
+ServingActuator implements the controller Actuator protocol over a live
+ServingEngine (quota <-> MPS, io throttle <-> pipeline cap, move <->
+fabric path, reconfigure <-> slice compute scale with a paused re-lower).
+Used by benchmarks/llm_ttft.py and repro.launch.serve.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from repro.core import psmodel
+from repro.serving.engine import ServingEngine
+
+
+@dataclass
+class FabricState:
+    pcie_capacity: float = 25e9
+    t2_demand: float = 20e9
+    t2_ps_weight: float = 3.0
+    t2_active: bool = False
+    io_throttle: Optional[float] = None
+    throttle_residual: float = 0.6
+    on_shared_root: bool = True           # until the controller moves T1
+
+    def t1_bandwidth(self) -> float:
+        demands = {"T1": psmodel.Demand(weight=1.0)}
+        if self.t2_active and self.on_shared_root:
+            eff = self.t2_demand if self.io_throttle is None else \
+                self.t2_demand * self.throttle_residual + self.io_throttle
+            demands["T2"] = psmodel.Demand(weight=self.t2_ps_weight,
+                                           throttle=eff)
+        else:
+            demands["amb"] = psmodel.Demand(weight=1.0, throttle=10e9)
+        return psmodel.ps_shares_waterfill(demands, self.pcie_capacity)["T1"]
+
+
+class ServingActuator:
+    """Controller Actuator over the real engine + fabric model."""
+
+    def __init__(self, engine: ServingEngine, fabric: FabricState,
+                 topo, clock):
+        self.engine = engine
+        self.fabric = fabric
+        self.topo = topo
+        self.clock = clock
+        self.compute_scale = 1.0          # MIG-profile compute multiplier
+        self.ref_units = 2
+        self.pause_until = 0.0
+        self.reconfigs = []
+
+    def reconfigure(self, tenant, profile):
+        pause = max(8.0, np.random.default_rng(0).normal(18.0, 3.0))
+        self.compute_scale = (self.ref_units / profile.compute_units) ** 0.35
+        self.pause_until = max(self.pause_until, self.clock() + pause)
+        self.reconfigs.append(pause)
+        return pause
+
+    def move(self, tenant, slot):
+        self.fabric.on_shared_root = False
+        self.pause_until = max(self.pause_until, self.clock() + 2.0)
+        return 2.0
+
+    def set_io_throttle(self, tenant, bytes_per_s):
+        self.fabric.io_throttle = bytes_per_s
+
+    def set_mps_quota(self, tenant, frac):
+        self.engine.set_quota(max(frac, 0.5))
+
+    def pin_cpu_away_from_irq(self, tenant):
+        pass
+
+    def free_slots(self):
+        return [s for s in self.topo.slots()
+                if s.device not in ("h0:g0", "h0:g1")]
+
+    def headroom_units(self, device: str) -> int:
+        return 2 if device == "h0:g0" else 4
+
+

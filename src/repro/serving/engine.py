@@ -1,0 +1,198 @@
+"""Slot-based continuous-batching serving engine.
+
+One engine instance serves one tenant's model on one slice.  The engine
+performs *one unit of work* per ``step()`` call — a prefill of the oldest
+queued request, or one batched decode step over all active slots — and
+reports the measured compute seconds.  The harness (real-time driver or the
+cluster simulator) decides what wall/virtual time the step consumed (e.g.
+adding PS-fabric transfer delay) and then calls ``finalize_step`` so TTFT
+and completion timestamps reflect the environment.
+
+Guardrail hook (paper §2.2, MPS-quota analogue): ``set_quota(frac)`` caps
+the engine's concurrency — the number of active decode slots and the
+prefill admission rate scale with the quota, bounding MXU occupancy the
+way CUDA_MPS_ACTIVE_THREAD_PERCENTAGE bounds SM occupancy.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.common import NO_POLICY
+from repro.models.model import Model, decode_step, prefill
+from repro.models.params import P, specs_from_plan
+from repro.serving.kvcache import PagedKVCache
+from repro.serving.metrics import TenantMetrics
+from repro.serving.request import Request
+
+
+def init_cache_from_plan(plan):
+    """Zero-initialised cache (pos arrays get -1)."""
+    def leaf(p: P):
+        if p.dtype == "int32":
+            return jnp.full(p.shape, -1, jnp.int32)
+        return jnp.zeros(p.shape, jnp.dtype(p.dtype))
+    return jax.tree.map(leaf, plan, is_leaf=lambda x: isinstance(x, P))
+
+
+@dataclass
+class StepReport:
+    kind: str                            # "prefill" | "decode" | "idle"
+    compute_s: float = 0.0
+    tokens: int = 0
+    prefilled: Optional[Request] = None
+    decoded: List[Request] = field(default_factory=list)
+    completed: List[Request] = field(default_factory=list)
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params=None, *, max_slots: int = 8,
+                 seq_cap: int = 256, page_size: int = 16, seed: int = 0,
+                 policy=NO_POLICY):
+        self.cfg = cfg
+        self.model = Model(cfg)
+        self.policy = policy
+        if params is None:
+            params = self.model.init(jax.random.key(seed))
+        self.params = params
+        self.max_slots = max_slots
+        self.seq_cap = seq_cap
+        self.quota = 1.0
+        self.queue: deque = deque()
+        self.slots: List[Optional[Request]] = [None] * max_slots
+        self.positions = np.zeros(max_slots, np.int32)
+        self.last_token = np.zeros(max_slots, np.int32)
+        # paged accounting mirrors the dense slot cache capacity
+        self.kv = PagedKVCache(num_pages=max_slots * (seq_cap // page_size),
+                               page_size=page_size)
+        self.metrics = TenantMetrics()
+        cplan = self.model.cache_plan(max_slots, seq_cap, policy)
+        self.cache = init_cache_from_plan(cplan)
+        self._decode_fn = jax.jit(
+            lambda p, c, t, q: decode_step(p, cfg, c, t, q, policy))
+        self._prefill_fn = jax.jit(
+            lambda p, b: prefill(p, cfg, b, policy, seq_cap=seq_cap))
+        self._rng = np.random.default_rng(seed)
+
+    # ------------------------------------------------------------------ API
+    def set_quota(self, frac: float) -> None:
+        self.quota = float(np.clip(frac, 0.1, 1.0))
+
+    @property
+    def active_slot_budget(self) -> int:
+        return max(1, int(np.ceil(self.quota * self.max_slots)))
+
+    def submit(self, req: Request) -> bool:
+        """Returns False if rejected by admission control."""
+        if not self.kv.can_admit(req.prompt_len, req.max_new_tokens):
+            return False
+        self.kv.allocate(req.req_id, req.prompt_len,
+                         req.prompt_len + req.max_new_tokens)
+        self.queue.append(req)
+        return True
+
+    def active(self) -> List[Request]:
+        return [r for r in self.slots if r is not None]
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(s is not None for s in self.slots)
+
+    # ----------------------------------------------------------------- step
+    def step(self) -> StepReport:
+        """One unit of work.  Compute time measured with a real clock."""
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        n_active = self.max_slots - len(free)
+        if self.queue and free and n_active < self.active_slot_budget:
+            return self._do_prefill(free[0])
+        if n_active:
+            return self._do_decode()
+        return StepReport(kind="idle")
+
+    def finalize_step(self, report: StepReport, end_time: float) -> None:
+        """Record timestamps using the harness-provided completion time."""
+        if report.prefilled is not None:
+            req = report.prefilled
+            req.prefill_done = end_time
+            self.metrics.latency.observe(end_time, (end_time - req.arrival),
+                                         slo=(req.slo_ms or 0) / 1e3 or None)
+        for req in report.decoded:
+            pass
+        for req in report.completed:
+            req.finished = end_time
+        if report.tokens:
+            self.metrics.observe_tokens(end_time, report.tokens)
+
+    # ------------------------------------------------------------ internals
+    def _prompt_tokens(self, req: Request):
+        if req.prompt_tokens is not None:
+            return jnp.asarray(req.prompt_tokens, jnp.int32)[None]
+        toks = self._rng.integers(0, self.cfg.vocab_size, req.prompt_len)
+        return jnp.asarray(toks, jnp.int32)[None]
+
+    def _do_prefill(self, slot: int) -> StepReport:
+        req = self.queue.popleft()
+        batch = {"tokens": self._prompt_tokens(req)}
+        if self.cfg.frontend.kind == "vision":
+            batch["embeds"] = jnp.zeros(
+                (1, self.cfg.frontend.num_prefix, self.cfg.frontend.embed_dim),
+                jnp.bfloat16)
+        if self.cfg.encoder is not None:
+            batch["frames"] = jnp.zeros((1, req.prompt_len,
+                                         self.cfg.frontend.embed_dim),
+                                        jnp.bfloat16)
+            batch["tokens"] = jnp.ones((1, 1), jnp.int32)    # BOS
+        t0 = time.perf_counter()
+        logits, cache1 = self._prefill_fn(self.params, batch)
+        logits = jax.block_until_ready(logits)
+        dt = time.perf_counter() - t0
+        first_tok = int(jnp.argmax(logits[0]))
+        # merge the single-sequence cache into the batched slot cache
+        self.cache = jax.tree.map(lambda full, one: full.at[slot].set(one[0]),
+                                  self.cache, cache1)
+        req.slot = slot
+        req.generated = 1
+        req.output_tokens.append(first_tok)
+        self.slots[slot] = req
+        self.positions[slot] = req.prompt_len
+        self.last_token[slot] = first_tok
+        report = StepReport(kind="prefill", compute_s=dt, tokens=req.prompt_len,
+                            prefilled=req)
+        if req.generated >= req.max_new_tokens:
+            self._retire(req, report)
+        return report
+
+    def _do_decode(self) -> StepReport:
+        toks = jnp.asarray(self.last_token)
+        pos = jnp.asarray(self.positions)
+        t0 = time.perf_counter()
+        logits, self.cache = self._decode_fn(self.params, self.cache, toks, pos)
+        logits = jax.block_until_ready(logits)
+        dt = time.perf_counter() - t0
+        next_tokens = np.asarray(jnp.argmax(logits, axis=-1))
+        report = StepReport(kind="decode", compute_s=dt)
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            self.positions[i] += 1
+            self.last_token[i] = int(next_tokens[i])
+            req.generated += 1
+            req.output_tokens.append(int(next_tokens[i]))
+            self.kv.append_token(req.req_id)
+            report.tokens += 1
+            report.decoded.append(req)
+            if req.generated >= req.max_new_tokens:
+                self._retire(req, report)
+        return report
+
+    def _retire(self, req: Request, report: StepReport) -> None:
+        if req.slot >= 0:
+            self.slots[req.slot] = None
+        self.kv.release(req.req_id)
+        report.completed.append(req)

@@ -1,0 +1,82 @@
+"""Paged KV cache management (vLLM-style) for the serving engine.
+
+Host-side page-table bookkeeping (free list, per-sequence block tables) plus
+device-side page pools consumed by the ``paged_attention`` Pallas kernel.
+The dense slot-cache path used by the pure-jnp models shares the same
+accounting so admission control sees identical memory pressure either way.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclass
+class PageTableEntry:
+    seq_id: int
+    pages: List[int] = field(default_factory=list)
+    length: int = 0
+
+
+class PagedKVCache:
+    """Page pool allocator: fixed pool of ``num_pages`` pages of
+    ``page_size`` tokens each, allocated per sequence on demand."""
+
+    def __init__(self, num_pages: int, page_size: int):
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.free: List[int] = list(range(num_pages - 1, -1, -1))
+        self.tables: Dict[int, PageTableEntry] = {}
+
+    # -- allocation ---------------------------------------------------------
+    def can_admit(self, prompt_len: int, max_new: int) -> bool:
+        need = self.pages_needed(prompt_len + max_new)
+        return len(self.free) >= need
+
+    def pages_needed(self, tokens: int) -> int:
+        return -(-tokens // self.page_size)
+
+    def allocate(self, seq_id: int, prompt_len: int,
+                 reserve_total: int | None = None) -> PageTableEntry:
+        """Allocates pages for ``reserve_total`` tokens up front (defaults
+        to prompt_len).  Reserving prompt+max_new at admission guarantees
+        append_token never exhausts the pool mid-decode (vLLM-conservative
+        reservation; admission control enforces the budget)."""
+        assert seq_id not in self.tables, f"seq {seq_id} already allocated"
+        entry = PageTableEntry(seq_id)
+        self.tables[seq_id] = entry
+        self._grow(entry, reserve_total or prompt_len)
+        entry.length = prompt_len
+        return entry
+
+    def append_token(self, seq_id: int) -> None:
+        entry = self.tables[seq_id]
+        self._grow(entry, entry.length + 1)
+        entry.length += 1
+
+    def _grow(self, entry: PageTableEntry, target_tokens: int) -> None:
+        need = self.pages_needed(target_tokens)
+        while len(entry.pages) < need:
+            if not self.free:
+                raise MemoryError("KV page pool exhausted")
+            entry.pages.append(self.free.pop())
+
+    def release(self, seq_id: int) -> None:
+        entry = self.tables.pop(seq_id)
+        self.free.extend(entry.pages)
+
+    # -- views --------------------------------------------------------------
+    def block_table(self, seq_id: int, pages_per_seq: int) -> np.ndarray:
+        entry = self.tables[seq_id]
+        out = np.zeros(pages_per_seq, np.int32)
+        out[: len(entry.pages)] = entry.pages[:pages_per_seq]
+        return out
+
+    def utilisation(self) -> float:
+        return 1.0 - len(self.free) / self.num_pages
+
+    @property
+    def used_pages(self) -> int:
+        return self.num_pages - len(self.free)

@@ -1,0 +1,110 @@
+"""Latency metrics: windowed tail percentiles, SLO miss-rate, EMA with
+hysteresis — the controller's primary signal source (paper §2.1)."""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, Optional, Tuple
+
+import numpy as np
+
+
+class LatencyWindow:
+    """Sliding window of (time, latency) samples with tail quantiles.
+
+    Times are monotone, so the recent-horizon lookup is a bisect over the
+    time array instead of a full scan (the controller samples every second
+    — this is the simulator's hot path).
+    """
+
+    def __init__(self, max_samples: int = 4096, horizon_s: float = 60.0):
+        self.max_samples = max_samples
+        self.horizon_s = horizon_s
+        self._times: list = []
+        self._vals: list = []
+        self.total = 0
+        self.misses = 0
+
+    @property
+    def samples(self):
+        return list(zip(self._times, self._vals))
+
+    def observe(self, now: float, latency: float,
+                slo: Optional[float] = None) -> None:
+        self._times.append(now)
+        self._vals.append(latency)
+        if len(self._times) > 2 * self.max_samples:
+            self._times = self._times[-self.max_samples:]
+            self._vals = self._vals[-self.max_samples:]
+        self.total += 1
+        if slo is not None and latency > slo:
+            self.misses += 1
+
+    def _recent(self, now: Optional[float] = None) -> np.ndarray:
+        if not self._times:
+            return np.zeros(0)
+        if now is None:
+            return np.asarray(self._vals)
+        import bisect
+        lo = bisect.bisect_left(self._times, now - self.horizon_s)
+        return np.asarray(self._vals[lo:])
+
+    def quantile(self, q: float, now: Optional[float] = None) -> float:
+        vals = self._recent(now)
+        if vals.size == 0:
+            return 0.0
+        return float(np.quantile(vals, q))
+
+    def p99(self, now: Optional[float] = None) -> float:
+        return self.quantile(0.99, now)
+
+    def p999(self, now: Optional[float] = None) -> float:
+        return self.quantile(0.999, now)
+
+    def miss_rate(self, slo: float, now: Optional[float] = None) -> float:
+        vals = self._recent(now)
+        if vals.size == 0:
+            return 0.0
+        return float(np.mean(vals > slo))
+
+    def count(self, now: Optional[float] = None) -> int:
+        return int(self._recent(now).size)
+
+
+@dataclass
+class EMA:
+    """Exponential moving average with hysteresis (paper §2.1: signals are
+    smoothed with EMAs and hysteresis to reduce spurious triggers)."""
+    alpha: float = 0.3
+    hysteresis: float = 0.05            # relative dead-band
+    value: float = 0.0
+    _initialised: bool = False
+
+    def update(self, x: float) -> float:
+        if not self._initialised:
+            self.value = x
+            self._initialised = True
+            return self.value
+        candidate = self.alpha * x + (1 - self.alpha) * self.value
+        # dead-band: ignore sub-hysteresis wiggles
+        if self.value > 0 and abs(candidate - self.value) < \
+                self.hysteresis * abs(self.value):
+            return self.value
+        self.value = candidate
+        return self.value
+
+
+@dataclass
+class TenantMetrics:
+    """Bundle of per-tenant signals the controller samples every delta s."""
+    latency: LatencyWindow = field(default_factory=LatencyWindow)
+    throughput_window: Deque[Tuple[float, int]] = field(
+        default_factory=lambda: deque(maxlen=4096))
+
+    def observe_tokens(self, now: float, n: int) -> None:
+        self.throughput_window.append((now, n))
+
+    def throughput(self, now: float, horizon_s: float = 10.0) -> float:
+        lo = now - horizon_s
+        tot = sum(n for t, n in self.throughput_window if t >= lo)
+        return tot / horizon_s

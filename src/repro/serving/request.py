@@ -1,0 +1,33 @@
+"""Serving request / response types."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+
+@dataclass
+class Request:
+    req_id: int
+    tenant: str
+    prompt_len: int
+    max_new_tokens: int
+    arrival: float                      # seconds (sim or wall clock)
+    slo_ms: Optional[float] = None      # per-request TTFT SLO, if any
+    prompt_tokens: Optional[object] = None   # [S] int32 (None => synthetic)
+
+    # --- runtime state ---
+    slot: int = -1
+    prefill_done: float = -1.0          # time the first token was emitted
+    finished: float = -1.0
+    generated: int = 0
+    output_tokens: List[int] = field(default_factory=list)
+
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.prefill_done < 0:
+            return None
+        return self.prefill_done - self.arrival
+
+    @property
+    def done(self) -> bool:
+        return self.finished >= 0

@@ -1,0 +1,338 @@
+"""Discrete-event cluster simulator.
+
+Implements the paper's evaluation environment: a p4d-style cluster topology,
+three co-located tenants (T1 latency-sensitive inference, T2 bandwidth-heavy
+ETL, T3 compute-heavy training), an interference schedule toggling T2/T3,
+and the PS-fabric latency law from §2.5.1:
+
+    L = wait_in_queue + c(profile, compute-contention) + s / b(t) + eps
+
+The simulator implements the controller's Actuator protocol, so the *same*
+Controller object that manages the JAX serving stack drives the simulation:
+moves and MIG reconfigurations pause T1 (requests queue), throttles change
+T2's effective fabric demand, MPS quotas scale T3's interference.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import psmodel
+from repro.core.profiles import A100_MIG, ProfileLattice, SliceProfile
+from repro.core.signals import Snapshot, SystemSignals, TenantSignals
+from repro.core.topology import ClusterTopology, Slot, make_p4d_cluster
+from repro.serving.metrics import LatencyWindow
+from repro.sim.params import SimParams
+
+
+@dataclass(order=True)
+class _Event:
+    time: float
+    seq: int
+    kind: str = field(compare=False)
+    payload: dict = field(compare=False, default_factory=dict)
+
+
+@dataclass
+class SimResult:
+    latencies: np.ndarray                 # T1 request latencies (s)
+    miss_rate: float
+    p95: float
+    p99: float
+    p999: float
+    completed: int
+    offered: int
+    dropped: int
+    throughput_rps: float
+    actions: Dict[str, int]
+    reconfig_times: List[float]
+    controller_cpu_frac: float
+    timeline: List[Tuple[float, str]]     # (time, action) for Fig-3 plots
+
+
+class ClusterSim:
+    """Event-driven simulation implementing the controller Actuator."""
+
+    def __init__(self, params: SimParams, controller_factory=None,
+                 topo: Optional[ClusterTopology] = None,
+                 lattice: ProfileLattice = A100_MIG):
+        self.p = params
+        self.rng = np.random.default_rng(params.seed)
+        self.topo = topo or make_p4d_cluster(2)
+        self.lattice = lattice
+        self.now = 0.0
+        self._eseq = itertools.count()
+        self.events: List[_Event] = []
+        # --- placements (naive baseline: everything piled on h0:g0/r0) ---
+        self.t1_slot = Slot(0, "h0:g0", 0)
+        self.t2_slot = Slot(0, "h0:g1", 0)      # same root complex as T1
+        self.t3_slot = Slot(0, "h0:g0", 1)      # same GPU as T1
+        self.t1_profile: SliceProfile = lattice.profiles[
+            min(1, len(lattice.profiles) - 1)]   # 2g.20gb static baseline
+        self.t3_mps_quota = 1.0
+        self.t2_io_throttle: Optional[float] = None
+        self.t1_pinned = False
+        # --- runtime state ---
+        self.t2_active = False
+        self.t3_active = False
+        self.t1_paused_until = 0.0
+        self.t1_busy = False
+        self.t1_queue: List[Tuple[float, float]] = []   # (arrival, size)
+        self.window = LatencyWindow(max_samples=1 << 16, horizon_s=30.0)
+        self.all_latencies: List[float] = []
+        self.completed = 0
+        self.offered = 0
+        self.dropped = 0
+        self.reconfig_times: List[float] = []
+        self.pause_total = 0.0
+        self.controller = None
+        self._controller_factory = controller_factory
+        self.timeline: List[Tuple[float, str]] = []
+        self._completions_window: List[float] = []
+
+    # ---------------------------------------------------------- Actuator
+    def reconfigure(self, tenant: str, profile: SliceProfile) -> float:
+        assert tenant == "T1"
+        pause = max(self.p.mig_reconfig_min_s,
+                    self.rng.normal(self.p.mig_reconfig_mean_s,
+                                    self.p.mig_reconfig_std_s))
+        self.t1_profile = profile
+        self._pause_t1(pause)
+        self.reconfig_times.append(pause)
+        self.timeline.append((self.now, f"mig:{profile.name}"))
+        return pause
+
+    def move(self, tenant: str, slot: Slot) -> float:
+        assert tenant == "T1"
+        self.t1_slot = slot
+        self._pause_t1(self.p.move_pause_s)
+        self.timeline.append((self.now, f"move:{slot.key}"))
+        return self.p.move_pause_s
+
+    def set_io_throttle(self, tenant: str, bytes_per_s: Optional[float]) -> None:
+        if tenant == "T2":
+            self.t2_io_throttle = bytes_per_s
+            self.timeline.append(
+                (self.now, f"throttle:{bytes_per_s or 'off'}"))
+
+    def set_mps_quota(self, tenant: str, frac: float) -> None:
+        if tenant == "T3":
+            self.t3_mps_quota = frac
+            self.timeline.append((self.now, f"mps:{frac:.2f}"))
+
+    def pin_cpu_away_from_irq(self, tenant: str) -> None:
+        self.t1_pinned = True
+
+    def free_slots(self) -> List[Slot]:
+        occupied = {self.t1_slot.key, self.t2_slot.key, self.t3_slot.key}
+        return [s for s in self.topo.slots() if s.key not in occupied]
+
+    def headroom_units(self, device: str) -> int:
+        """Free compute units on a device (7 per A100 minus all occupants,
+        T1's own slice included — greedy_upgrade asks for the *extra*)."""
+        used = 0
+        if self.t1_slot.device == device:
+            used += self.t1_profile.compute_units
+        if self.t3_slot.device == device:
+            used += self.p.t3_units   # T3 occupies a training slice
+        if device != "h0:g0":
+            used += self.p.ambient_units   # ambient co-tenants elsewhere
+        return max(0, 7 - used)
+
+    # -------------------------------------------------------- fabric state
+    def _t2_effective_pcie(self) -> float:
+        if not self.t2_active:
+            return 0.0
+        if self.t2_io_throttle is None:
+            return self.p.t2_pcie_demand
+        # io.max caps the NVMe->host stage; page-cache hits keep part of the
+        # host->GPU stream alive (residual), so relief is partial (§4:
+        # guardrails give the smallest single-component gain).
+        return (self.p.t2_pcie_demand * self.p.t2_throttle_residual
+                + self.t2_io_throttle)
+
+    def _ambient_pcie(self, root: str) -> float:
+        for r, v in self.p.ambient_pcie:
+            if r == root:
+                return v
+        return 0.0
+
+    def _t1_bandwidth(self) -> float:
+        root = self.topo.root_of(self.t1_slot.device)
+        demands = {"T1": psmodel.Demand(weight=1.0)}
+        if self.t2_active and self.topo.same_root(self.t1_slot.device,
+                                                  self.t2_slot.device):
+            t2 = self._t2_effective_pcie()
+            # T2 competes with several DMA streams, capped at its demand
+            demands["T2"] = psmodel.Demand(weight=self.p.t2_ps_weight,
+                                           throttle=t2)
+        amb = self._ambient_pcie(root)
+        if amb > 0:
+            demands["ambient"] = psmodel.Demand(weight=1.0, throttle=amb)
+        shares = psmodel.ps_shares_waterfill(demands, self.p.pcie_capacity)
+        return shares["T1"]
+
+    def _t1_compute(self) -> float:
+        units = self.t1_profile.compute_units
+        c = self.p.t1_c0_s * (self.p.t1_ref_units / units) ** self.p.t1_gamma
+        # MIG isolates SMs but HBM bandwidth is partially shared; bigger
+        # slices own more of the HBM and suffer less.
+        sensitivity = max(0.0, 1.0 - units / 7.0)
+        if self.t3_active and self.t3_slot.device == self.t1_slot.device:
+            c *= 1.0 + self.p.hbm_interference * self.t3_mps_quota * sensitivity
+        elif self.t1_slot.device != "h0:g0":
+            # ambient co-tenants on the rest of the shared cluster
+            c *= 1.0 + self.p.ambient_hbm * sensitivity
+        return c
+
+    def _service_time(self, size: float) -> float:
+        b = self._t1_bandwidth()
+        c = self._t1_compute()
+        eps = self.rng.lognormal(math.log(self.p.noise_mu_s),
+                                 self.p.noise_sigma)
+        if not self.t1_pinned and self.t2_active:
+            eps *= self.p.irq_noise_mult   # IRQ jitter until pinned away
+        return psmodel.latency(c, size, b, eps)
+
+    # ------------------------------------------------------------- events
+    def _push(self, time: float, kind: str, **payload) -> None:
+        heapq.heappush(self.events,
+                       _Event(time, next(self._eseq), kind, payload))
+
+    def _pause_t1(self, pause: float) -> None:
+        self.t1_paused_until = max(self.t1_paused_until, self.now + pause)
+        self.pause_total += pause
+        self._push(self.t1_paused_until, "resume")
+
+    def _draw_size(self) -> float:
+        probs = np.array([p for p, _ in self.p.t1_sizes])
+        sizes = np.array([s for _, s in self.p.t1_sizes])
+        return float(self.rng.choice(sizes, p=probs / probs.sum()))
+
+    def _start_service(self, arrival: float, size: float) -> None:
+        self.t1_busy = True
+        dur = self._service_time(size)
+        self._push(self.now + dur, "complete", arrival=arrival)
+
+    def _maybe_dequeue(self) -> None:
+        if (not self.t1_busy and self.t1_queue
+                and self.now >= self.t1_paused_until):
+            arrival, size = self.t1_queue.pop(0)
+            self._start_service(arrival, size)
+
+    # ------------------------------------------------------------ snapshot
+    def snapshot(self) -> Snapshot:
+        t1 = TenantSignals(
+            p95=self.window.quantile(0.95, self.now),
+            p99=self.window.quantile(0.99, self.now),
+            p999=self.window.quantile(0.999, self.now),
+            miss_rate=self.window.miss_rate(self.p.t1_slo_s, self.now),
+            rps=len([t for t in self._completions_window
+                     if t >= self.now - 10.0]) / 10.0,
+        )
+        sys = SystemSignals()
+        t1_root = self.topo.root_of(self.t1_slot.device)
+        t2_root = self.topo.root_of(self.t2_slot.device)
+        t2_pcie = self._t2_effective_pcie()
+        t1_avg_demand = self.p.t1_rate * sum(
+            p * s for p, s in self.p.t1_sizes)
+        for root in self.topo.roots():
+            v = self._ambient_pcie(root)
+            if root == t2_root:
+                v += t2_pcie
+            if root == t1_root:
+                v += t1_avg_demand
+            sys.pcie_bytes[root] = v
+        io = self.p.t2_io_demand if self.t2_active else 0.0
+        if self.t2_io_throttle is not None and self.t2_active:
+            io = min(io, self.t2_io_throttle)
+        for numa in self.topo.numas():
+            sys.host_io[numa] = io if numa == self.topo.numa_of(
+                self.t2_slot.device) else 0.0
+        for dev in self.topo.devices():
+            sys.sm_util[dev] = (self.p.t3_sm_util * self.t3_mps_quota
+                                if self.t3_active
+                                and dev == self.t3_slot.device else 0.1)
+        sys.irq_rate[f"h{self.topo.host_of(self.t2_slot.device)}"] = \
+            30_000.0 if self.t2_active else 500.0
+        return Snapshot(self.now, {"T1": t1}, sys)
+
+    # ----------------------------------------------------------------- run
+    def run(self) -> SimResult:
+        import time as _time
+        p = self.p
+        if self._controller_factory is not None:
+            self.controller = self._controller_factory(self)
+        # seed arrivals / schedule / sampling
+        self._push(self.rng.exponential(1.0 / p.t1_rate), "arrival")
+        for w in p.schedule:
+            self._push(w.start, "toggle", tenant=w.tenant, on=True)
+            self._push(w.end, "toggle", tenant=w.tenant, on=False)
+        if self.controller is not None:
+            self._push(p.sample_period_s, "sample")
+        ctl_cpu = 0.0
+
+        while self.events:
+            ev = heapq.heappop(self.events)
+            if ev.time > p.duration_s:
+                break
+            self.now = ev.time
+            if ev.kind == "arrival":
+                self.offered += 1
+                size = self._draw_size()
+                if self.now < self.t1_paused_until:
+                    # load-shed during reconfig/move (503-style): counts
+                    # against throughput, not latency
+                    self.dropped += 1
+                elif self.t1_busy:
+                    self.t1_queue.append((self.now, size))
+                else:
+                    self._start_service(self.now, size)
+                self._push(self.now + self.rng.exponential(1.0 / p.t1_rate),
+                           "arrival")
+            elif ev.kind == "complete":
+                lat = self.now - ev.payload["arrival"]
+                self.window.observe(self.now, lat, slo=p.t1_slo_s)
+                self.all_latencies.append(lat)
+                self._completions_window.append(self.now)
+                if len(self._completions_window) > 4096:
+                    self._completions_window = self._completions_window[-2048:]
+                self.completed += 1
+                self.t1_busy = False
+                self._maybe_dequeue()
+            elif ev.kind == "resume":
+                self._maybe_dequeue()
+            elif ev.kind == "toggle":
+                if ev.payload["tenant"] == "T2":
+                    self.t2_active = ev.payload["on"]
+                else:
+                    self.t3_active = ev.payload["on"]
+            elif ev.kind == "sample":
+                t0 = _time.perf_counter()
+                self.controller.on_snapshot(self.snapshot())
+                ctl_cpu += _time.perf_counter() - t0
+                self._push(self.now + p.sample_period_s, "sample")
+
+        lats = np.asarray(self.all_latencies)
+        actions = (self.controller.audit.counts()
+                   if self.controller is not None else {})
+        return SimResult(
+            latencies=lats,
+            miss_rate=float(np.mean(lats > p.t1_slo_s)) if lats.size else 0.0,
+            p95=float(np.quantile(lats, 0.95)) if lats.size else 0.0,
+            p99=float(np.quantile(lats, 0.99)) if lats.size else 0.0,
+            p999=float(np.quantile(lats, 0.999)) if lats.size else 0.0,
+            completed=self.completed,
+            offered=self.offered,
+            dropped=self.dropped,
+            throughput_rps=self.completed / p.duration_s,
+            actions=actions,
+            reconfig_times=self.reconfig_times,
+            controller_cpu_frac=ctl_cpu / p.duration_s,
+            timeline=self.timeline,
+        )

@@ -1,0 +1,90 @@
+"""Simulation parameters — calibrated so the *static MIG + naive placement*
+baseline reproduces the paper's operating point (p99 ~ 20 ms, miss ~ 16%,
+SLO 15 ms), after which controller-induced deltas are the experiment.
+
+Modelling choices (documented in DESIGN.md §8):
+  * During a MIG reconfiguration / tenant move, arriving requests are
+    load-shed (503-style) rather than queued — they count against
+    throughput, not latency.  This is how the paper can report both
+    "18 +- 6 s reconfig" and improved p99 with <= 5% throughput cost.
+  * Other cluster slots carry *ambient* tenants (PCIe traffic per root,
+    HBM pressure per device): the cluster is shared, so placement finds a
+    less-bad slot, not a perfect one.  Without this, placement-only would
+    dominate MIG-only, contradicting Table 3.
+  * An io.max throttle on T2 removes only part of its PCIe demand
+    (page-cache residual) — guardrails give the smallest single-component
+    gain, as in Table 3.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+
+@dataclass(frozen=True)
+class InterferenceWindow:
+    tenant: str          # "T2" | "T3"
+    start: float
+    end: float
+
+
+def default_schedule(duration: float = 3600.0) -> Tuple[InterferenceWindow, ...]:
+    """Toggling interference (paper §3.3.1): alternating/overlapping bursts."""
+    out = []
+    t = 60.0
+    while t + 230 < duration:
+        out.append(InterferenceWindow("T2", t, t + 150))
+        out.append(InterferenceWindow("T3", t + 75, t + 225))
+        t += 300.0
+    return tuple(out)
+
+
+def _default_ambient_pcie() -> Tuple[Tuple[str, float], ...]:
+    # bytes/s of unmodelled tenants per PCIe root complex (h0:r0 hosts T2)
+    return (
+        ("h0:r1", 12.0e9), ("h0:r2", 14.0e9), ("h0:r3", 16.0e9),
+        ("h1:r0", 13.0e9), ("h1:r1", 15.0e9), ("h1:r2", 13.5e9),
+        ("h1:r3", 17.0e9),
+    )
+
+
+@dataclass(frozen=True)
+class SimParams:
+    duration_s: float = 3600.0
+    seed: int = 0
+    # fabric
+    pcie_capacity: float = 25e9          # bytes/s per root complex
+    # T1 — latency-sensitive inference tenant (batch 1, 15 ms p99 SLO)
+    t1_rate: float = 12.0                # Poisson arrivals /s
+    t1_slo_s: float = 0.015
+    t1_sizes: Tuple[Tuple[float, float], ...] = (
+        (0.75, 12e6), (0.20, 24e6), (0.05, 32e6))   # (prob, bytes) mixture
+    t1_c0_s: float = 0.007               # compute at the reference profile
+    t1_ref_units: int = 2                # static baseline: 2g.20gb
+    t1_gamma: float = 0.35               # compute ~ (ref/units)^gamma
+    hbm_interference: float = 0.45       # T3-induced inflation at small slices
+    noise_mu_s: float = 0.0006
+    noise_sigma: float = 0.85             # lognormal shape
+    irq_noise_mult: float = 1.6          # unpinned CPU during T2 bursts
+    # T2 — bandwidth-heavy ETL tenant
+    t2_pcie_demand: float = 20e9
+    t2_ps_weight: float = 4.0            # multiple DMA queues/streams
+    t2_io_demand: float = 2.5e9
+    t2_throttle_residual: float = 0.70   # PCIe demand fraction surviving io.max
+    # T3 — compute-heavy training tenant
+    t3_sm_util: float = 0.95
+    t3_units: int = 2
+    # ambient (unmodelled) multi-tenancy on the rest of the cluster
+    ambient_pcie: Tuple[Tuple[str, float], ...] = field(
+        default_factory=_default_ambient_pcie)
+    ambient_hbm: float = 0.35            # HBM inflation on non-home devices
+    ambient_units: int = 3               # occupied compute units on non-home devices
+    # reconfiguration costs (paper Table 4: 18 +- 6 s)
+    mig_reconfig_mean_s: float = 18.0
+    mig_reconfig_std_s: float = 3.0
+    mig_reconfig_min_s: float = 8.0
+    move_pause_s: float = 2.0
+    # controller sampling
+    sample_period_s: float = 1.0
+    schedule: Tuple[InterferenceWindow, ...] = field(
+        default_factory=default_schedule)

@@ -1,0 +1,57 @@
+"""Training step assembly and a small driver loop."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import NO_POLICY, ShardPolicy
+from repro.models.model import Model, train_loss
+from repro.training import optimizer as opt
+
+
+def make_train_step(cfg: ModelConfig, ocfg: opt.AdamWConfig,
+                    policy: ShardPolicy = NO_POLICY, remat: bool = True
+                    ) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, state, aux)."""
+
+    def step(params, opt_state, batch):
+        def loss_fn(p):
+            return train_loss(p, cfg, batch, policy, remat=remat)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params2, opt_state2, diag = opt.apply_updates(ocfg, params, grads,
+                                                      opt_state)
+        return params2, opt_state2, {"loss": loss, **diag}
+
+    return step
+
+
+@dataclass
+class TrainResult:
+    losses: list
+    final_params: Any
+    final_state: Any
+
+
+def train(cfg: ModelConfig, data_iter, steps: int,
+          ocfg: Optional[opt.AdamWConfig] = None, seed: int = 0,
+          policy: ShardPolicy = NO_POLICY, remat: bool = False,
+          log_every: int = 10, log_fn=None) -> TrainResult:
+    """CPU-scale driver used by tests/examples (reduced configs)."""
+    ocfg = ocfg or opt.AdamWConfig(warmup_steps=10, total_steps=steps)
+    model = Model(cfg)
+    params = model.init(jax.random.key(seed))
+    state = opt.init_state(params)
+    step_fn = jax.jit(make_train_step(cfg, ocfg, policy, remat))
+    losses = []
+    for i in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in next(data_iter).items()}
+        params, state, aux = step_fn(params, state, batch)
+        losses.append(float(aux["loss"]))
+        if log_fn and (i % log_every == 0 or i == steps - 1):
+            log_fn(i, losses[-1], float(aux["grad_norm"]))
+    return TrainResult(losses=losses, final_params=params, final_state=state)

@@ -1,0 +1,85 @@
+"""Config integrity for all ten assigned architectures."""
+import pytest
+
+from repro.configs.base import ARCH_IDS, INPUT_SHAPES, all_configs, get_config, reduced
+
+EXPECTED = {
+    "jamba_v0_1_52b": dict(layers=32, d_model=4096, vocab=65536),
+    "stablelm_3b": dict(layers=32, d_model=2560, vocab=50304),
+    "phi_3_vision_4_2b": dict(layers=32, d_model=3072, vocab=32064),
+    "mixtral_8x7b": dict(layers=32, d_model=4096, vocab=32000),
+    "starcoder2_7b": dict(layers=32, d_model=4608, vocab=49152),
+    "seamless_m4t_large_v2": dict(layers=24, d_model=1024, vocab=256206),
+    "rwkv6_1_6b": dict(layers=24, d_model=2048, vocab=65536),
+    "deepseek_v2_236b": dict(layers=60, d_model=5120, vocab=102400),
+    "granite_3_8b": dict(layers=40, d_model=4096, vocab=49155),
+    "gemma2_27b": dict(layers=46, d_model=4608, vocab=256000),
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_exact_published_dims(arch):
+    cfg = get_config(arch)
+    exp = EXPECTED[arch]
+    assert cfg.num_layers == exp["layers"]
+    assert cfg.d_model == exp["d_model"]
+    assert cfg.vocab_size == exp["vocab"]
+    assert cfg.source
+
+
+def test_all_ten_archs_registered():
+    cfgs = all_configs()
+    assert len(cfgs) == 10
+    families = {c.family for c in cfgs.values()}
+    assert families == {"dense", "moe", "hybrid", "ssm", "vlm", "audio"}
+
+
+def test_jamba_interleave_ratio():
+    cfg = get_config("jamba_v0_1_52b")
+    specs = cfg.layer_specs()
+    attn = sum(1 for l in specs if l.mixer == "attn")
+    mamba = sum(1 for l in specs if l.mixer == "mamba")
+    assert attn == 4 and mamba == 28          # 1:7 interleave
+    moe = sum(1 for l in specs if l.ffn == "moe")
+    assert moe == 16                          # every other layer
+
+
+def test_deepseek_moe_spec():
+    cfg = get_config("deepseek_v2_236b")
+    assert cfg.moe.num_experts == 160 and cfg.moe.top_k == 6
+    assert cfg.moe.num_shared_experts == 2
+    assert cfg.attn.kv_lora_rank == 512 and cfg.attn.kind == "mla"
+    assert cfg.prefix[0].ffn == "dense"       # first layer dense
+
+
+def test_gemma2_alternation_and_softcaps():
+    cfg = get_config("gemma2_27b")
+    specs = cfg.layer_specs()
+    assert specs[0].window == 4096 and specs[1].window == 0
+    assert cfg.attn.logit_softcap == 50.0
+    assert cfg.final_logit_softcap == 30.0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_invariants(arch):
+    """Smoke configs: <=2 layers, d_model<=512, <=4 experts."""
+    r = reduced(get_config(arch))
+    assert r.num_layers <= 2
+    assert r.d_model <= 512
+    for f in (r.ffn, r.moe):
+        if f is not None and f.num_experts:
+            assert f.num_experts <= 4
+
+
+def test_long_context_rule():
+    runs = {a for a in ARCH_IDS if get_config(a).supports_long_context}
+    assert runs == {"jamba_v0_1_52b", "rwkv6_1_6b", "mixtral_8x7b",
+                    "starcoder2_7b", "gemma2_27b", "deepseek_v2_236b"}
+
+
+def test_input_shapes_assigned():
+    assert INPUT_SHAPES["train_4k"].seq_len == 4096
+    assert INPUT_SHAPES["train_4k"].global_batch == 256
+    assert INPUT_SHAPES["prefill_32k"].global_batch == 32
+    assert INPUT_SHAPES["decode_32k"].global_batch == 128
+    assert INPUT_SHAPES["long_500k"].seq_len == 524288

@@ -1,0 +1,170 @@
+"""Controller invariants: FSM gating (Algorithm 1), greedy upgrade
+termination (§2.5.2), guardrail bounds (Table 1), audit/rollback (§2.4)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.audit import AuditLog, Decision, TenantConfig
+from repro.core.guardrails import GuardrailBounds, GuardrailManager
+from repro.core.optimizer import greedy_upgrade, upgrades_remaining
+from repro.core.policy import DecisionFSM, PolicyConfig, Trigger
+from repro.core.profiles import A100_MIG, TPU_SLICE
+
+
+class FakeActuator:
+    def __init__(self):
+        self.calls = []
+
+    def set_io_throttle(self, tenant, v):
+        self.calls.append(("io", tenant, v))
+
+    def set_mps_quota(self, tenant, v):
+        self.calls.append(("mps", tenant, v))
+
+
+# ------------------------------------------------------------------ FSM
+def test_fsm_requires_persistence():
+    fsm = DecisionFSM(PolicyConfig(persistence=3))
+    assert fsm.observe(0.020) == Trigger.NONE
+    assert fsm.observe(0.020) == Trigger.NONE
+    assert fsm.observe(0.020) == Trigger.BREACH
+
+
+def test_fsm_breach_streak_resets_on_recovery():
+    fsm = DecisionFSM(PolicyConfig(persistence=3))
+    fsm.observe(0.020)
+    fsm.observe(0.020)
+    fsm.observe(0.010)     # recovered
+    assert fsm.observe(0.020) == Trigger.NONE
+    assert fsm.observe(0.020) == Trigger.NONE
+    assert fsm.observe(0.020) == Trigger.BREACH
+
+
+def test_fsm_dwell_and_cooldown_gate_structural_actions():
+    cfg = PolicyConfig(persistence=1, dwell_obs=10, cooldown_obs=5,
+                       validation_obs=0)
+    fsm = DecisionFSM(cfg)
+    assert fsm.observe(0.02) == Trigger.BREACH
+    fsm.action_taken(0.02)
+    assert not fsm.at_reconfig_boundary()
+    assert fsm.is_cooling_down()
+    for _ in range(9):
+        fsm.observe(0.02)
+    assert not fsm.at_reconfig_boundary()
+    fsm.observe(0.02)
+    assert fsm.at_reconfig_boundary()
+    assert not fsm.is_cooling_down()       # cooldown (5) expired before dwell
+
+
+def test_fsm_validation_gates_triggers_then_verdicts():
+    cfg = PolicyConfig(persistence=1, validation_obs=3)
+    fsm = DecisionFSM(cfg)
+    fsm.action_taken(pre_change_p99=0.020)
+    assert fsm.observe(0.030) == Trigger.NONE   # gated during validation
+    fsm.observe(0.030)
+    fsm.observe(0.030)
+    assert fsm.validation_result(0.030) is False   # worsened -> rollback
+    fsm.action_taken(pre_change_p99=0.020)
+    for _ in range(3):
+        fsm.observe(0.010)
+    assert fsm.validation_result(0.012) is True
+
+
+@given(p99s=st.lists(st.floats(min_value=0.0, max_value=0.1,
+                               allow_nan=False), min_size=1, max_size=200))
+@settings(max_examples=30, deadline=None)
+def test_fsm_never_triggers_during_dwell(p99s):
+    """Property: after any action, no trigger can fire for dwell_obs
+    observations when structural gating is honoured."""
+    cfg = PolicyConfig(persistence=1, dwell_obs=50, cooldown_obs=20,
+                       validation_obs=0)
+    fsm = DecisionFSM(cfg)
+    fsm.action_taken(0.02)
+    for i, p in enumerate(p99s[:49]):
+        fsm.observe(p)
+        assert not fsm.at_reconfig_boundary()
+
+
+# --------------------------------------------------------------- greedy
+def test_greedy_upgrade_maximises_delta_mu_within_headroom():
+    assert greedy_upgrade(A100_MIG, A100_MIG["2g.20gb"], 5).name == "7g.80gb"
+    assert greedy_upgrade(A100_MIG, A100_MIG["2g.20gb"], 2).name == "4g.40gb"
+    assert greedy_upgrade(A100_MIG, A100_MIG["2g.20gb"], 0) is None
+
+
+def test_upgrade_sequences_terminate():
+    """Finite termination: at most |M|-1 upgrades (paper §2.5.2)."""
+    for lattice in (A100_MIG, TPU_SLICE):
+        p = lattice.bottom
+        steps = 0
+        while True:
+            nxt = greedy_upgrade(lattice, p, headroom_units=10**9)
+            if nxt is None:
+                break
+            assert nxt.mu() > p.mu()       # strictly increasing isolation
+            p = nxt
+            steps += 1
+        assert steps <= len(lattice) - 1
+        assert upgrades_remaining(lattice, p) == 0
+
+
+def test_profile_lattice_is_ordered():
+    units = [p.compute_units for p in A100_MIG.profiles]
+    assert units == sorted(units)
+    assert A100_MIG.top.name == "7g.80gb"
+    assert A100_MIG.bottom.name == "1g.10gb"
+
+
+# ------------------------------------------------------------ guardrails
+def test_guardrail_bounds_clamped_to_table1():
+    gm = GuardrailManager(GuardrailBounds())
+    act = FakeActuator()
+    v = gm.throttle_io(act, "T2", 10e9, now=0.0)      # above 500 MB/s cap
+    assert v == 500e6
+    v = gm.throttle_io(act, "T2", 1e3, now=0.0)       # below 100 MB/s floor
+    assert v == 100e6
+    q = gm.set_mps_quota(act, "T3", 0.1)
+    assert q == 0.5
+    q = gm.set_mps_quota(act, "T3", 2.0)
+    assert q == 1.0
+
+
+def test_guardrail_bounded_window_expiry():
+    gm = GuardrailManager(GuardrailBounds(io_window_s=30.0))
+    act = FakeActuator()
+    gm.throttle_io(act, "T2", 300e6, now=100.0)
+    assert gm.is_throttled("T2")
+    assert gm.tick(act, 120.0) == []
+    assert gm.tick(act, 131.0) == ["T2"]
+    assert not gm.is_throttled("T2")
+    assert act.calls[-1] == ("io", "T2", None)        # throttle removed
+
+
+def test_claim1_hook_total_throttle():
+    gm = GuardrailManager()
+    act = FakeActuator()
+    gm.throttle_io(act, "T2", 400e6, now=0.0)
+    gm.throttle_io(act, "T4", 200e6, now=0.0)
+    assert gm.total_throttle() == pytest.approx(600e6)
+
+
+# ---------------------------------------------------------------- audit
+def test_audit_rollback_bookkeeping():
+    log = AuditLog()
+    good = TenantConfig(profile="2g.20gb", device="h0:g0", slot=0)
+    log.mark_good("T1", good)
+    log.record(Decision(1.0, "reconfigure", "T1", {"profile": "4g.40gb"}, {}))
+    log.set_validation(False)
+    assert log.decisions[-1].validated is False
+    restored = log.last_known_good("T1")
+    assert restored.profile == "2g.20gb"
+    # mark_good copies: mutating the restored config must not corrupt the log
+    restored.profile = "7g.80gb"
+    assert log.last_known_good("T1").profile == "2g.20gb"
+
+
+def test_audit_counts():
+    log = AuditLog()
+    for a in ("move", "move", "throttle_io"):
+        log.record(Decision(0.0, a, "T1", {}, {}))
+    assert log.counts() == {"move": 2, "throttle_io": 1}
+    assert len(log.actions_of("move")) == 2

@@ -1,0 +1,176 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + hypothesis
+property tests, executed in interpret mode on CPU."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.paged_attention.ops import paged_attention
+from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.kernels.rwkv6_scan.ops import rwkv6_scan
+from repro.kernels.rwkv6_scan.ref import rwkv6_scan_ref
+from repro.kernels.selective_scan.ops import selective_scan
+from repro.kernels.selective_scan.ref import selective_scan_ref
+
+RNG = np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------- flash
+@pytest.mark.parametrize("b,s,t,h,kv,hd,causal,window,cap,dtype", [
+    (2, 128, 128, 4, 2, 64, True, 0, None, jnp.float32),
+    (1, 256, 256, 8, 8, 128, True, 128, 50.0, jnp.float32),
+    (2, 64, 192, 4, 1, 64, True, 0, None, jnp.float32),
+    (1, 128, 128, 4, 4, 64, False, 0, None, jnp.float32),
+    (1, 128, 128, 2, 2, 128, True, 0, None, jnp.bfloat16),
+    (1, 384, 384, 4, 2, 64, True, 256, None, jnp.float32),
+])
+def test_flash_attention_allclose(b, s, t, h, kv, hd, causal, window, cap,
+                                  dtype):
+    q = jnp.asarray(RNG.standard_normal((b, s, h, hd)), dtype)
+    k = jnp.asarray(RNG.standard_normal((b, t, kv, hd)), dtype)
+    v = jnp.asarray(RNG.standard_normal((b, t, kv, hd)), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window, softcap=cap,
+                          block_q=64, block_k=64)
+    ref = flash_attention_ref(q, k, v, causal=causal, window=window,
+                              softcap=cap)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-3
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), rtol=tol, atol=tol)
+
+
+@settings(max_examples=10, deadline=None)
+@given(bq=st.sampled_from([32, 64, 128]), bk=st.sampled_from([32, 64, 128]),
+       s=st.sampled_from([64, 128, 192]))
+def test_flash_attention_block_shape_invariance(bq, bk, s):
+    """Property: output is independent of the BlockSpec tiling."""
+    q = jnp.asarray(RNG.standard_normal((1, s, 2, 64)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((1, s, 2, 64)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((1, s, 2, 64)), jnp.float32)
+    a = flash_attention(q, k, v, block_q=bq, block_k=bk)
+    b = flash_attention(q, k, v, block_q=64, block_k=64)
+    # fp32 online-softmax reassociation differs across tilings: ~1e-4
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=5e-4,
+                               atol=5e-4)
+
+
+# ---------------------------------------------------------------- paged
+@pytest.mark.parametrize("b,h,kv,hd,page,pps,npages", [
+    (2, 4, 2, 64, 128, 4, 16),
+    (4, 8, 8, 128, 128, 2, 8),
+    (1, 4, 1, 64, 128, 8, 32),
+    (3, 6, 2, 64, 256, 2, 6),
+])
+def test_paged_attention_allclose(b, h, kv, hd, page, pps, npages):
+    q = jnp.asarray(RNG.standard_normal((b, h, hd)), jnp.float32)
+    kp = jnp.asarray(RNG.standard_normal((npages, page, kv, hd)), jnp.float32)
+    vp = jnp.asarray(RNG.standard_normal((npages, page, kv, hd)), jnp.float32)
+    bt = jnp.asarray(RNG.integers(0, npages, (b, pps)), jnp.int32)
+    lens = jnp.asarray(RNG.integers(1, pps * page, (b,)), jnp.int32)
+    out = paged_attention(q, kp, vp, bt, lens)
+    ref = paged_attention_ref(q, kp, vp, bt, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-3,
+                               atol=2e-3)
+
+
+def test_paged_attention_ignores_pages_beyond_length():
+    """Property: garbage in pages past `lengths` must not leak into output."""
+    b, h, kv, hd, page, pps, npages = 1, 2, 2, 64, 128, 4, 8
+    q = jnp.asarray(RNG.standard_normal((b, h, hd)), jnp.float32)
+    kp = jnp.asarray(RNG.standard_normal((npages, page, kv, hd)), jnp.float32)
+    vp = jnp.asarray(RNG.standard_normal((npages, page, kv, hd)), jnp.float32)
+    bt = jnp.asarray([[0, 1, 2, 3]], jnp.int32)
+    lens = jnp.asarray([130], jnp.int32)
+    out1 = paged_attention(q, kp, vp, bt, lens)
+    kp2 = kp.at[2:].set(1e4)     # poison pages beyond length
+    vp2 = vp.at[2:].set(-1e4)
+    out2 = paged_attention(q, kp2, vp2, bt, lens)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-5)
+
+
+# ------------------------------------------------------------- sel. scan
+@pytest.mark.parametrize("b,s,d,n,block_d,chunk", [
+    (2, 64, 128, 16, 64, 32),
+    (1, 256, 256, 8, 128, 64),
+    (1, 96, 64, 4, 64, 96),
+])
+def test_selective_scan_allclose(b, s, d, n, block_d, chunk):
+    x = jnp.asarray(RNG.standard_normal((b, s, d)) * 0.5, jnp.float32)
+    dt = jnp.asarray(np.abs(RNG.standard_normal((b, s, d))) * 0.1, jnp.float32)
+    a = jnp.asarray(-np.abs(RNG.standard_normal((d, n))) - 0.1, jnp.float32)
+    bb = jnp.asarray(RNG.standard_normal((b, s, n)) * 0.5, jnp.float32)
+    c = jnp.asarray(RNG.standard_normal((b, s, n)) * 0.5, jnp.float32)
+    dd = jnp.asarray(RNG.standard_normal((d,)), jnp.float32)
+    h0 = jnp.asarray(RNG.standard_normal((b, d, n)) * 0.1, jnp.float32)
+    y, hf = selective_scan(x, dt, a, bb, c, dd, h0, block_d=block_d,
+                           chunk=chunk)
+    yr, hr = selective_scan_ref(x, dt, a, bb, c, dd, h0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(hr), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_selective_scan_chunk_boundary_state_continuity():
+    """Property: chunked scan == two half-scans chained via state."""
+    b, s, d, n = 1, 64, 32, 8
+    x = jnp.asarray(RNG.standard_normal((b, s, d)) * 0.5, jnp.float32)
+    dt = jnp.asarray(np.abs(RNG.standard_normal((b, s, d))) * 0.1, jnp.float32)
+    a = jnp.asarray(-np.abs(RNG.standard_normal((d, n))) - 0.1, jnp.float32)
+    bb = jnp.asarray(RNG.standard_normal((b, s, n)) * 0.5, jnp.float32)
+    c = jnp.asarray(RNG.standard_normal((b, s, n)) * 0.5, jnp.float32)
+    dd = jnp.asarray(RNG.standard_normal((d,)), jnp.float32)
+    y, hf = selective_scan(x, dt, a, bb, c, dd, chunk=16)
+    y1, h1 = selective_scan(x[:, :32], dt[:, :32], a, bb[:, :32], c[:, :32],
+                            dd, chunk=16)
+    y2, h2 = selective_scan(x[:, 32:], dt[:, 32:], a, bb[:, 32:], c[:, 32:],
+                            dd, h1, chunk=16)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(hf), rtol=1e-4,
+                               atol=1e-4)
+
+
+# ------------------------------------------------------------------ rwkv
+@pytest.mark.parametrize("b,s,h,hd,chunk", [
+    (2, 64, 4, 32, 32),
+    (1, 96, 2, 64, 48),
+    (1, 33, 1, 32, 16),   # ragged chunk boundary
+])
+def test_rwkv6_scan_allclose(b, s, h, hd, chunk):
+    if s % chunk:
+        pytest.skip("kernel requires chunk | seq (padding handled by caller)")
+    r = jnp.asarray(RNG.standard_normal((b, s, h, hd)) * 0.5, jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((b, s, h, hd)) * 0.5, jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((b, s, h, hd)) * 0.5, jnp.float32)
+    w = jnp.asarray(0.45 + 0.5 / (1 + np.exp(-RNG.standard_normal((b, s, h, hd)))),
+                    jnp.float32)
+    u = jnp.asarray(RNG.standard_normal((h, hd)) * 0.5, jnp.float32)
+    s0 = jnp.asarray(RNG.standard_normal((b, h, hd, hd)) * 0.1, jnp.float32)
+    y, sf = rwkv6_scan(r, k, v, w, u, s0, chunk=chunk)
+    yr, sr = rwkv6_scan_ref(r, k, v, w, u, s0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(sf), np.asarray(sr), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_rwkv6_matches_model_lax_scan():
+    """The Pallas kernel and the model's lax.scan implement one recurrence."""
+    from repro.configs.base import get_config, reduced
+    from repro.models import rwkv as rwkv_mod
+    cfg = reduced(get_config("rwkv6_1_6b"))
+    heads, hd = cfg.d_model // cfg.rwkv.head_dim, cfg.rwkv.head_dim
+    b, s = 1, 32
+    r = jnp.asarray(RNG.standard_normal((b, s, heads, hd)) * 0.3, jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((b, s, heads, hd)) * 0.3, jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((b, s, heads, hd)) * 0.3, jnp.float32)
+    w = jnp.asarray(0.5 + 0.4 / (1 + np.exp(-RNG.standard_normal((b, s, heads, hd)))),
+                    jnp.float32)
+    u = jnp.asarray(RNG.standard_normal((heads, hd)) * 0.3, jnp.float32)
+    y_kernel, _ = rwkv6_scan(r, k, v, w, u, chunk=16)
+    y_ref, _ = rwkv6_scan_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(y_kernel), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)

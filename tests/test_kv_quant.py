@@ -1,0 +1,61 @@
+"""Opt-in int8 KV cache (beyond-paper, decode memory term)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, reduced
+from repro.models.model import Model, decode_step, prefill
+
+
+@pytest.fixture
+def kv_int8(monkeypatch):
+    monkeypatch.setenv("REPRO_KV_INT8", "1")
+
+
+def test_quantized_decode_close_to_exact(kv_int8):
+    cfg = reduced(get_config("stablelm_3b"))
+    model = Model(cfg)
+    params = model.init(jax.random.key(1))
+    rng = np.random.default_rng(2)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 12)), jnp.int32)
+    _, cache = prefill(params, cfg, {"tokens": toks[:, :11]}, seq_cap=16)
+    assert cache["period"]["sub0"]["self"]["k"].dtype == jnp.int8
+    lg_q, _ = decode_step(params, cfg, cache, toks[:, 11],
+                          jnp.array([11], jnp.int32))
+    # exact reference without quantization
+    os.environ.pop("REPRO_KV_INT8")
+    _, cache_f = prefill(params, cfg, {"tokens": toks[:, :11]}, seq_cap=16)
+    lg_f, _ = decode_step(params, cfg, cache_f, toks[:, 11],
+                          jnp.array([11], jnp.int32))
+    err = np.max(np.abs(np.asarray(lg_q, np.float32)
+                        - np.asarray(lg_f, np.float32)))
+    ref = np.max(np.abs(np.asarray(lg_f, np.float32))) + 1e-6
+    assert err / ref < 0.08, f"relative logits error {err/ref:.3f}"
+
+
+def test_quantized_cache_halves_bytes(kv_int8):
+    from repro.launch.shardings import make_policy
+    from repro.launch.specs import decode_arg_plans
+    from repro.configs.base import INPUT_SHAPES
+    from repro.models.params import P
+
+    class M:
+        shape = {"data": 16, "model": 16}
+        axis_names = ("data", "model")
+
+    cfg = get_config("stablelm_3b")
+    cplan, _, _ = decode_arg_plans(cfg, INPUT_SHAPES["decode_32k"], M())
+    import jax as _j
+    leaves = _j.tree.leaves(cplan, is_leaf=lambda x: isinstance(x, P))
+    kv_bytes = sum(int(np.prod(p.shape)) for p in leaves if p.dtype == "int8")
+    scale_bytes = sum(int(np.prod(p.shape)) * 2 for p in leaves
+                      if "float" in p.dtype and len(p.shape) == 3)
+    os.environ.pop("REPRO_KV_INT8")
+    cplan_f, _, _ = decode_arg_plans(cfg, INPUT_SHAPES["decode_32k"], M())
+    leaves_f = _j.tree.leaves(cplan_f, is_leaf=lambda x: isinstance(x, P))
+    kv_bytes_f = sum(int(np.prod(p.shape)) * 2 for p in leaves_f
+                     if p.dtype == "bfloat16")
+    assert kv_bytes + scale_bytes < 0.55 * kv_bytes_f

@@ -1,0 +1,108 @@
+"""Launch-layer units that don't need 512 placeholder devices: batch plans,
+analytic roofline terms, collective parsing."""
+import numpy as np
+import pytest
+
+from repro.configs.base import INPUT_SHAPES, get_config
+from repro.launch.shardings import make_policy
+from repro.launch.specs import batch_plan, decode_arg_plans
+from repro.models.params import P
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH_MP = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_batch_plan_shapes_dense_train():
+    cfg = get_config("granite_3_8b")
+    plan = batch_plan(cfg, INPUT_SHAPES["train_4k"], MESH)
+    assert plan["tokens"].shape == (256, 4096)
+    assert plan["labels"].shape == (256, 4096)
+    assert plan["tokens"].pspec[0] == ("data",) or \
+        plan["tokens"].pspec[0] == "data"
+
+
+def test_batch_plan_vlm_subtracts_patches():
+    cfg = get_config("phi_3_vision_4_2b")
+    plan = batch_plan(cfg, INPUT_SHAPES["train_4k"], MESH)
+    assert plan["embeds"].shape == (256, 576, 1024)
+    assert plan["tokens"].shape == (256, 4096 - 576)   # total positions 4096
+
+
+def test_batch_plan_encdec_frames():
+    cfg = get_config("seamless_m4t_large_v2")
+    plan = batch_plan(cfg, INPUT_SHAPES["prefill_32k"], MESH)
+    assert plan["frames"].shape == (32, 32768, 1024)
+    assert plan["tokens"].shape[1] <= 128               # decoder prompt
+
+
+def test_decode_arg_plans_cache_capacity():
+    cfg = get_config("mixtral_8x7b")                    # SWA 4096
+    cplan, tok, pos = decode_arg_plans(cfg, INPUT_SHAPES["long_500k"], MESH)
+    kv_leaves = [p for p in _leaves(cplan) if len(p.shape) == 5]
+    # window cache capacity == 4096, not 524288
+    assert all(p.shape[2] == 4096 for p in kv_leaves)
+    assert tok.shape == (1,)
+
+
+def _leaves(plan):
+    import jax
+    return jax.tree.leaves(plan, is_leaf=lambda x: isinstance(x, P))
+
+
+def test_multipod_policy_batch_axes():
+    cfg = get_config("granite_3_8b")
+    pol = make_policy(cfg, INPUT_SHAPES["train_4k"], MESH_MP)
+    assert pol.act[0] == ("pod", "data")
+
+
+def test_analytic_terms_scale_with_chips():
+    from repro.launch.dryrun import analytic_terms
+    cfg = get_config("stablelm_3b")
+    t256 = analytic_terms(cfg, INPUT_SHAPES["train_4k"], 256)
+    t512 = analytic_terms(cfg, INPUT_SHAPES["train_4k"], 512)
+    assert t256["flops_analytic"] == t512["flops_analytic"]
+    assert t256["t_compute_analytic"] == pytest.approx(
+        2 * t512["t_compute_analytic"])
+
+
+def test_analytic_train_flops_close_to_6nd():
+    """Dense archs: analytic flops within ~2x of 6*N*D (attention extra)."""
+    from benchmarks.roofline import model_flops
+    from repro.launch.dryrun import analytic_terms
+    cfg = get_config("granite_3_8b")
+    t = analytic_terms(cfg, INPUT_SHAPES["train_4k"], 256)
+    mf = model_flops("granite_3_8b", "train_4k")
+    assert 0.5 < t["flops_analytic"] / mf < 2.0
+
+
+def test_window_clipping_reduces_analytic_compute():
+    from repro.launch.dryrun import analytic_terms
+    cfg = get_config("mixtral_8x7b")
+    clipped = analytic_terms(cfg, INPUT_SHAPES["prefill_32k"], 256,
+                             q_chunk=512)
+    unclipped = analytic_terms(cfg, INPUT_SHAPES["prefill_32k"], 256,
+                               q_chunk=32768)
+    assert clipped["flops_analytic"] < 0.9 * unclipped["flops_analytic"]
+
+
+def test_collective_parser_sums_sizes():
+    from repro.launch.dryrun import collective_bytes_from_hlo
+    hlo = """
+ENTRY %main {
+  %ag = bf16[128,256] all-gather(%x), replica_groups={}
+  %ar = f32[64] all-reduce(%y), to_apply=%sum
+}
+%body.1 (p: f32[8]) {
+  %ar2 = f32[8,4] all-reduce(%p), to_apply=%sum
+}
+"""
+    out = collective_bytes_from_hlo(hlo, {"layers": 10})
+    assert out["all-gather"] == 128 * 256 * 2
+    assert out["all-reduce"] == 64 * 4 + 8 * 4 * 4 * 10   # body x10

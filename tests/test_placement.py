@@ -1,0 +1,76 @@
+"""Topology queries and the PCIe-aware placement scorer (paper §2.2.1)."""
+import pytest
+
+from repro.core.placement import (PlacementWeights, best_candidate,
+                                  intra_device_first, placement_score,
+                                  rank_candidates)
+from repro.core.signals import Snapshot, SystemSignals, TenantSignals
+from repro.core.topology import Slot, make_p4d_cluster
+
+
+@pytest.fixture
+def topo():
+    return make_p4d_cluster(2)
+
+
+def snap_with(pcie=None, io=None, irq=None):
+    s = SystemSignals(pcie_bytes=pcie or {}, host_io=io or {},
+                      irq_rate=irq or {})
+    return Snapshot(0.0, {"T1": TenantSignals()}, s)
+
+
+def test_p4d_topology_shape(topo):
+    assert len(topo.devices()) == 16
+    assert len(topo.roots()) == 8
+    assert topo.same_root("h0:g0", "h0:g1")
+    assert not topo.same_root("h0:g0", "h0:g2")
+    assert topo.host_of("h1:g3") == 1
+    assert "h0:g1" in topo.siblings("h0:g0")
+
+
+def test_score_penalises_busy_root(topo):
+    snap = snap_with(pcie={"h0:r0": 20e9})
+    hot = placement_score(topo, Slot(0, "h0:g0", 0), snap)
+    cold = placement_score(topo, Slot(0, "h0:g2", 0), snap)
+    assert hot > cold
+
+
+def test_score_penalises_numa_io_and_irq(topo):
+    w = PlacementWeights()
+    snap = snap_with(io={topo.numa_of("h0:g0"): 3e9})
+    assert placement_score(topo, Slot(0, "h0:g0", 0), snap, w) > \
+        placement_score(topo, Slot(1, "h1:g0", 0), snap, w) - w.cross_host
+
+
+def test_cross_host_penalty(topo):
+    snap = snap_with()
+    local = placement_score(topo, Slot(0, "h0:g2", 0), snap, current_host=0)
+    remote = placement_score(topo, Slot(1, "h1:g2", 0), snap, current_host=0)
+    assert remote == pytest.approx(local + PlacementWeights().cross_host)
+
+
+def test_rank_is_deterministic_and_sorted(topo):
+    snap = snap_with(pcie={"h0:r0": 20e9, "h0:r1": 5e9})
+    cands = topo.slots()
+    ranked = rank_candidates(topo, cands, snap)
+    scores = [s for _, s in ranked]
+    assert scores == sorted(scores)
+    assert ranked == rank_candidates(topo, cands, snap)
+
+
+def test_intra_device_first_ordering(topo):
+    """Paper: intra-GPU moves are tried before cross-GPU/cross-host."""
+    snap = snap_with()
+    current = Slot(0, "h0:g0", 0)
+    free = [Slot(1, "h1:g0", 0), Slot(0, "h0:g3", 1), Slot(0, "h0:g0", 1)]
+    ranked = intra_device_first(topo, current, free, snap)
+    assert ranked[0][0].device == "h0:g0"            # same device first
+    assert topo.host_of(ranked[1][0].device) == 0    # same host next
+    assert topo.host_of(ranked[2][0].device) == 1    # remote last
+
+
+def test_best_candidate_avoids_hot_path(topo):
+    snap = snap_with(pcie={"h0:r0": 22e9, "h0:r1": 1e9, "h0:r2": 18e9})
+    cands = [Slot(0, "h0:g0", 1), Slot(0, "h0:g2", 0), Slot(0, "h0:g4", 0)]
+    best, score = best_candidate(topo, cands, snap)
+    assert best.device == "h0:g2"                    # on the 1 GB/s root

@@ -1,0 +1,73 @@
+"""Beyond-paper proactive predictor (core/predictor.py)."""
+import numpy as np
+import pytest
+
+from repro.core.predictor import PredictorConfig, TailTrendPredictor
+
+
+def feed(pred, ts, ys):
+    for t, y in zip(ts, ys):
+        pred.update(float(t), float(y))
+
+
+def test_rising_trend_predicts_breach():
+    pred = TailTrendPredictor(PredictorConfig(horizon_s=15.0))
+    ts = np.arange(12)
+    ys = 0.010 + 0.0004 * ts          # +0.4 ms/s towards 15 ms
+    feed(pred, ts, ys)
+    p = pred.predict(now=11.0)
+    assert p is not None and p > ys[-1]
+    assert pred.should_preact(11.0, current_p99=float(ys[-1]), tau=0.015)
+
+
+def test_flat_trend_does_not_preact():
+    pred = TailTrendPredictor()
+    ts = np.arange(12)
+    feed(pred, ts, np.full(12, 0.012))
+    assert pred.predict(11.0) is None
+    assert not pred.should_preact(11.0, 0.012, tau=0.015)
+
+
+def test_guard_frac_blocks_cold_start():
+    """A rising trend far below the SLO must not trigger."""
+    pred = TailTrendPredictor(PredictorConfig(guard_frac=0.6))
+    ts = np.arange(12)
+    feed(pred, ts, 0.001 + 0.0004 * ts)
+    assert not pred.should_preact(11.0, current_p99=0.005, tau=0.015)
+
+
+def test_rho_floor_vetoes_idle_system():
+    pred = TailTrendPredictor(PredictorConfig(rho_floor=0.05))
+    ts = np.arange(12)
+    feed(pred, ts, 0.010 + 0.0006 * ts)
+    # nearly idle: rho = 0.1 * 0.0001 << floor
+    assert not pred.should_preact(11.0, 0.016, tau=0.015,
+                                  rps=0.1, mean_service_s=1e-4)
+    # loaded: prediction goes through
+    assert pred.should_preact(11.0, 0.016, tau=0.015,
+                              rps=30.0, mean_service_s=0.01)
+
+
+def test_insufficient_history_returns_none():
+    pred = TailTrendPredictor()
+    pred.update(0.0, 0.010)
+    pred.update(1.0, 0.012)
+    assert pred.predict(2.0) is None
+
+
+def test_proactive_controller_never_violates_structural_gates():
+    """Proactive triggering must not produce more structural actions than
+    the dwell allows (it only moves them earlier)."""
+    from benchmarks.common import controller_factory
+    from repro.core.policy import PolicyConfig
+    from repro.sim.cluster import ClusterSim
+    from repro.sim.params import SimParams, default_schedule
+    p = SimParams(seed=2, duration_s=1200.0,
+                  schedule=default_schedule(1200.0))
+    sim = ClusterSim(p, controller_factory(proactive=True))
+    sim.run()
+    times = [d.time for d in sim.controller.audit.decisions
+             if d.action in ("move", "reconfigure", "relax")]
+    gaps = np.diff(times)
+    dwell = PolicyConfig().dwell_obs * p.sample_period_s
+    assert all(g >= dwell * 0.9 for g in gaps), gaps

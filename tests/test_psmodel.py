@@ -1,0 +1,96 @@
+"""Property tests for the PS fabric model and Kingman guidance (paper §2.5)."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import psmodel
+from repro.core.kingman import GG1, service_rate_needed
+
+pos = st.floats(min_value=0.01, max_value=100.0, allow_nan=False)
+
+
+@given(ws=st.lists(pos, min_size=1, max_size=6), cap=pos)
+@settings(max_examples=60, deadline=None)
+def test_ps_shares_respect_fair_share_and_caps(ws, cap):
+    demands = {f"t{i}": psmodel.Demand(weight=w) for i, w in enumerate(ws)}
+    shares = psmodel.ps_shares(demands, cap)
+    total_w = sum(ws)
+    for i, w in enumerate(ws):
+        assert shares[f"t{i}"] == pytest.approx(cap * w / total_w, rel=1e-9)
+
+
+@given(ws=st.lists(pos, min_size=2, max_size=5), cap=pos,
+       g=st.floats(min_value=0.001, max_value=1.0))
+@settings(max_examples=60, deadline=None)
+def test_ps_throttle_binds(ws, cap, g):
+    """b_i = min(fair, g_i): a throttle below fair share must bind."""
+    demands = {f"t{i}": psmodel.Demand(weight=w) for i, w in enumerate(ws)}
+    fair0 = cap * ws[0] / sum(ws)
+    demands["t0"] = psmodel.Demand(weight=ws[0], throttle=g * fair0)
+    shares = psmodel.ps_shares(demands, cap)
+    assert shares["t0"] == pytest.approx(min(fair0, g * fair0), rel=1e-9)
+
+
+@given(ws=st.lists(pos, min_size=1, max_size=6), cap=pos,
+       data=st.data())
+@settings(max_examples=60, deadline=None)
+def test_waterfill_conserves_capacity(ws, cap, data):
+    """Water-filling never allocates more than B in total, and uncapped
+    flows split the residual by weight."""
+    demands = {}
+    for i, w in enumerate(ws):
+        throttle = data.draw(st.one_of(st.none(), pos))
+        demands[f"t{i}"] = psmodel.Demand(weight=w, throttle=throttle)
+    alloc = psmodel.ps_shares_waterfill(demands, cap)
+    assert sum(alloc.values()) <= cap * (1 + 1e-9)
+    for k, d in demands.items():
+        if d.throttle is not None:
+            assert alloc.get(k, 0.0) <= d.throttle + 1e-9
+
+
+def test_waterfill_redistributes_slack():
+    """A tenant capped below fair share returns capacity to the others —
+    the beyond-paper refinement over the paper's plain min()."""
+    demands = {"a": psmodel.Demand(), "b": psmodel.Demand(throttle=1.0)}
+    plain = psmodel.ps_shares(demands, 10.0)
+    wf = psmodel.ps_shares_waterfill(demands, 10.0)
+    assert plain["a"] == pytest.approx(5.0)
+    assert wf["a"] == pytest.approx(9.0)
+    assert wf["b"] == pytest.approx(1.0)
+
+
+def test_stability_claim_condition():
+    """Claim 1 (iii): sum g_j < B."""
+    assert psmodel.stable_under_throttles({"a": 3.0, "b": 4.0}, 10.0)
+    assert not psmodel.stable_under_throttles({"a": 6.0, "b": 5.0}, 10.0)
+
+
+def test_latency_decomposition():
+    lat = psmodel.latency(compute_s=0.005, size_bytes=10e6, bandwidth=10e9,
+                          noise_s=0.001)
+    assert lat == pytest.approx(0.005 + 0.001 + 0.001)
+
+
+@given(lam=st.floats(min_value=0.1, max_value=50),
+       es=st.floats(min_value=1e-4, max_value=0.019))
+@settings(max_examples=50, deadline=None)
+def test_kingman_monotone_in_rho(lam, es):
+    g = GG1(arrival_rate=lam, mean_service=es)
+    if g.rho >= 0.999:
+        return
+    g2 = GG1(arrival_rate=lam, mean_service=es * 1.02)
+    if g2.rho >= 1.0:
+        assert g2.mean_wait() == math.inf
+    else:
+        assert g2.mean_wait() >= g.mean_wait()
+
+
+def test_kingman_saturation_inflates_tails():
+    low = GG1(arrival_rate=10, mean_service=0.01)     # rho 0.1
+    high = GG1(arrival_rate=95, mean_service=0.01)    # rho 0.95
+    assert high.tail_inflation() > 5 * low.tail_inflation()
+
+
+def test_service_rate_needed():
+    assert service_rate_needed(70.0, 0.7) == pytest.approx(100.0)

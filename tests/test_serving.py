@@ -1,0 +1,122 @@
+"""Serving engine: continuous batching, paged KV accounting, TTFT metrics,
+and the MPS-quota guardrail hook."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import get_config, reduced
+from repro.serving.engine import ServingEngine
+from repro.serving.kvcache import PagedKVCache
+from repro.serving.metrics import EMA, LatencyWindow
+from repro.serving.request import Request
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = reduced(get_config("stablelm_3b"))
+    return ServingEngine(cfg, max_slots=4, seq_cap=64, seed=0)
+
+
+def drain(eng, max_steps=400):
+    now = 0.0
+    reports = []
+    while eng.has_work() and len(reports) < max_steps:
+        rep = eng.step()
+        now += max(rep.compute_s, 1e-4)
+        eng.finalize_step(rep, now)
+        reports.append(rep)
+    return reports, now
+
+
+def test_engine_completes_all_requests(engine):
+    reqs = [Request(req_id=i, tenant="T1", prompt_len=16, max_new_tokens=4,
+                    arrival=0.0, slo_ms=500.0) for i in range(6)]
+    for r in reqs:
+        assert engine.submit(r)
+    reports, _ = drain(engine)
+    assert all(r.done for r in reqs)
+    assert all(len(r.output_tokens) == r.max_new_tokens for r in reqs)
+    assert all(r.ttft is not None and r.ttft > 0 for r in reqs)
+    assert engine.kv.used_pages == 0          # everything released
+
+
+def test_continuous_batching_interleaves(engine):
+    """New requests join while others are decoding (slot reuse)."""
+    reqs = [Request(req_id=100 + i, tenant="T1", prompt_len=8,
+                    max_new_tokens=6, arrival=0.0) for i in range(8)]
+    for r in reqs:
+        engine.submit(r)
+    reports, _ = drain(engine)
+    kinds = [r.kind for r in reports]
+    # prefills interleave with decodes, not all up front (4 slots, 8 reqs)
+    first_decode = kinds.index("decode")
+    assert "prefill" in kinds[first_decode:]
+
+
+def test_quota_caps_concurrency(engine):
+    engine.set_quota(0.5)
+    assert engine.active_slot_budget == 2
+    engine.set_quota(1.0)
+    assert engine.active_slot_budget == 4
+
+
+def test_admission_rejects_when_pool_full():
+    cfg = reduced(get_config("stablelm_3b"))
+    eng = ServingEngine(cfg, max_slots=2, seq_cap=32, page_size=16)
+    ok = eng.submit(Request(req_id=0, tenant="T1", prompt_len=30,
+                            max_new_tokens=2, arrival=0.0))
+    assert ok
+    # pool is 2*(32/16)=4 pages; request needing 3 more pages won't fit
+    assert not eng.submit(Request(req_id=1, tenant="T1", prompt_len=30,
+                                  max_new_tokens=18, arrival=0.0))
+
+
+# ---------------------------------------------------------------- paging
+def test_paged_kvcache_alloc_grow_release():
+    kv = PagedKVCache(num_pages=8, page_size=16)
+    e = kv.allocate(1, prompt_len=20)          # 2 pages
+    assert len(e.pages) == 2 and kv.used_pages == 2
+    for _ in range(12):
+        kv.append_token(1)
+    assert len(e.pages) == 2                   # 32 tokens fit in 2 pages
+    kv.append_token(1)                         # 33rd token -> 3rd page
+    assert len(e.pages) == 3
+    bt = kv.block_table(1, pages_per_seq=4)
+    assert list(bt[:3]) == e.pages and bt[3] == 0
+    kv.release(1)
+    assert kv.used_pages == 0
+
+
+@given(st.lists(st.integers(min_value=1, max_value=40), min_size=1,
+                max_size=12))
+@settings(max_examples=30, deadline=None)
+def test_paged_kvcache_never_double_allocates(prompt_lens):
+    """Property: no page is owned by two sequences; free+used == pool."""
+    kv = PagedKVCache(num_pages=64, page_size=16)
+    owned = {}
+    for i, pl in enumerate(prompt_lens):
+        if not kv.can_admit(pl, 0):
+            continue
+        e = kv.allocate(i, pl)
+        owned[i] = list(e.pages)
+    all_pages = [p for pages in owned.values() for p in pages]
+    assert len(all_pages) == len(set(all_pages))
+    assert len(all_pages) + len(kv.free) == 64
+
+
+# --------------------------------------------------------------- metrics
+def test_latency_window_quantiles():
+    w = LatencyWindow()
+    for i, v in enumerate(np.linspace(0.001, 0.1, 100)):
+        w.observe(float(i), float(v), slo=0.05)
+    assert w.quantile(0.5) == pytest.approx(0.0505, rel=0.05)
+    assert w.miss_rate(0.05) == pytest.approx(0.5, abs=0.03)
+    assert w.p999() <= 0.1
+
+
+def test_ema_hysteresis_deadband():
+    e = EMA(alpha=0.5, hysteresis=0.10)
+    e.update(100.0)
+    assert e.update(101.0) == 100.0     # within dead-band: ignored
+    assert e.update(200.0) == 150.0     # real move passes through

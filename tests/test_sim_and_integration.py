@@ -1,0 +1,117 @@
+"""End-to-end behaviour: the controller against the discrete-event cluster
+(short runs), reproducing the paper's *directional* claims; plus the
+admission controller and the real serving-engine integration."""
+import numpy as np
+import pytest
+
+from repro.core.admission import (AdmissionConfig, AdmissionController,
+                                  AdmissionVerdict, TenantDemand)
+from repro.core.controller import Controller, ControllerConfig
+from repro.core.kingman import GG1
+from repro.core.policy import PolicyConfig
+from repro.core.profiles import A100_MIG
+from repro.core.topology import Slot, make_p4d_cluster
+from repro.sim.cluster import ClusterSim
+from repro.sim.params import SimParams, default_schedule
+
+
+def controller_factory(**flags):
+    def make(sim):
+        cfg = ControllerConfig(**flags)
+        c = Controller(sim.topo, sim.lattice, sim, cfg)
+        c.register_tenant("T1", "latency", sim.t1_slot, sim.t1_profile)
+        c.register_tenant("T2", "background", sim.t2_slot, A100_MIG["7g.80gb"])
+        c.register_tenant("T3", "background", sim.t3_slot, A100_MIG["2g.20gb"])
+        return c
+    return make
+
+
+@pytest.fixture(scope="module")
+def short_results():
+    p = SimParams(duration_s=900.0, seed=7,
+                  schedule=default_schedule(900.0))
+    static = ClusterSim(p).run()
+    full = ClusterSim(p, controller_factory()).run()
+    return static, full
+
+
+def test_controller_reduces_tail_latency(short_results):
+    static, full = short_results
+    assert full.p99 < static.p99, \
+        f"controller did not improve p99: {full.p99} vs {static.p99}"
+    assert full.miss_rate < static.miss_rate
+
+
+def test_throughput_budget_respected(short_results):
+    """Paper constraint: <= 5% throughput cost."""
+    static, full = short_results
+    assert full.throughput_rps >= 0.93 * static.throughput_rps
+
+
+def test_reconfig_pauses_in_paper_band(short_results):
+    _, full = short_results
+    for pause in full.reconfig_times:
+        assert 8.0 <= pause <= 35.0      # 18 +- 6 s, clamped
+
+
+def test_controller_cpu_overhead_under_2_percent(short_results):
+    _, full = short_results
+    assert full.controller_cpu_frac < 0.02
+
+
+def test_structural_actions_respect_dwell():
+    """Gap between *policy-initiated* structural actions >= dwell.
+    (Rollbacks are validation-driven and exempt, per §2.4.)"""
+    p = SimParams(duration_s=900.0, seed=3, schedule=default_schedule(900.0))
+    sim = ClusterSim(p, controller_factory())
+    sim.run()
+    times = [d.time for d in sim.controller.audit.decisions
+             if d.action in ("move", "reconfigure", "relax")]
+    gaps = np.diff(times)
+    dwell = PolicyConfig().dwell_obs * p.sample_period_s
+    assert all(g >= dwell * 0.9 for g in gaps), gaps
+
+
+def test_ablation_components_all_help():
+    p = SimParams(duration_s=900.0, seed=11, schedule=default_schedule(900.0))
+    static = ClusterSim(p).run()
+    for flags in (dict(enable_mig=True, enable_placement=False,
+                       enable_guardrails=False),
+                  dict(enable_mig=False, enable_placement=True,
+                       enable_guardrails=False),
+                  dict(enable_mig=False, enable_placement=False,
+                       enable_guardrails=True)):
+        res = ClusterSim(p, controller_factory(**flags)).run()
+        assert res.p99 <= static.p99 * 1.05, (flags, res.p99, static.p99)
+
+
+def test_mig_moves_are_rare():
+    """Paper Table 4: < 5 moves/hr."""
+    p = SimParams(duration_s=3600.0, seed=5)
+    sim = ClusterSim(p, controller_factory())
+    res = sim.run()
+    assert res.actions.get("reconfigure", 0) < 5
+    assert res.actions.get("move", 0) < 5
+
+
+# ------------------------------------------------------------- admission
+def test_admission_queue_and_reject():
+    topo = make_p4d_cluster(1)
+    adm = AdmissionController(topo, AdmissionConfig(max_queue=1))
+    placements = {"T1": Slot(0, "h0:g0", 0)}
+    demands = {"T1": TenantDemand("T1", 1e9)}
+    gg1 = {"T1": GG1(arrival_rate=30, mean_service=0.008)}
+    heavy = TenantDemand("T9", 30e9)     # exceeds any root capacity
+    verdict, slot = adm.decide(heavy, placements, demands, gg1,
+                               topo.slots())
+    assert verdict == AdmissionVerdict.QUEUE and slot is None
+    verdict, _ = adm.decide(heavy, placements, demands, gg1, topo.slots())
+    assert verdict == AdmissionVerdict.REJECT
+
+
+def test_admission_admits_light_tenant():
+    topo = make_p4d_cluster(1)
+    adm = AdmissionController(topo)
+    light = TenantDemand("T9", 1e9)
+    verdict, slot = adm.decide(light, {}, {}, {}, topo.slots())
+    assert verdict == AdmissionVerdict.ADMIT and slot is not None

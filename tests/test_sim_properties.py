@@ -1,0 +1,46 @@
+"""Hypothesis property tests on simulator invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.sim.cluster import ClusterSim
+from repro.sim.params import SimParams, default_schedule
+
+
+@given(seed=st.integers(min_value=0, max_value=50))
+@settings(max_examples=5, deadline=None)
+def test_latency_never_below_compute_floor(seed):
+    """Every latency >= the best-case compute time at the largest profile."""
+    p = SimParams(seed=seed, duration_s=300.0,
+                  schedule=default_schedule(300.0))
+    sim = ClusterSim(p)
+    res = sim.run()
+    floor = p.t1_c0_s * (p.t1_ref_units / 7) ** p.t1_gamma
+    assert res.latencies.min() >= floor
+
+
+def test_interference_raises_contended_tail():
+    """With T2/T3 never active, tails are strictly better."""
+    quiet = SimParams(seed=1, duration_s=600.0, schedule=())
+    noisy = SimParams(seed=1, duration_s=600.0,
+                      schedule=default_schedule(600.0))
+    r_q = ClusterSim(quiet).run()
+    r_n = ClusterSim(noisy).run()
+    assert r_q.p99 < r_n.p99
+    assert r_q.miss_rate <= r_n.miss_rate
+
+
+def test_conservation_offered_equals_completed_plus_queue():
+    p = SimParams(seed=3, duration_s=400.0, schedule=default_schedule(400.0))
+    sim = ClusterSim(p)
+    res = sim.run()
+    in_flight = len(sim.t1_queue) + (1 if sim.t1_busy else 0)
+    assert res.offered == res.completed + res.dropped + in_flight
+
+
+def test_determinism_same_seed_same_result():
+    p = SimParams(seed=9, duration_s=300.0, schedule=default_schedule(300.0))
+    a = ClusterSim(p).run()
+    b = ClusterSim(p).run()
+    assert a.completed == b.completed
+    np.testing.assert_array_equal(a.latencies, b.latencies)
