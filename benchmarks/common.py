@@ -4,7 +4,6 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.controller import Controller, ControllerConfig
-from repro.core.profiles import A100_MIG
 from repro.sim.cluster import ClusterSim
 from repro.sim.params import SimParams, default_schedule
 
@@ -27,9 +26,7 @@ def controller_factory(policy_overrides=None, **flags):
             kwargs["policy"] = PolicyConfig(**policy_overrides)
         cfg = ControllerConfig(**kwargs)
         c = Controller(sim.topo, sim.lattice, sim, cfg)
-        c.register_tenant("T1", "latency", sim.t1_slot, sim.t1_profile)
-        c.register_tenant("T2", "background", sim.t2_slot, A100_MIG["7g.80gb"])
-        c.register_tenant("T3", "background", sim.t3_slot, A100_MIG["2g.20gb"])
+        sim.register_tenants(c)
         return c
     return make
 

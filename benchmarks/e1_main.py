@@ -38,5 +38,19 @@ def run(seeds=range(7), duration=3600.0, verbose=True):
     return out
 
 
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seeds", type=int, default=7)
+    ap.add_argument("--duration", type=float, default=3600.0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI config: 2 seeds x 600 s")
+    args = ap.parse_args()
+    if args.smoke:
+        run(seeds=range(2), duration=600.0)
+    else:
+        run(seeds=range(args.seeds), duration=args.duration)
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -42,19 +42,13 @@ def run(seeds=range(3), duration=2400.0, verbose=True):
             def fac(sim, cap_mb=cap_mb):
                 from repro.core.controller import (Controller,
                                                    ControllerConfig)
-                from repro.core.profiles import A100_MIG
                 cfg = ControllerConfig(
                     enable_mig=False, enable_placement=False,
                     enable_guardrails=True,
                     bounds=GuardrailBounds(
                         io_throttle=(cap_mb * 1e6, cap_mb * 1e6)))
                 c = Controller(sim.topo, sim.lattice, sim, cfg)
-                c.register_tenant("T1", "latency", sim.t1_slot,
-                                  sim.t1_profile)
-                c.register_tenant("T2", "background", sim.t2_slot,
-                                  A100_MIG["7g.80gb"])
-                c.register_tenant("T3", "background", sim.t3_slot,
-                                  A100_MIG["2g.20gb"])
+                sim.register_tenants(c)
                 return c
             vals.append(ClusterSim(p, fac).run())
         r = summarise(vals)

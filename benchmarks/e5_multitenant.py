@@ -1,0 +1,158 @@
+"""E5 — Multi-tenant scaling (beyond-paper): N competing SLO tenants x R
+replicas each, driven through the same controller + shared MIG arbiter.
+
+The paper evaluates one latency-sensitive tenant against two interferers;
+this experiment sweeps 2-8 latency tenants (each with R >= 1 batched
+replicas, least-loaded dispatch) co-located with the same ETL/training
+interferer classes, and reports per-tenant miss-rate/p99 plus aggregate
+throughput for static-MIG vs controlled.  The arbiter audit proves the
+per-GPU compute-unit budget (7) is never exceeded while lanes compete for
+upgrades (the MIG-serving / ParvaGPU regime).
+
+    PYTHONPATH=src:. python benchmarks/e5_multitenant.py \
+        [--tenants 2,4,8] [--replicas 1,2] [--duration 900] [--seed 0] \
+        [--out e5.json] [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.core.controller import Controller, ControllerConfig
+from repro.core.tenancy import TenantRegistry
+from repro.sim.cluster import ClusterSim
+from repro.sim.params import InterferenceWindow, SimParams
+
+
+def fleet_schedule(duration: float) -> tuple:
+    """The paper's toggling-interference cadence, addressed to the fleet's
+    interferer names (ETL / TRAIN)."""
+    out = []
+    t = 60.0
+    while t + 230 < duration:
+        out.append(InterferenceWindow("ETL", t, t + 150))
+        out.append(InterferenceWindow("TRAIN", t + 75, t + 225))
+        t += 300.0
+    return tuple(out)
+
+
+def make_params(n_tenants: int, replicas: int, duration: float,
+                seed: int) -> SimParams:
+    reg = TenantRegistry.slo_fleet(n_tenants, replicas)
+    return SimParams(seed=seed, duration_s=duration,
+                     schedule=fleet_schedule(duration),
+                     tenants=tuple(reg))
+
+
+def controlled_factory(sim):
+    c = Controller(sim.topo, sim.lattice, sim, ControllerConfig())
+    sim.register_tenants(c)
+    return c
+
+
+def tenant_rows(res) -> dict:
+    return {name: {
+        "miss_rate": round(t.miss_rate, 5),
+        "p99_ms": round(t.p99 * 1e3, 3),
+        "p95_ms": round(t.p95 * 1e3, 3),
+        "completed": t.completed,
+        "dropped": t.dropped,
+        "throughput_rps": round(t.throughput_rps, 3),
+        "replicas": t.replicas,
+    } for name, t in res.tenants.items()}
+
+
+def run_cell(n_tenants: int, replicas: int, duration: float,
+             seed: int) -> dict:
+    p = make_params(n_tenants, replicas, duration, seed)
+    static = ClusterSim(p).run()
+    controlled = ClusterSim(p, controlled_factory).run()
+    improved = sum(
+        1 for name in controlled.tenants
+        if controlled.tenants[name].miss_rate
+        <= static.tenants[name].miss_rate)
+    return {
+        "tenants": n_tenants,
+        "replicas": replicas,
+        "static": {"per_tenant": tenant_rows(static),
+                   "aggregate_rps": round(static.aggregate_rps, 3)},
+        "controlled": {"per_tenant": tenant_rows(controlled),
+                       "aggregate_rps": round(controlled.aggregate_rps, 3),
+                       "actions": controlled.actions},
+        "arbiter": {
+            "max_units_per_gpu": controlled.arbiter_max_units,
+            "budget": controlled.arbiter_budget,
+            "ok": controlled.arbiter_max_units <= controlled.arbiter_budget,
+        },
+        "tenants_not_worse": improved,
+    }
+
+
+def run(tenant_counts=(2, 4, 8), replica_counts=(1, 2), duration=900.0,
+        seed=0, verbose=True) -> dict:
+    sweep = []
+    for n in tenant_counts:
+        for r in replica_counts:
+            cell = run_cell(n, r, duration, seed)
+            sweep.append(cell)
+            if verbose:
+                ctl = cell["controlled"]["per_tenant"]
+                worst = max(v["miss_rate"] for v in ctl.values())
+                print(f"  N={n} R={r}: aggregate "
+                      f"{cell['static']['aggregate_rps']:.1f} -> "
+                      f"{cell['controlled']['aggregate_rps']:.1f} rps, "
+                      f"worst controlled miss={worst*100:.2f}%, "
+                      f"{cell['tenants_not_worse']}/{n} tenants not worse, "
+                      f"arbiter peak {cell['arbiter']['max_units_per_gpu']}"
+                      f"/{cell['arbiter']['budget']}u "
+                      f"(ok={cell['arbiter']['ok']})")
+    out = {
+        "experiment": "e5_multitenant",
+        "duration_s": duration,
+        "seed": seed,
+        "sweep": sweep,
+        "budget_respected": all(c["arbiter"]["ok"] for c in sweep),
+    }
+    if verbose:
+        print(f"  per-GPU unit budget respected everywhere: "
+              f"{out['budget_respected']}")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tenants", default="2,4,8",
+                    help="comma-separated latency-tenant counts")
+    ap.add_argument("--replicas", default="1,2",
+                    help="comma-separated replica counts")
+    ap.add_argument("--duration", type=float, default=900.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None, help="write JSON here")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI config: 4 tenants x 2 replicas, 240 s")
+    args = ap.parse_args()
+    if args.smoke:
+        tenant_counts, replica_counts = (4,), (2,)
+        duration = 240.0
+    else:
+        try:
+            tenant_counts = tuple(int(x) for x in args.tenants.split(","))
+            replica_counts = tuple(int(x) for x in args.replicas.split(","))
+        except ValueError:
+            ap.error("--tenants/--replicas take comma-separated integers, "
+                     f"e.g. --tenants 2,4,8 (got {args.tenants!r} / "
+                     f"{args.replicas!r})")
+        duration = args.duration
+    print("== E5: multi-tenant scaling (N SLO tenants x R replicas) ==")
+    out = run(tenant_counts, replica_counts, duration, args.seed)
+    payload = json.dumps(out, indent=2)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(payload)
+        print(f"wrote {args.out}")
+    else:
+        print(payload)
+
+
+if __name__ == "__main__":
+    main()

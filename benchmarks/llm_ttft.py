@@ -29,9 +29,16 @@ from repro.sim.params import default_schedule
 
 
 def run(duration=1800.0, qps=1.75, seed=0, with_controller=True,
-        verbose=True, compute_scale_7b=34.0):
+        verbose=True, compute_scale_7b=34.0, auto_calibrate=False):
     """Virtual-time serving loop.  compute_scale_7b maps the reduced
-    model's measured prefill compute to the 7B-on-A100 operating point."""
+    model's measured prefill compute to the 7B-on-A100 operating point.
+
+    The fixed scale assumes the calibration host's CPU speed; on slower
+    machines the measured compute (x34) alone can exceed the 200 ms SLO
+    and the case study degenerates.  ``auto_calibrate=True`` instead
+    derives the scale from the warm prefill measurements so the static
+    operating point lands at ~120 ms virtual prefill (paper Table 2's
+    232 ms p99 under queueing + interference) on any host."""
     cfg = reduced(get_config("olmo2_7b"))
     engine = ServingEngine(cfg, max_slots=8, seq_cap=128, seed=seed)
     fabric = FabricState()
@@ -66,6 +73,20 @@ def run(duration=1800.0, qps=1.75, seed=0, with_controller=True,
                               max_new_tokens=2, arrival=0.0))
     while engine.has_work():
         engine.finalize_step(engine.step(), 0.0)
+    if auto_calibrate:
+        # measure warm prefill compute on THIS host and target ~120 ms
+        # virtual prefill at the static profile
+        samples = []
+        for j, pl_ in enumerate((32, 64, 96)):
+            engine.submit(Request(req_id=-20 - j, tenant="T1",
+                                  prompt_len=pl_, max_new_tokens=2,
+                                  arrival=0.0))
+        while engine.has_work():
+            rep = engine.step()
+            if rep.kind == "prefill":
+                samples.append(rep.compute_s)
+            engine.finalize_step(rep, 0.0)
+        compute_scale_7b = 0.120 / float(np.mean(samples))
 
     def t2_active_at(t):
         return any(w.tenant == "T2" and w.start <= t < w.end

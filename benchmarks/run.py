@@ -5,6 +5,7 @@
 E1  main experiment (Fig 3/4)        — controller vs static
 E2  ablation (Table 3)               — component contributions
 E3  sensitivity (§3.3.3)             — tau / Y / guardrail bounds
+E5  multi-tenant scaling             — N SLO tenants x R replicas + arbiter
 LLM TTFT case study (Table 2)        — real engine + PS fabric
 Overheads (Table 4)                  — reconfig s, moves/hr, CPU%
 Kernels                              — Pallas microbench (interpret)
@@ -22,7 +23,8 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="3 seeds / shorter runs (CI mode)")
     ap.add_argument("--only", default=None,
-                    help="comma list: e1,e2,e3,llm,overheads,kernels,roofline")
+                    help="comma list: e1,e2,e3,e4,e5,llm,overheads,"
+                         "kernels,roofline")
     args = ap.parse_args()
     seeds = range(3) if args.quick else range(7)
     duration = 1800.0 if args.quick else 3600.0
@@ -33,8 +35,8 @@ def main() -> None:
 
     t0 = time.time()
     from benchmarks import (e1_main, e2_ablation, e3_sensitivity,
-                            e4_predictive, kernel_bench, llm_ttft,
-                            overheads, roofline)
+                            e4_predictive, e5_multitenant, kernel_bench,
+                            llm_ttft, overheads, roofline)
 
     if want("e1"):
         e1_main.run(seeds=seeds, duration=duration)
@@ -49,6 +51,13 @@ def main() -> None:
     if want("e4"):
         e4_predictive.run(seeds=range(3) if args.quick else range(5),
                           duration=min(duration, 2400.0))
+        print()
+    if want("e5"):
+        print("== E5: multi-tenant scaling ==")
+        e5_multitenant.run(
+            tenant_counts=(2, 4) if args.quick else (2, 4, 8),
+            replica_counts=(1, 2),
+            duration=600.0 if args.quick else 900.0)
         print()
     if want("llm"):
         llm_ttft.main()

@@ -7,7 +7,6 @@ log and the post-change validation verdicts.
 import numpy as np
 
 from repro.core.controller import Controller, ControllerConfig
-from repro.core.profiles import A100_MIG
 from repro.sim.cluster import ClusterSim
 from repro.sim.params import SimParams, default_schedule
 
@@ -16,9 +15,7 @@ DURATION = 1500.0
 
 def factory(sim):
     c = Controller(sim.topo, sim.lattice, sim, ControllerConfig())
-    c.register_tenant("T1", "latency", sim.t1_slot, sim.t1_profile)
-    c.register_tenant("T2", "background", sim.t2_slot, A100_MIG["7g.80gb"])
-    c.register_tenant("T3", "background", sim.t3_slot, A100_MIG["2g.20gb"])
+    sim.register_tenants(c)      # the paper 3-tenant registry, as data
     return c
 
 
@@ -43,4 +40,6 @@ for d in sim.controller.audit.decisions:
 print(f"\nfinal: p99={res.p99*1e3:.2f} ms, miss={res.miss_rate*100:.2f}%, "
       f"throughput={res.throughput_rps:.2f} rps "
       f"({res.dropped} load-shed during reconfigs)")
-print(f"T1 ended on {sim.t1_slot.key} with profile {sim.t1_profile.name}")
+t1 = sim.tenant("T1")
+print(f"T1 ended on {t1.replicas[0].slot.key} with profile "
+      f"{t1.profile.name}")

@@ -46,16 +46,13 @@ print(f"  served 6 requests, p99 TTFT = "
 # ----------------------------------------------------- 3. controller layer
 print("== 3. multi-tenancy controller (paper core) ==")
 from repro.core.controller import Controller, ControllerConfig
-from repro.core.profiles import A100_MIG
 from repro.sim.cluster import ClusterSim
 from repro.sim.params import SimParams, default_schedule
 
 
 def factory(sim):
     c = Controller(sim.topo, sim.lattice, sim, ControllerConfig())
-    c.register_tenant("T1", "latency", sim.t1_slot, sim.t1_profile)
-    c.register_tenant("T2", "background", sim.t2_slot, A100_MIG["7g.80gb"])
-    c.register_tenant("T3", "background", sim.t3_slot, A100_MIG["2g.20gb"])
+    sim.register_tenants(c)      # the paper 3-tenant registry, as data
     return c
 
 

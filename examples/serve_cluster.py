@@ -1,6 +1,8 @@
-"""End-to-end serving driver (the paper's kind of workload): serve a small
-model with batched requests under PCIe-class interference, with and
-without the controller — the Table 2 scenario at example scale.
+"""End-to-end serving driver (the paper's kind of workload): serve small
+models with batched requests under PCIe-class interference, with and
+without the controller — the Table 2 scenario at example scale, then the
+multi-tenant generalization: two SLO tenants, each with two engine
+replicas, sharing one fabric and one controller.
 
     PYTHONPATH=src python examples/serve_cluster.py
 """
@@ -9,13 +11,18 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 from benchmarks.llm_ttft import run
 
+print("== 1. single tenant (paper Table 2 scenario, reduced scale) ==")
 print("serving OLMo-2 (reduced) under T2/T3 interference, 600 virtual s...")
-static = run(duration=600.0, with_controller=False, verbose=False)
+# auto_calibrate: derive the 7B compute scale from this host's measured
+# prefill so the operating point matches the paper on any CPU speed
+static = run(duration=600.0, with_controller=False, verbose=False,
+             auto_calibrate=True)
 print(f"  static MIG : TTFT p99 = {static['ttft_p99_ms']:6.1f} ms, "
       f"miss = {static['miss_rate']*100:4.1f}%, "
       f"thr = {static['throughput_rps']:.2f} rps")
 
-full = run(duration=600.0, with_controller=True, verbose=False)
+full = run(duration=600.0, with_controller=True, verbose=False,
+           auto_calibrate=True)
 norm = full["throughput_rps"] / max(static["throughput_rps"], 1e-9)
 print(f"  controlled : TTFT p99 = {full['ttft_p99_ms']:6.1f} ms, "
       f"miss = {full['miss_rate']*100:4.1f}%, "
@@ -24,3 +31,13 @@ print(f"  controller actions: {full['actions']}")
 print(f"  TTFT p99 reduction: "
       f"{(1 - full['ttft_p99_ms']/max(static['ttft_p99_ms'],1e-9))*100:.1f}% "
       f"(paper Table 2: ~14%)")
+
+print()
+print("== 2. two SLO tenants x two replicas, one controller ==")
+from repro.launch.serve import serve
+
+out = serve(arch="stablelm_3b", requests=16, qps=6.0, prompt_len=32,
+            max_new=4, slots=4, num_tenants=2, replicas=2,
+            interfere=True, with_controller=True, seed=0)
+print(f"  arbiter peak units/GPU: {out.get('arbiter_max_units', 0)} "
+      f"(budget 7)")

@@ -49,11 +49,13 @@ class AuditLog:
         cfg = self._last_known_good.get(tenant)
         return cfg.copy() if cfg is not None else None
 
-    def set_validation(self, ok: bool) -> None:
+    def set_validation(self, ok: bool, tenant: Optional[str] = None) -> None:
         """Attach the validation verdict to the most recent structural
-        decision (reconfigure/move/relax)."""
+        decision (reconfigure/move/relax), optionally restricted to one
+        tenant's lane (multi-tenant controllers validate per lane)."""
         for d in reversed(self.decisions):
-            if d.action in ("reconfigure", "move", "relax"):
+            if d.action in ("reconfigure", "move", "relax") and \
+                    (tenant is None or d.tenant == tenant):
                 d.validated = ok
                 return
 

@@ -6,22 +6,28 @@ touches jax device state (smoke tests must keep seeing 1 CPU device).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:                                   # jax >= 0.4.38
+    from jax.sharding import AxisType
+
+    def _mesh_kwargs(n_axes: int) -> dict:
+        return {"axis_types": (AxisType.Auto,) * n_axes}
+except ImportError:                    # older jax: Auto is the only mode
+    def _mesh_kwargs(n_axes: int) -> dict:
+        return {}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_mesh_kwargs(len(axes)))
 
 
 def make_local_mesh():
     """Single-device mesh for CPU smoke runs of the distributed code path."""
     n = jax.device_count()
-    return jax.make_mesh((n, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return jax.make_mesh((n, 1), ("data", "model"), **_mesh_kwargs(2))
 
 
 def batch_axes(mesh) -> tuple:

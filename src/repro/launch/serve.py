@@ -1,31 +1,27 @@
-"""Serving launcher: engine + controller co-deployed (the paper's
-first-class integration).
+"""Serving launcher: engines + controller co-deployed (the paper's
+first-class integration), generalized to N latency tenants x R replicas.
 
     PYTHONPATH=src python -m repro.launch.serve --arch stablelm_3b \
-        --requests 32 --qps 4 [--interfere] [--no-controller]
+        --requests 32 --qps 4 [--tenants 2] [--replicas 2] \
+        [--interfere] [--no-controller]
 
-Runs the continuous-batching engine on the reduced config, with the PS
-fabric model injecting PCIe-class interference when --interfere is set,
-and the (unchanged) multi-tenancy controller managing quotas/placement/
-slice profiles around it.
+Runs one continuous-batching engine per tenant-replica on the reduced
+config, all sharing a FabricState (the PS fabric model injects PCIe-class
+interference when --interfere is set), with the multi-tenancy controller
+steering quotas, placements and slice profiles per tenant.  Virtual time:
+replicas run in parallel — each engine owns an availability clock and the
+global clock advances to the next event (arrival, sample, step finish).
 """
 from __future__ import annotations
 
 import argparse
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="stablelm_3b")
-    ap.add_argument("--requests", type=int, default=32)
-    ap.add_argument("--qps", type=float, default=4.0)
-    ap.add_argument("--prompt-len", type=int, default=48)
-    ap.add_argument("--max-new", type=int, default=8)
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--interfere", action="store_true")
-    ap.add_argument("--no-controller", action="store_true")
-    args = ap.parse_args()
-
+def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
+          prompt_len: int = 48, max_new: int = 8, slots: int = 4,
+          num_tenants: int = 1, replicas: int = 1, interfere: bool = False,
+          with_controller: bool = True, seed: int = 0, verbose: bool = True):
+    """Virtual-time multi-tenant serving run; returns per-tenant stats."""
     import numpy as np
     from repro.configs.base import get_config, reduced
     from repro.serving.engine import ServingEngine
@@ -38,73 +34,207 @@ def main():
     from repro.core.topology import Slot, make_p4d_cluster
     from repro.serving.metrics import LatencyWindow
 
-    cfg = reduced(get_config(args.arch))
-    eng = ServingEngine(cfg, max_slots=args.slots, seq_cap=128)
+    if num_tenants < 1 or replicas < 1:
+        raise SystemExit("--tenants and --replicas must be >= 1")
+    cfg = reduced(get_config(arch))
+    names = ["T1"] if num_tenants == 1 else [f"L{i}"
+                                             for i in range(num_tenants)]
+    engines = {name: [ServingEngine(cfg, max_slots=slots, seq_cap=128,
+                                    seed=seed + 17 * i + j)
+                      for j in range(replicas)]
+               for i, name in enumerate(names)}
     fabric = FabricState()
-    fabric.t2_active = args.interfere
+    fabric.t2_active = interfere
     topo = make_p4d_cluster(2)
+    # Spread tenant-replicas over the topology's real slots (2 per
+    # device), skipping the background tenants' fixed slots, breadth-
+    # first across devices so no GPU hosts more than 2 x 2g.20gb slices
+    # (4 units, within the arbiter's 7-unit budget).  The first devices
+    # sit on the contended root; the rest see only ambient traffic.
+    total = num_tenants * replicas
+    reserved = {("h0:g1", 0), ("h0:g0", 1)}      # T2 / T3 below
+    pool = [f"h{h}:g{d}" for h in range(2) for d in range(8)]
+    free = [Slot(int(dev[1]), dev, idx)
+            for idx in range(2) for dev in pool
+            if (dev, idx) not in reserved]
+    if total > len(free):
+        raise SystemExit(
+            f"{total} tenant-replicas exceed the cluster's capacity "
+            f"({len(free)} free 2g slices)")
+    placements = {}
+    k = 0
+    for name in names:
+        placements[name] = free[k:k + replicas]
+        k += replicas
+        # only tenants with a replica on the contended root (r0 = g0/g1)
+        # share the hot fabric path
+        fabric.set_on_root(name, any(r.device in ("h0:g0", "h0:g1")
+                                     for r in placements[name]))
     now = [0.0]
-    actuator = ServingActuator(eng, fabric, topo, lambda: now[0])
-    window = LatencyWindow()
+    actuator = ServingActuator(engines, fabric, topo, lambda: now[0])
+    windows = {name: LatencyWindow() for name in names}
+
     controller = None
-    if not args.no_controller:
+    if with_controller:
         controller = Controller(topo, A100_MIG, actuator,
                                 ControllerConfig(policy=PolicyConfig(
                                     tau_s=0.200, persistence=2,
                                     dwell_obs=20, cooldown_obs=10)))
-        controller.register_tenant("T1", "latency", Slot(0, "h0:g0", 0),
-                                   A100_MIG["2g.20gb"])
+        for i, name in enumerate(names):
+            reps = placements[name]
+            controller.register_tenant(name, "latency", reps[0],
+                                       A100_MIG["2g.20gb"],
+                                       priority=1.0 + 0.25 * i,
+                                       replicas=reps)
         controller.register_tenant("T2", "background", Slot(0, "h0:g1", 0),
                                    A100_MIG["7g.80gb"])
         controller.register_tenant("T3", "background", Slot(0, "h0:g0", 1),
                                    A100_MIG["2g.20gb"])
 
     # warm the jit caches so compile time never enters the virtual clock
-    eng.submit(Request(req_id=-1, tenant="T1", prompt_len=args.prompt_len,
-                       max_new_tokens=2, arrival=0.0))
-    while eng.has_work():
-        eng.finalize_step(eng.step(), 0.0)
+    for name in names:
+        for eng in engines[name]:
+            eng.submit(Request(req_id=-1, tenant=name,
+                               prompt_len=prompt_len, max_new_tokens=2,
+                               arrival=0.0))
+            while eng.has_work():
+                eng.finalize_step(eng.step(), 0.0)
 
-    rng = np.random.default_rng(0)
-    arrivals = np.cumsum(rng.exponential(1.0 / args.qps, args.requests))
-    reqs = [Request(req_id=i, tenant="T1", prompt_len=args.prompt_len,
-                    max_new_tokens=args.max_new, arrival=float(t),
-                    slo_ms=200.0) for i, t in enumerate(arrivals)]
-    pending = list(reqs)
+    rng = np.random.default_rng(seed)
+    reqs = {name: [] for name in names}
+    pending = {}
+    for name in names:
+        arrivals = np.cumsum(rng.exponential(1.0 / qps, requests))
+        reqs[name] = [Request(req_id=i, tenant=name, prompt_len=prompt_len,
+                              max_new_tokens=max_new, arrival=float(t),
+                              slo_ms=200.0) for i, t in enumerate(arrivals)]
+        pending[name] = list(reqs[name])
+    shed = {name: 0 for name in names}
+    # per-engine availability clock: engines run in parallel
+    avail = {(name, j): 0.0 for name in names for j in range(replicas)}
     next_sample = 1.0
-    print(f"serving {cfg.name}: {args.requests} requests at {args.qps} qps "
-          f"(interference={'on' if args.interfere else 'off'}, "
-          f"controller={'off' if args.no_controller else 'on'})")
-    while pending or eng.has_work():
-        while pending and pending[0].arrival <= now[0]:
-            eng.submit(pending.pop(0))
+    if verbose:
+        print(f"serving {cfg.name}: {len(names)} tenant(s) x {replicas} "
+              f"replica(s), {requests} req/tenant at {qps} qps "
+              f"(interference={'on' if interfere else 'off'}, "
+              f"controller={'on' if with_controller else 'off'})")
+
+    def submit_due():
+        for name in names:
+            while pending[name] and pending[name][0].arrival <= now[0]:
+                r = pending[name].pop(0)
+                if r.arrival < actuator.paused_until(name):
+                    shed[name] += 1         # load-shed during reconfigs
+                    continue
+                # least-loaded replica dispatch
+                engs = engines[name]
+                j = min(range(len(engs)),
+                        key=lambda k: len(engs[k].queue) +
+                        len(engs[k].active()))
+                engs[j].submit(r)
+
+    def has_pending():
+        return any(pending[n] for n in names) or \
+            any(e.has_work() for n in names for e in engines[n])
+
+    while has_pending():
+        submit_due()
         if controller and now[0] >= next_sample:
-            t1 = TenantSignals(p99=window.quantile(0.99, now[0]),
-                               miss_rate=window.miss_rate(0.2, now[0]),
-                               rps=1.0)
+            tenants = {}
+            for name in names:
+                w = windows[name]
+                tenants[name] = TenantSignals(
+                    p99=w.quantile(0.99, now[0]),
+                    miss_rate=w.miss_rate(0.2, now[0]), rps=1.0,
+                    ttft_p99=w.quantile(0.99, now[0]))
             sys = SystemSignals()
             for root in topo.roots():
                 sys.pcie_bytes[root] = (fabric.t2_demand if fabric.t2_active
                                         and root == "h0:r0" else 1e9)
-            controller.on_snapshot(Snapshot(now[0], {"T1": t1}, sys))
+            controller.on_snapshot(Snapshot(now[0], tenants, sys))
             next_sample += 1.0
-        rep = eng.step()
-        if rep.kind == "idle":
-            now[0] += 0.02
+        # step every engine that is free, has work, and isn't paused
+        stepped = False
+        for name in names:
+            if now[0] < actuator.paused_until(name):
+                continue
+            for j, eng in enumerate(engines[name]):
+                if avail[(name, j)] > now[0] or not eng.has_work():
+                    continue
+                rep = eng.step()
+                if rep.kind == "idle":
+                    continue
+                transfer = (rep.tokens * 0.4e6 / fabric.bandwidth(name)
+                            if rep.kind == "prefill" else 0.0)
+                dur = rep.compute_s * actuator.compute_scale_of(name) \
+                    + transfer
+                end = now[0] + dur
+                avail[(name, j)] = end
+                eng.finalize_step(rep, end)
+                if rep.prefilled is not None:
+                    windows[name].observe(end, rep.prefilled.ttft, slo=0.2)
+                stepped = True
+        if stepped:
             continue
-        transfer = (rep.tokens * 0.4e6 / fabric.t1_bandwidth()
-                    if rep.kind == "prefill" else 0.0)
-        now[0] += rep.compute_s * actuator.compute_scale + transfer
-        eng.finalize_step(rep, now[0])
-        if rep.prefilled is not None:
-            window.observe(now[0], rep.prefilled.ttft, slo=0.2)
-    done = [r for r in reqs if r.done]
-    ttfts = np.array([r.ttft for r in done]) * 1e3
-    print(f"completed {len(done)}/{args.requests} "
-          f"TTFT p50={np.quantile(ttfts, .5):.1f}ms "
-          f"p99={np.quantile(ttfts, .99):.1f}ms")
+        # nothing runnable now: hop to the next event
+        horizon = []
+        for name in names:
+            if pending[name]:
+                horizon.append(pending[name][0].arrival)
+            if now[0] < actuator.paused_until(name) and \
+                    any(e.has_work() for e in engines[name]):
+                horizon.append(actuator.paused_until(name))
+        horizon.extend(t for t in avail.values() if t > now[0])
+        if controller:
+            horizon.append(next_sample)
+        now[0] = min(horizon) if horizon else now[0] + 0.02
+
+    out = {}
+    for name in names:
+        done = [r for r in reqs[name] if r.done]
+        ttfts = np.array([r.ttft for r in done]) * 1e3
+        itls = [v for r in done for v in r.itls]
+        out[name] = {
+            "completed": len(done),
+            "offered": requests,
+            "shed": shed[name],
+            "ttft_p50_ms": float(np.quantile(ttfts, .5)) if len(done) else 0.0,
+            "ttft_p99_ms": float(np.quantile(ttfts, .99)) if len(done) else 0.0,
+            "itl_p99_ms": (float(np.quantile(np.array(itls) * 1e3, .99))
+                           if itls else 0.0),
+        }
+        if verbose:
+            print(f"  {name}: completed {len(done)}/{requests} "
+                  f"TTFT p50={out[name]['ttft_p50_ms']:.1f}ms "
+                  f"p99={out[name]['ttft_p99_ms']:.1f}ms "
+                  f"ITL p99={out[name]['itl_p99_ms']:.1f}ms")
     if controller:
-        print("controller actions:", controller.audit.counts())
+        out["actions"] = controller.audit.counts()
+        out["arbiter_max_units"] = controller.arbiter.max_used()
+        if verbose:
+            print("controller actions:", out["actions"])
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm_3b")
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--qps", type=float, default=4.0)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--tenants", type=int, default=1)
+    ap.add_argument("--replicas", type=int, default=1)
+    ap.add_argument("--interfere", action="store_true")
+    ap.add_argument("--no-controller", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    serve(arch=args.arch, requests=args.requests, qps=args.qps,
+          prompt_len=args.prompt_len, max_new=args.max_new,
+          slots=args.slots, num_tenants=args.tenants,
+          replicas=args.replicas, interfere=args.interfere,
+          with_controller=not args.no_controller, seed=args.seed)
 
 
 if __name__ == "__main__":

@@ -1,15 +1,22 @@
-"""Serving-side controller actuator: the real JAX engine + PS fabric.
+"""Serving-side controller actuator: real JAX engines + PS fabric.
 
-FabricState models the shared PCIe/ICI path with the paper's PS law;
-ServingActuator implements the controller Actuator protocol over a live
-ServingEngine (quota <-> MPS, io throttle <-> pipeline cap, move <->
-fabric path, reconfigure <-> slice compute scale with a paused re-lower).
-Used by benchmarks/llm_ttft.py and repro.launch.serve.
+FabricState models the shared PCIe/ICI path with the paper's PS law, now
+per-tenant: every latency tenant that still sits on the contended root
+complex shares the fabric with the ETL stream *and with each other*.
+ServingActuator implements the controller Actuator protocol over one or
+more live ServingEngines — one engine per tenant-replica, all sharing the
+FabricState — mapping quota <-> MPS, io throttle <-> pipeline cap,
+move <-> fabric path, reconfigure <-> slice compute scale with a paused
+re-lower.  Used by benchmarks/llm_ttft.py and repro.launch.serve.
+
+Single-tenant call sites keep working: passing one engine wraps it as
+tenant "T1", and the legacy ``compute_scale`` / ``pause_until`` /
+``t1_bandwidth`` views read that tenant's state.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Optional
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Union
 
 import numpy as np
 
@@ -25,60 +32,132 @@ class FabricState:
     t2_active: bool = False
     io_throttle: Optional[float] = None
     throttle_residual: float = 0.6
-    on_shared_root: bool = True           # until the controller moves T1
+    on_shared_root: bool = True           # legacy single-tenant flag ("T1")
+    # per-tenant root membership: tenant -> still on the contended root
+    shared_tenants: Dict[str, bool] = field(default_factory=dict)
+    # offered PCIe demand of a sibling latency tenant: they are mostly-
+    # idle DMA streams, so they compete as *throttled* flows (the same
+    # modelling choice as ClusterSim._bandwidth), not saturating ones
+    sibling_demand: float = 5e9
 
-    def t1_bandwidth(self) -> float:
-        demands = {"T1": psmodel.Demand(weight=1.0)}
-        if self.t2_active and self.on_shared_root:
-            eff = self.t2_demand if self.io_throttle is None else \
-                self.t2_demand * self.throttle_residual + self.io_throttle
-            demands["T2"] = psmodel.Demand(weight=self.t2_ps_weight,
-                                           throttle=eff)
+    def set_on_root(self, tenant: str, on: bool) -> None:
+        self.shared_tenants[tenant] = on
+        if tenant == "T1":
+            self.on_shared_root = on
+
+    def _on_root(self, tenant: str) -> bool:
+        return self.shared_tenants.get(tenant, self.on_shared_root)
+
+    def bandwidth(self, tenant: str) -> float:
+        """PS share of ``tenant`` on its current root complex."""
+        demands = {tenant: psmodel.Demand(weight=1.0)}
+        if self._on_root(tenant):
+            if self.t2_active:
+                eff = self.t2_demand if self.io_throttle is None else \
+                    self.t2_demand * self.throttle_residual + self.io_throttle
+                demands["T2"] = psmodel.Demand(weight=self.t2_ps_weight,
+                                               throttle=eff)
+            # sibling latency tenants still on the shared root compete too
+            for other, on in self.shared_tenants.items():
+                if on and other != tenant:
+                    demands[other] = psmodel.Demand(
+                        weight=1.0, throttle=self.sibling_demand)
         else:
             demands["amb"] = psmodel.Demand(weight=1.0, throttle=10e9)
-        return psmodel.ps_shares_waterfill(demands, self.pcie_capacity)["T1"]
+        return psmodel.ps_shares_waterfill(demands,
+                                           self.pcie_capacity)[tenant]
+
+    def t1_bandwidth(self) -> float:
+        return self.bandwidth("T1")
+
+
+EngineMap = Dict[str, List[ServingEngine]]
 
 
 class ServingActuator:
-    """Controller Actuator over the real engine + fabric model."""
+    """Controller Actuator over live engines + the shared fabric model.
 
-    def __init__(self, engine: ServingEngine, fabric: FabricState,
-                 topo, clock):
-        self.engine = engine
+    ``engines`` is either a single ServingEngine (wrapped as tenant "T1")
+    or a dict tenant -> engine | [engine per replica].
+    """
+
+    def __init__(self, engines: Union[ServingEngine, EngineMap],
+                 fabric: FabricState, topo, clock, ref_units: int = 2):
+        if isinstance(engines, ServingEngine):
+            engines = {"T1": [engines]}
+        self.engines: EngineMap = {
+            t: list(e) if isinstance(e, (list, tuple)) else [e]
+            for t, e in engines.items()}
         self.fabric = fabric
         self.topo = topo
         self.clock = clock
-        self.compute_scale = 1.0          # MIG-profile compute multiplier
-        self.ref_units = 2
-        self.pause_until = 0.0
-        self.reconfigs = []
+        self.ref_units = ref_units
+        self.compute_scales: Dict[str, float] = {
+            t: 1.0 for t in self.engines}     # MIG-profile compute multiplier
+        self.pauses: Dict[str, float] = {t: 0.0 for t in self.engines}
+        self.reconfigs: List[float] = []
+        self._occupied = ("h0:g0", "h0:g1")
 
+    # ------------------------------------------------- single-tenant views
+    @property
+    def _first(self) -> str:
+        return next(iter(self.engines))
+
+    @property
+    def engine(self) -> ServingEngine:
+        return self.engines[self._first][0]
+
+    @property
+    def compute_scale(self) -> float:
+        return self.compute_scales.get("T1",
+                                       self.compute_scales[self._first])
+
+    @property
+    def pause_until(self) -> float:
+        return self.pauses.get("T1", self.pauses[self._first])
+
+    # --------------------------------------------------- per-tenant access
+    def tenant_engines(self, tenant: str) -> List[ServingEngine]:
+        return self.engines.get(tenant, self.engines[self._first])
+
+    def compute_scale_of(self, tenant: str) -> float:
+        return self.compute_scales.get(tenant, 1.0)
+
+    def paused_until(self, tenant: str) -> float:
+        return self.pauses.get(tenant, 0.0)
+
+    # ------------------------------------------------------------ Actuator
     def reconfigure(self, tenant, profile):
         pause = max(8.0, np.random.default_rng(0).normal(18.0, 3.0))
-        self.compute_scale = (self.ref_units / profile.compute_units) ** 0.35
-        self.pause_until = max(self.pause_until, self.clock() + pause)
+        scale = (self.ref_units / profile.compute_units) ** 0.35
+        key = tenant if tenant in self.engines else self._first
+        self.compute_scales[key] = scale
+        self.pauses[key] = max(self.pauses.get(key, 0.0),
+                               self.clock() + pause)
         self.reconfigs.append(pause)
         return pause
 
     def move(self, tenant, slot):
-        self.fabric.on_shared_root = False
-        self.pause_until = max(self.pause_until, self.clock() + 2.0)
+        self.fabric.set_on_root(tenant if tenant in self.engines
+                                else self._first, False)
+        key = tenant if tenant in self.engines else self._first
+        self.pauses[key] = max(self.pauses.get(key, 0.0),
+                               self.clock() + 2.0)
         return 2.0
 
     def set_io_throttle(self, tenant, bytes_per_s):
         self.fabric.io_throttle = bytes_per_s
 
     def set_mps_quota(self, tenant, frac):
-        self.engine.set_quota(max(frac, 0.5))
+        for eng in self.tenant_engines(tenant):
+            eng.set_quota(max(frac, 0.5))
 
     def pin_cpu_away_from_irq(self, tenant):
         pass
 
     def free_slots(self):
         return [s for s in self.topo.slots()
-                if s.device not in ("h0:g0", "h0:g1")]
+                if s.device not in self._occupied]
 
     def headroom_units(self, device: str) -> int:
         return 2 if device == "h0:g0" else 4
-
-

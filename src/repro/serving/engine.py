@@ -123,7 +123,13 @@ class ServingEngine:
             self.metrics.latency.observe(end_time, (end_time - req.arrival),
                                          slo=(req.slo_ms or 0) / 1e3 or None)
         for req in report.decoded:
-            pass
+            # per-token decode timestamp: the gap to the previous emission
+            # (prefill for the first decode) is this token's ITL
+            prev = req.decode_times[-1] if req.decode_times \
+                else req.prefill_done
+            req.decode_times.append(end_time)
+            if prev >= 0:
+                self.metrics.itl.observe(end_time, end_time - prev)
         for req in report.completed:
             req.finished = end_time
         if report.tokens:

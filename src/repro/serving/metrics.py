@@ -12,9 +12,11 @@ import numpy as np
 class LatencyWindow:
     """Sliding window of (time, latency) samples with tail quantiles.
 
-    Times are monotone, so the recent-horizon lookup is a bisect over the
-    time array instead of a full scan (the controller samples every second
-    — this is the simulator's hot path).
+    Times are kept sorted: producers almost always observe in monotone
+    order (append-only fast path), but parallel replicas can finalize
+    steps out of order — those samples are insort-ed so the
+    recent-horizon lookup stays a valid bisect over the time array (the
+    controller samples every second — this is the simulator's hot path).
     """
 
     def __init__(self, max_samples: int = 4096, horizon_s: float = 60.0):
@@ -31,8 +33,14 @@ class LatencyWindow:
 
     def observe(self, now: float, latency: float,
                 slo: Optional[float] = None) -> None:
-        self._times.append(now)
-        self._vals.append(latency)
+        if self._times and now < self._times[-1]:
+            import bisect
+            i = bisect.bisect_right(self._times, now)
+            self._times.insert(i, now)
+            self._vals.insert(i, latency)
+        else:
+            self._times.append(now)
+            self._vals.append(latency)
         if len(self._times) > 2 * self.max_samples:
             self._times = self._times[-self.max_samples:]
             self._vals = self._vals[-self.max_samples:]
@@ -98,11 +106,18 @@ class EMA:
 class TenantMetrics:
     """Bundle of per-tenant signals the controller samples every delta s."""
     latency: LatencyWindow = field(default_factory=LatencyWindow)
+    # inter-token latency (decode cadence): one sample per decoded token,
+    # measured between consecutive token-emission timestamps — makes
+    # TPOT/ITL observable to the controller, not just TTFT
+    itl: LatencyWindow = field(default_factory=LatencyWindow)
     throughput_window: Deque[Tuple[float, int]] = field(
         default_factory=lambda: deque(maxlen=4096))
 
     def observe_tokens(self, now: float, n: int) -> None:
         self.throughput_window.append((now, n))
+
+    def itl_p99(self, now: Optional[float] = None) -> float:
+        return self.itl.quantile(0.99, now)
 
     def throughput(self, now: float, horizon_s: float = 10.0) -> float:
         lo = now - horizon_s

@@ -21,12 +21,29 @@ class Request:
     finished: float = -1.0
     generated: int = 0
     output_tokens: List[int] = field(default_factory=list)
+    decode_times: List[float] = field(default_factory=list)  # per decode token
 
     @property
     def ttft(self) -> Optional[float]:
         if self.prefill_done < 0:
             return None
         return self.prefill_done - self.arrival
+
+    @property
+    def tpot(self) -> Optional[float]:
+        """Mean time-per-output-token after the first (needs >= 2 tokens)."""
+        if self.prefill_done < 0 or not self.decode_times:
+            return None
+        return (self.decode_times[-1] - self.prefill_done) / \
+            len(self.decode_times)
+
+    @property
+    def itls(self) -> List[float]:
+        """Inter-token latencies (first gap measured from prefill_done)."""
+        if self.prefill_done < 0 or not self.decode_times:
+            return []
+        ts = [self.prefill_done] + self.decode_times
+        return [b - a for a, b in zip(ts, ts[1:])]
 
     @property
     def done(self) -> bool:

@@ -18,7 +18,9 @@ Modelling choices (documented in DESIGN.md §8):
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.tenancy import TenantSpec
 
 
 @dataclass(frozen=True)
@@ -88,3 +90,12 @@ class SimParams:
     sample_period_s: float = 1.0
     schedule: Tuple[InterferenceWindow, ...] = field(
         default_factory=default_schedule)
+    # --- tenant model -------------------------------------------------
+    # Devices with no ambient co-tenants (the scenario's "home" GPUs);
+    # everything else carries ambient_pcie/ambient_hbm/ambient_units.
+    home_devices: Tuple[str, ...] = ("h0:g0",)
+    # The tenant set.  None -> the paper's 3-tenant scenario built from
+    # the t1_*/t2_*/t3_* calibration fields above
+    # (TenantRegistry.paper_default).  Any number of latency tenants with
+    # R >= 1 replicas each, plus background interferers, is allowed.
+    tenants: Optional[Tuple[TenantSpec, ...]] = None

@@ -13,7 +13,14 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:                       # container images without zstd
+    zstandard = None
+import zlib
+
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
 
 
 def _flatten(tree, prefix="") -> Dict[str, np.ndarray]:
@@ -37,7 +44,10 @@ def save(path: str, tree: Any, metadata: Dict[str, Any] | None = None) -> int:
         },
     }
     raw = msgpack.packb(payload, use_bin_type=True)
-    comp = zstandard.ZstdCompressor(level=3).compress(raw)
+    if zstandard is not None:
+        comp = zstandard.ZstdCompressor(level=3).compress(raw)
+    else:
+        comp = zlib.compress(raw, 6)
     tmp = path + ".tmp"
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     with open(tmp, "wb") as f:
@@ -50,7 +60,14 @@ def load(path: str, like: Any | None = None) -> Tuple[Any, Dict[str, Any]]:
     """Returns (tree, metadata).  If ``like`` is given, restores its pytree
     structure; otherwise returns the flat dict."""
     with open(path, "rb") as f:
-        raw = zstandard.ZstdDecompressor().decompress(f.read())
+        blob = f.read()
+    if blob[:4] == _ZSTD_MAGIC:
+        if zstandard is None:
+            raise ImportError("checkpoint is zstd-compressed but the "
+                              "zstandard module is unavailable")
+        raw = zstandard.ZstdDecompressor().decompress(blob)
+    else:
+        raw = zlib.decompress(blob)
     payload = msgpack.unpackb(raw, raw=False)
     arrays = {
         k: np.frombuffer(v["data"],

@@ -1,0 +1,239 @@
+"""Minimal, dependency-free stand-in for the `hypothesis` API surface the
+test-suite uses, installed by conftest.py only when the real package is
+absent (the pinned CI/container image does not ship it and the repo may not
+add dependencies).
+
+Semantics: `@given` draws `max_examples` pseudo-random examples from the
+declared strategies with a fixed seed, so the property tests still execute
+(deterministically) instead of being skipped.  This is *not* Hypothesis —
+no shrinking, no database, no adaptive search — but every strategy
+combinator the suite uses (`floats`, `integers`, `lists`, `sampled_from`,
+`one_of`, `none`, `booleans`, `just`, `tuples`, `data`) behaves
+compatibly for generation purposes.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import math
+import random
+import sys
+import types
+from typing import Any, Callable, List, Optional, Sequence
+
+_SEED = 0x5EED_CAFE
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class SearchStrategy:
+    """A strategy is just a deterministic sampler: draw(rng) -> value."""
+
+    def __init__(self, draw: Callable[[random.Random], Any], label: str = "?"):
+        self._draw = draw
+        self.label = label
+
+    def draw(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+    def map(self, f: Callable[[Any], Any]) -> "SearchStrategy":
+        return SearchStrategy(lambda rng: f(self.draw(rng)),
+                              f"{self.label}.map")
+
+    def filter(self, pred: Callable[[Any], bool],
+               max_tries: int = 100) -> "SearchStrategy":
+        def drawer(rng: random.Random) -> Any:
+            for _ in range(max_tries):
+                v = self.draw(rng)
+                if pred(v):
+                    return v
+            raise ValueError(f"filter on {self.label} found no example "
+                             f"in {max_tries} tries")
+        return SearchStrategy(drawer, f"{self.label}.filter")
+
+    def __repr__(self) -> str:
+        return f"<stub strategy {self.label}>"
+
+
+def floats(min_value: Optional[float] = None,
+           max_value: Optional[float] = None,
+           allow_nan: bool = True, allow_infinity: bool = True,
+           **_ignored) -> SearchStrategy:
+    lo = -1e9 if min_value is None else float(min_value)
+    hi = 1e9 if max_value is None else float(max_value)
+
+    def drawer(rng: random.Random) -> float:
+        # bias toward the boundaries like hypothesis does
+        r = rng.random()
+        if r < 0.1:
+            return lo
+        if r < 0.2:
+            return hi
+        if hi > 0 and lo >= 0 and hi / max(lo, 1e-300) > 1e3 and r < 0.5:
+            # log-uniform for wide positive ranges
+            return math.exp(rng.uniform(math.log(max(lo, 1e-12)),
+                                        math.log(hi)))
+        return rng.uniform(lo, hi)
+
+    return SearchStrategy(drawer, f"floats({lo},{hi})")
+
+
+def integers(min_value: Optional[int] = None,
+             max_value: Optional[int] = None) -> SearchStrategy:
+    lo = -(2 ** 31) if min_value is None else int(min_value)
+    hi = 2 ** 31 if max_value is None else int(max_value)
+    return SearchStrategy(lambda rng: rng.randint(lo, hi),
+                          f"integers({lo},{hi})")
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.random() < 0.5, "booleans")
+
+
+def none() -> SearchStrategy:
+    return SearchStrategy(lambda rng: None, "none")
+
+
+def just(value: Any) -> SearchStrategy:
+    return SearchStrategy(lambda rng: value, f"just({value!r})")
+
+
+def sampled_from(elements: Sequence[Any]) -> SearchStrategy:
+    elements = list(elements)
+    return SearchStrategy(lambda rng: elements[rng.randrange(len(elements))],
+                          f"sampled_from(n={len(elements)})")
+
+
+def one_of(*strategies: SearchStrategy) -> SearchStrategy:
+    flat: List[SearchStrategy] = []
+    for s in strategies:
+        flat.extend(s) if isinstance(s, (list, tuple)) else flat.append(s)
+    return SearchStrategy(
+        lambda rng: flat[rng.randrange(len(flat))].draw(rng),
+        f"one_of(n={len(flat)})")
+
+
+def lists(elements: SearchStrategy, min_size: int = 0,
+          max_size: Optional[int] = None, unique: bool = False,
+          **_ignored) -> SearchStrategy:
+    hi = max_size if max_size is not None else min_size + 10
+
+    def drawer(rng: random.Random) -> List[Any]:
+        n = rng.randint(min_size, hi)
+        if not unique:
+            return [elements.draw(rng) for _ in range(n)]
+        out: List[Any] = []
+        tries = 0
+        while len(out) < n and tries < 50 * (n + 1):
+            v = elements.draw(rng)
+            tries += 1
+            if v not in out:
+                out.append(v)
+        return out
+
+    return SearchStrategy(drawer, f"lists[{min_size},{hi}]")
+
+
+def tuples(*strategies: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(lambda rng: tuple(s.draw(rng) for s in strategies),
+                          f"tuples(n={len(strategies)})")
+
+
+class DataObject:
+    """Interactive draws: `data.draw(strategy)`."""
+
+    def __init__(self, rng: random.Random):
+        self._rng = rng
+
+    def draw(self, strategy: SearchStrategy, label: Optional[str] = None):
+        return strategy.draw(self._rng)
+
+
+class _DataStrategy(SearchStrategy):
+    def __init__(self):
+        super().__init__(lambda rng: DataObject(rng), "data")
+
+
+def data() -> SearchStrategy:
+    return _DataStrategy()
+
+
+# ------------------------------------------------------------- decorators
+def given(*garg_strategies: SearchStrategy,
+          **gkw_strategies: SearchStrategy) -> Callable:
+    def decorate(fn: Callable) -> Callable:
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples",
+                        getattr(fn, "_stub_max_examples",
+                                _DEFAULT_MAX_EXAMPLES))
+            rng = random.Random(_SEED)
+            for _ in range(n):
+                drawn = [s.draw(rng) for s in garg_strategies]
+                drawn_kw = {k: s.draw(rng)
+                            for k, s in gkw_strategies.items()}
+                fn(*args, *drawn, **kwargs, **drawn_kw)
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        # Hide the strategy-supplied parameters from pytest's fixture
+        # resolution (real hypothesis does the same): drop the @wraps
+        # __wrapped__ pointer pytest would unwrap, and expose only the
+        # parameters @given does NOT provide (e.g. pytest.mark.parametrize
+        # arguments or fixtures declared before the strategies).
+        del wrapper.__wrapped__
+        sig = inspect.signature(fn)
+        provided = set(gkw_strategies)
+        params = list(sig.parameters.values())
+        if garg_strategies:
+            # positional strategies fill the LAST len(garg_strategies)
+            # parameters (hypothesis semantics)
+            params = params[:-len(garg_strategies)]
+        params = [p for p in params if p.name not in provided]
+        wrapper.__signature__ = sig.replace(parameters=params)
+        return wrapper
+    return decorate
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored) -> Callable:
+    def decorate(fn: Callable) -> Callable:
+        fn._stub_max_examples = max_examples
+        return fn
+    return decorate
+
+
+def assume(condition: bool) -> bool:
+    """Best-effort: a failed assumption skips the example via pytest.skip
+    (no re-draw machinery here)."""
+    if not condition:
+        import pytest
+        pytest.skip("stub-hypothesis assumption not satisfied")
+    return True
+
+
+class HealthCheck:
+    too_slow = "too_slow"
+    filter_too_much = "filter_too_much"
+    data_too_large = "data_too_large"
+
+    @classmethod
+    def all(cls):
+        return [cls.too_slow, cls.filter_too_much, cls.data_too_large]
+
+
+def install() -> None:
+    """Register this stub as `hypothesis` + `hypothesis.strategies`."""
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = assume
+    hyp.HealthCheck = HealthCheck
+    hyp.__version__ = "0.0-stub"
+
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for name in ("floats", "integers", "booleans", "none", "just",
+                 "sampled_from", "one_of", "lists", "tuples", "data",
+                 "SearchStrategy"):
+        setattr(st_mod, name, globals()[name])
+
+    hyp.strategies = st_mod
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st_mod

@@ -9,7 +9,6 @@ from repro.core.admission import (AdmissionConfig, AdmissionController,
 from repro.core.controller import Controller, ControllerConfig
 from repro.core.kingman import GG1
 from repro.core.policy import PolicyConfig
-from repro.core.profiles import A100_MIG
 from repro.core.topology import Slot, make_p4d_cluster
 from repro.sim.cluster import ClusterSim
 from repro.sim.params import SimParams, default_schedule
@@ -19,9 +18,7 @@ def controller_factory(**flags):
     def make(sim):
         cfg = ControllerConfig(**flags)
         c = Controller(sim.topo, sim.lattice, sim, cfg)
-        c.register_tenant("T1", "latency", sim.t1_slot, sim.t1_profile)
-        c.register_tenant("T2", "background", sim.t2_slot, A100_MIG["7g.80gb"])
-        c.register_tenant("T3", "background", sim.t3_slot, A100_MIG["2g.20gb"])
+        sim.register_tenants(c)
         return c
     return make
 

@@ -34,7 +34,7 @@ def test_conservation_offered_equals_completed_plus_queue():
     p = SimParams(seed=3, duration_s=400.0, schedule=default_schedule(400.0))
     sim = ClusterSim(p)
     res = sim.run()
-    in_flight = len(sim.t1_queue) + (1 if sim.t1_busy else 0)
+    in_flight = sim.in_flight("T1")
     assert res.offered == res.completed + res.dropped + in_flight
 
 
