@@ -9,17 +9,31 @@ throughput for static-MIG vs controlled.  The arbiter audit proves the
 per-GPU compute-unit budget (7) is never exceeded while lanes compete for
 upgrades (the MIG-serving / ParvaGPU regime).
 
+``--churn`` adds an admission-churn arm per cell: a seeded stream of
+late-arriving tenants (safe / fabric-saturating / rho-violating classes)
+is pushed through the registry-driven AdmissionController against the
+fleet's DeviceLedger, with periodic departures freeing capacity so QUEUE'd
+tenants re-admit; per-verdict counts are reported alongside the arbiter
+audit and the ledger invariants are asserted at the end.
+
     PYTHONPATH=src:. python benchmarks/e5_multitenant.py \
         [--tenants 2,4,8] [--replicas 1,2] [--duration 900] [--seed 0] \
-        [--out e5.json] [--smoke]
+        [--churn] [--out e5.json] [--smoke]
 """
 from __future__ import annotations
 
 import argparse
 import json
 
+import numpy as np
+
+from repro.core.admission import (AdmissionConfig, AdmissionController,
+                                  AdmissionVerdict)
 from repro.core.controller import Controller, ControllerConfig
-from repro.core.tenancy import TenantRegistry
+from repro.core.ledger import DeviceLedger
+from repro.core.profiles import A100_MIG
+from repro.core.tenancy import BACKGROUND, TenantRegistry, TenantSpec
+from repro.core.topology import make_p4d_cluster
 from repro.sim.cluster import ClusterSim
 from repro.sim.params import InterferenceWindow, SimParams
 
@@ -62,8 +76,64 @@ def tenant_rows(res) -> dict:
     } for name, t in res.tenants.items()}
 
 
+def churn_spec(kind: str, idx: int) -> TenantSpec:
+    """One late-arriving tenant of a given admission class."""
+    sizes = ((0.75, 12e6), (0.20, 24e6), (0.05, 32e6))
+    if kind == "safe":
+        return TenantSpec(name=f"C{idx}", rate=4.0, slo_s=0.015,
+                          sizes=sizes)
+    if kind == "fabric":        # Claim-1-bound: over half a root's
+        # capacity, so no two such streams (or one plus the ETL) share a
+        # root complex — they queue until a departure frees a fabric
+        return TenantSpec(name=f"C{idx}", role=BACKGROUND,
+                          pcie_demand=13e9, ps_weight=4.0)
+    # rho-violating: its own utilisation bound breaks at any share
+    return TenantSpec(name=f"C{idx}", rate=400.0, slo_s=0.015, sizes=sizes)
+
+
+def run_churn(n_tenants: int, replicas: int, seed: int,
+              arrivals: int = 24) -> dict:
+    """Admission-churn arm: stream late tenants through the registry-
+    driven admission controller over the fleet's shared ledger; every 4th
+    arrival an admitted tenant departs, so QUEUE'd tenants re-admit."""
+    reg = TenantRegistry.slo_fleet(n_tenants, replicas)
+    topo = make_p4d_cluster(2)
+    ledger = DeviceLedger.from_registry(topo, reg, A100_MIG,
+                                        home_devices=("h0:g0",),
+                                        ambient_units=3)
+    adm = AdmissionController(topo, reg, ledger, AdmissionConfig())
+    rng = np.random.default_rng(seed)
+    # fabric-heavy mix: the 13e9 streams saturate the 7 quiet roots
+    # (Claim-1) partway through the stream, so the QUEUE->retry->ADMIT
+    # path is exercised, not just the terminal verdicts
+    kinds = ("safe", "fabric", "fabric", "hot")
+    admitted = []                          # (name, kind), admission order
+    readmitted = 0
+    for k in range(arrivals):
+        kind = kinds[int(rng.integers(0, 4))]
+        verdict, _slots = adm.decide(churn_spec(kind, k), now=float(k))
+        if verdict == AdmissionVerdict.ADMIT:
+            admitted.append((f"C{k}", kind))
+        if k % 4 == 3 and admitted:
+            # churn: a tenant departs — ETL-style fabric streams finish
+            # first (they are the short-lived class), freeing their root
+            # so a QUEUE'd tenant can land on retry
+            idx = next((i for i, (_, kd) in enumerate(admitted)
+                        if kd == "fabric"), 0)
+            adm.release(admitted.pop(idx)[0], now=float(k))
+            readmitted += len(adm.retry_queued(now=float(k)))
+    ledger.check()
+    return {
+        "arrivals": arrivals,
+        "verdicts": adm.counts(),
+        "readmitted_after_free": readmitted,
+        "still_queued": len(adm.queue),
+        "ledger_ok": ledger.check_ok(),
+    }
+
+
 def run_cell(n_tenants: int, replicas: int, duration: float,
-             seed: int) -> dict:
+             seed: int, churn: bool = False) -> dict:
     p = make_params(n_tenants, replicas, duration, seed)
     static = ClusterSim(p).run()
     controlled = ClusterSim(p, controlled_factory).run()
@@ -71,7 +141,7 @@ def run_cell(n_tenants: int, replicas: int, duration: float,
         1 for name in controlled.tenants
         if controlled.tenants[name].miss_rate
         <= static.tenants[name].miss_rate)
-    return {
+    out = {
         "tenants": n_tenants,
         "replicas": replicas,
         "static": {"per_tenant": tenant_rows(static),
@@ -86,14 +156,17 @@ def run_cell(n_tenants: int, replicas: int, duration: float,
         },
         "tenants_not_worse": improved,
     }
+    if churn:
+        out["churn"] = run_churn(n_tenants, replicas, seed)
+    return out
 
 
 def run(tenant_counts=(2, 4, 8), replica_counts=(1, 2), duration=900.0,
-        seed=0, verbose=True) -> dict:
+        seed=0, verbose=True, churn=False) -> dict:
     sweep = []
     for n in tenant_counts:
         for r in replica_counts:
-            cell = run_cell(n, r, duration, seed)
+            cell = run_cell(n, r, duration, seed, churn=churn)
             sweep.append(cell)
             if verbose:
                 ctl = cell["controlled"]["per_tenant"]
@@ -106,6 +179,12 @@ def run(tenant_counts=(2, 4, 8), replica_counts=(1, 2), duration=900.0,
                       f"arbiter peak {cell['arbiter']['max_units_per_gpu']}"
                       f"/{cell['arbiter']['budget']}u "
                       f"(ok={cell['arbiter']['ok']})")
+                if churn:
+                    ch = cell["churn"]
+                    print(f"           churn: verdicts {ch['verdicts']} "
+                          f"(+{ch['readmitted_after_free']} re-admitted "
+                          f"after departures, {ch['still_queued']} queued, "
+                          f"ledger_ok={ch['ledger_ok']})")
     out = {
         "experiment": "e5_multitenant",
         "duration_s": duration,
@@ -127,6 +206,9 @@ def main():
                     help="comma-separated replica counts")
     ap.add_argument("--duration", type=float, default=900.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--churn", action="store_true",
+                    help="add the admission-churn arm (per-verdict counts "
+                         "alongside the arbiter audit)")
     ap.add_argument("--out", default=None, help="write JSON here")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI config: 4 tenants x 2 replicas, 240 s")
@@ -144,7 +226,8 @@ def main():
                      f"{args.replicas!r})")
         duration = args.duration
     print("== E5: multi-tenant scaling (N SLO tenants x R replicas) ==")
-    out = run(tenant_counts, replica_counts, duration, args.seed)
+    out = run(tenant_counts, replica_counts, duration, args.seed,
+              churn=args.churn)
     payload = json.dumps(out, indent=2)
     if args.out:
         with open(args.out, "w") as f:

@@ -44,7 +44,8 @@ def run(duration=1800.0, qps=1.75, seed=0, with_controller=True,
     fabric = FabricState()
     topo = make_p4d_cluster(2)
     now = [0.0]
-    actuator = ServingActuator(engine, fabric, topo, lambda: now[0])
+    actuator = ServingActuator(engine, fabric, topo, lambda: now[0],
+                               rng=np.random.default_rng(seed + 1))
     ttft_window = LatencyWindow(max_samples=1 << 14, horizon_s=60.0)
 
     controller = None

@@ -463,20 +463,39 @@ class Controller:
         if good is not None:
             if good.profile != prim.config.profile:
                 profile = self.lattice[good.profile]
-                pause += self.actuator.reconfigure(tenant, profile)
-                prim.profile = profile
-                self.arbiter.set_profile(tenant, profile.compute_units,
-                                         snap.time, action="rollback")
+                # restoring a *larger* profile needs the extra units to
+                # still be free on every replica device (another lane may
+                # have claimed them since): the actuator's ledger enforces
+                # the budget, so check before asking
+                extra = profile.compute_units - prim.profile.compute_units
+                fits = extra <= 0 or all(
+                    min(self.actuator.headroom_units(d),
+                        self.arbiter.headroom(d))
+                    >= extra * sum(1 for s in prim.replicas
+                                   if s.device == d)
+                    for d in prim.devices)
+                if fits:
+                    pause += self.actuator.reconfigure(tenant, profile)
+                    prim.profile = profile
+                    self.arbiter.set_profile(tenant, profile.compute_units,
+                                             snap.time, action="rollback")
+                else:
+                    good = good.copy()
+                    good.profile = prim.config.profile
             if (good.device, good.slot) != (prim.config.device,
                                             prim.config.slot):
                 slot = Slot(self.topo.host_of(good.device), good.device,
                             good.slot)
                 # the old home may have been claimed meanwhile: only move
-                # back if the device still has unit headroom for us
-                feasible = (slot.device == prim.slot.device or
-                            min(self.actuator.headroom_units(slot.device),
-                                self.arbiter.headroom(slot.device))
-                            >= prim.profile.compute_units)
+                # back if the slot is still free and the device still has
+                # unit headroom for us
+                feasible = (
+                    any(s.key == slot.key
+                        for s in self.actuator.free_slots())
+                    and (slot.device == prim.slot.device or
+                         min(self.actuator.headroom_units(slot.device),
+                             self.arbiter.headroom(slot.device))
+                         >= prim.profile.compute_units))
                 if feasible:
                     old_device = prim.slot.device
                     pause += self.actuator.move(tenant, slot)

@@ -94,6 +94,10 @@ class TenantRegistry:
         self._specs[spec.name] = spec
         return self
 
+    def remove(self, name: str) -> TenantSpec:
+        """Retire a tenant (admission churn: departures free their slots)."""
+        return self._specs.pop(name)
+
     def __iter__(self) -> Iterator[TenantSpec]:
         return iter(self._specs.values())
 

@@ -3,14 +3,19 @@ first-class integration), generalized to N latency tenants x R replicas.
 
     PYTHONPATH=src python -m repro.launch.serve --arch stablelm_3b \
         --requests 32 --qps 4 [--tenants 2] [--replicas 2] \
-        [--interfere] [--no-controller]
+        [--interfere] [--no-controller] [--admit 2]
 
 Runs one continuous-batching engine per tenant-replica on the reduced
 config, all sharing a FabricState (the PS fabric model injects PCIe-class
 interference when --interfere is set), with the multi-tenancy controller
-steering quotas, placements and slice profiles per tenant.  Virtual time:
-replicas run in parallel — each engine owns an availability clock and the
-global clock advances to the next event (arrival, sample, step finish).
+steering quotas, placements and slice profiles per tenant.  Placement
+state lives in a shared DeviceLedger built from the TenantRegistry, the
+same bookkeeping the simulator uses — and ``--admit K`` exercises the
+paper's §2.3 admission path: K late-arriving tenants are scored against
+the live ledger mid-run; admitted ones get engines and traffic, the rest
+queue or are rejected.  Virtual time: replicas run in parallel — each
+engine owns an availability clock and the global clock advances to the
+next event (arrival, sample, step finish, admission).
 """
 from __future__ import annotations
 
@@ -20,17 +25,22 @@ import argparse
 def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
           prompt_len: int = 48, max_new: int = 8, slots: int = 4,
           num_tenants: int = 1, replicas: int = 1, interfere: bool = False,
-          with_controller: bool = True, seed: int = 0, verbose: bool = True):
+          with_controller: bool = True, seed: int = 0, verbose: bool = True,
+          admit: int = 0):
     """Virtual-time multi-tenant serving run; returns per-tenant stats."""
     import numpy as np
     from repro.configs.base import get_config, reduced
     from repro.serving.engine import ServingEngine
     from repro.serving.request import Request
     from repro.serving.actuator import FabricState, ServingActuator
+    from repro.core.admission import (AdmissionController, AdmissionConfig,
+                                      AdmissionVerdict)
     from repro.core.controller import Controller, ControllerConfig
+    from repro.core.ledger import DeviceLedger
     from repro.core.policy import PolicyConfig
     from repro.core.profiles import A100_MIG
     from repro.core.signals import Snapshot, SystemSignals, TenantSignals
+    from repro.core.tenancy import (BACKGROUND, TenantRegistry, TenantSpec)
     from repro.core.topology import Slot, make_p4d_cluster
     from repro.serving.metrics import LatencyWindow
 
@@ -49,7 +59,7 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
     # Spread tenant-replicas over the topology's real slots (2 per
     # device), skipping the background tenants' fixed slots, breadth-
     # first across devices so no GPU hosts more than 2 x 2g.20gb slices
-    # (4 units, within the arbiter's 7-unit budget).  The first devices
+    # (4 units, within the per-GPU 7-unit budget).  The first devices
     # sit on the contended root; the rest see only ambient traffic.
     total = num_tenants * replicas
     reserved = {("h0:g1", 0), ("h0:g0", 1)}      # T2 / T3 below
@@ -61,17 +71,38 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
         raise SystemExit(
             f"{total} tenant-replicas exceed the cluster's capacity "
             f"({len(free)} free 2g slices)")
+    # tenant identity as data: the run's registry pins the breadth-first
+    # placement into each spec, and the shared ledger is built from it
+    registry = TenantRegistry()
     placements = {}
     k = 0
-    for name in names:
+    for i, name in enumerate(names):
         placements[name] = free[k:k + replicas]
         k += replicas
-        # only tenants with a replica on the contended root (r0 = g0/g1)
-        # share the hot fabric path
-        fabric.set_on_root(name, any(r.device in ("h0:g0", "h0:g1")
-                                     for r in placements[name]))
+        registry.add(TenantSpec(
+            name=name, replicas=replicas, rate=qps, slo_s=0.200,
+            priority=1.0 + 0.25 * i,
+            placement=tuple(s.key for s in placements[name])))
+    registry.add(TenantSpec(
+        name="T2", role=BACKGROUND, profile="7g.80gb", units=0,
+        pcie_demand=fabric.t2_demand, ps_weight=fabric.t2_ps_weight,
+        placement=("h0:g1:s0",)))
+    registry.add(TenantSpec(
+        name="T3", role=BACKGROUND, profile="2g.20gb", units=2,
+        sm_util=0.95, placement=("h0:g0:s1",)))
+    ledger = DeviceLedger.from_registry(
+        topo, registry, A100_MIG,
+        home_devices=("h0:g0",), ambient_units=3)
+    # only tenants with a replica on the contended root (r0 = g0/g1)
+    # share the hot fabric path
+    contended = topo.root_of("h0:g1")
+    for name in names:
+        fabric.set_on_root(name, any(
+            topo.root_of(s.device) == contended for s in placements[name]))
     now = [0.0]
-    actuator = ServingActuator(engines, fabric, topo, lambda: now[0])
+    actuator = ServingActuator(engines, fabric, topo, lambda: now[0],
+                               ledger=ledger,
+                               rng=np.random.default_rng(seed + 1))
     windows = {name: LatencyWindow() for name in names}
 
     controller = None
@@ -80,19 +111,11 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
                                 ControllerConfig(policy=PolicyConfig(
                                     tau_s=0.200, persistence=2,
                                     dwell_obs=20, cooldown_obs=10)))
-        for i, name in enumerate(names):
-            reps = placements[name]
-            controller.register_tenant(name, "latency", reps[0],
-                                       A100_MIG["2g.20gb"],
-                                       priority=1.0 + 0.25 * i,
-                                       replicas=reps)
-        controller.register_tenant("T2", "background", Slot(0, "h0:g1", 0),
-                                   A100_MIG["7g.80gb"])
-        controller.register_tenant("T3", "background", Slot(0, "h0:g0", 1),
-                                   A100_MIG["2g.20gb"])
+        controller.register_registry(registry, placements={
+            **placements, "T2": [Slot(0, "h0:g1", 0)],
+            "T3": [Slot(0, "h0:g0", 1)]})
 
-    # warm the jit caches so compile time never enters the virtual clock
-    for name in names:
+    def warm(name):
         for eng in engines[name]:
             eng.submit(Request(req_id=-1, tenant=name,
                                prompt_len=prompt_len, max_new_tokens=2,
@@ -100,15 +123,23 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
             while eng.has_work():
                 eng.finalize_step(eng.step(), 0.0)
 
+    # warm the jit caches so compile time never enters the virtual clock
+    for name in names:
+        warm(name)
+
     rng = np.random.default_rng(seed)
     reqs = {name: [] for name in names}
     pending = {}
-    for name in names:
-        arrivals = np.cumsum(rng.exponential(1.0 / qps, requests))
+
+    def gen_traffic(name, start=0.0):
+        arrivals = start + np.cumsum(rng.exponential(1.0 / qps, requests))
         reqs[name] = [Request(req_id=i, tenant=name, prompt_len=prompt_len,
                               max_new_tokens=max_new, arrival=float(t),
                               slo_ms=200.0) for i, t in enumerate(arrivals)]
         pending[name] = list(reqs[name])
+
+    for name in names:
+        gen_traffic(name)
     shed = {name: 0 for name in names}
     # per-engine availability clock: engines run in parallel
     avail = {(name, j): 0.0 for name in names for j in range(replicas)}
@@ -118,6 +149,59 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
               f"replica(s), {requests} req/tenant at {qps} qps "
               f"(interference={'on' if interfere else 'off'}, "
               f"controller={'on' if with_controller else 'off'})")
+
+    # ---- §2.3 admission path: K late tenants arrive mid-run ----------
+    admission = None
+    admit_events = []
+    admission_log = []
+    if admit > 0:
+        admission = AdmissionController(topo, registry, ledger,
+                                        AdmissionConfig())
+        span = requests / qps
+        admit_events = [(span * 0.3 + j * max(1.0, 1.0 / qps),
+                         TenantSpec(name=f"A{j}", replicas=1, rate=qps,
+                                    slo_s=0.200, priority=1.0))
+                        for j in range(admit)]
+
+    def on_admitted(spec, slots_, t):
+        name = spec.name
+        names.append(name)
+        engines[name] = [ServingEngine(cfg, max_slots=slots, seq_cap=128,
+                                       seed=seed + 1000 + len(names))]
+        actuator.engines[name] = engines[name]
+        actuator.compute_scales.setdefault(name, 1.0)
+        actuator.pauses.setdefault(name, 0.0)
+        warm(name)
+        windows[name] = LatencyWindow()
+        shed[name] = 0
+        avail[(name, 0)] = t
+        fabric.set_on_root(name, any(
+            topo.root_of(s.device) == contended for s in slots_))
+        gen_traffic(name, start=t)
+        if controller is not None:
+            controller.register_tenant(name, "latency", slots_[0],
+                                       A100_MIG[spec.profile],
+                                       priority=spec.priority,
+                                       slo_s=spec.slo_s, replicas=slots_)
+        if verbose:
+            print(f"  t={t:6.1f}s admitted {name} -> "
+                  f"{[s.key for s in slots_]}")
+
+    def run_admissions():
+        while admit_events and admit_events[0][0] <= now[0]:
+            t, spec = admit_events.pop(0)
+            verdict, slots_ = admission.decide(spec, now=t)
+            admission_log.append((t, spec.name, verdict.value))
+            if verdict == AdmissionVerdict.ADMIT:
+                on_admitted(registry[spec.name], slots_, t)
+            elif verbose:
+                print(f"  t={t:6.1f}s {verdict.value} {spec.name}")
+        # departures are rare in this harness, but retry anyway so a
+        # queued tenant lands as soon as capacity appears
+        if admission is not None and admission.queue:
+            for spec, slots_ in admission.retry_queued(now=now[0]):
+                admission_log.append((now[0], spec.name, "admit"))
+                on_admitted(spec, slots_, now[0])
 
     def submit_due():
         for name in names:
@@ -134,10 +218,12 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
                 engs[j].submit(r)
 
     def has_pending():
-        return any(pending[n] for n in names) or \
+        return bool(admit_events) or any(pending[n] for n in names) or \
             any(e.has_work() for n in names for e in engines[n])
 
     while has_pending():
+        if admission is not None:
+            run_admissions()
         submit_due()
         if controller and now[0] >= next_sample:
             tenants = {}
@@ -185,6 +271,7 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
                     any(e.has_work() for e in engines[name]):
                 horizon.append(actuator.paused_until(name))
         horizon.extend(t for t in avail.values() if t > now[0])
+        horizon.extend(t for t, _ in admit_events)
         if controller:
             horizon.append(next_sample)
         now[0] = min(horizon) if horizon else now[0] + 0.02
@@ -208,11 +295,18 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
                   f"TTFT p50={out[name]['ttft_p50_ms']:.1f}ms "
                   f"p99={out[name]['ttft_p99_ms']:.1f}ms "
                   f"ITL p99={out[name]['itl_p99_ms']:.1f}ms")
+    if admission is not None:
+        out["admission"] = {"verdicts": admission.counts(),
+                            "log": admission_log,
+                            "still_queued": [s.name for s in admission.queue]}
+        if verbose:
+            print("admission verdicts:", out["admission"]["verdicts"])
     if controller:
         out["actions"] = controller.audit.counts()
         out["arbiter_max_units"] = controller.arbiter.max_used()
         if verbose:
             print("controller actions:", out["actions"])
+    ledger.check()
     return out
 
 
@@ -228,13 +322,16 @@ def main():
     ap.add_argument("--replicas", type=int, default=1)
     ap.add_argument("--interfere", action="store_true")
     ap.add_argument("--no-controller", action="store_true")
+    ap.add_argument("--admit", type=int, default=0,
+                    help="late-arriving tenants pushed through admission")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     serve(arch=args.arch, requests=args.requests, qps=args.qps,
           prompt_len=args.prompt_len, max_new=args.max_new,
           slots=args.slots, num_tenants=args.tenants,
           replicas=args.replicas, interfere=args.interfere,
-          with_controller=not args.no_controller, seed=args.seed)
+          with_controller=not args.no_controller, seed=args.seed,
+          admit=args.admit)
 
 
 if __name__ == "__main__":

@@ -32,6 +32,7 @@ from typing import Deque, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core import psmodel
+from repro.core.ledger import DeviceLedger
 from repro.core.profiles import A100_MIG, ProfileLattice, SliceProfile
 from repro.core.signals import Snapshot, SystemSignals, TenantSignals
 from repro.core.tenancy import TenantRegistry, TenantSpec
@@ -172,6 +173,15 @@ class ClusterSim:
         if not self.lat:
             raise ValueError("registry has no latency tenant")
         self.primary = next(iter(self.lat))
+        # shared placement/budget bookkeeping: slot occupancy, per-GPU
+        # unit use and per-root fabric demand all live in the ledger (the
+        # serving actuator builds the identical view — see the parity
+        # suite).  Ambient co-tenants on non-home devices reduce headroom
+        # exactly as the old inline scan did.
+        self.ledger = DeviceLedger.from_registry(
+            self.topo, self.registry, self.lattice, placements,
+            home_devices=params.home_devices,
+            ambient_units=params.ambient_units)
         # --- run state ---
         self.reconfig_times: List[float] = []
         self.controller = None
@@ -222,6 +232,7 @@ class ClusterSim:
         pause = max(self.p.mig_reconfig_min_s,
                     self.rng.normal(self.p.mig_reconfig_mean_s,
                                     self.p.mig_reconfig_std_s))
+        self.ledger.set_units(tenant, profile.compute_units)
         lt.profile = profile
         self._pause(tenant, pause)
         self.reconfig_times.append(pause)
@@ -232,6 +243,7 @@ class ClusterSim:
         """Relocate the tenant's primary replica (the controller's
         placement lever steers one replica per decision)."""
         lt = self.lat[tenant]
+        self.ledger.move(tenant, 0, slot)
         lt.replicas[0].slot = slot
         self._pause(tenant, self.p.move_pause_s)
         self.timeline.append((self.now, f"move:{tenant}:{slot.key}"))
@@ -254,25 +266,13 @@ class ClusterSim:
         self.lat[tenant].pinned = True
 
     def free_slots(self) -> List[Slot]:
-        occupied = {r.slot.key for lt in self.lat.values()
-                    for r in lt.replicas}
-        occupied |= {bg.slot.key for bg in self.bg.values()}
-        return [s for s in self.topo.slots() if s.key not in occupied]
+        return self.ledger.free_slots()
 
     def headroom_units(self, device: str) -> int:
-        """Free compute units on a device (7 per A100 minus all occupants,
-        the asking tenant's own slice included — greedy_upgrade asks for
-        the *extra*)."""
-        used = 0
-        for lt in self.lat.values():
-            used += sum(lt.profile.compute_units
-                        for r in lt.replicas if r.slot.device == device)
-        for bg in self.bg.values():
-            if bg.slot.device == device:
-                used += bg.spec.units
-        if device not in self.p.home_devices:
-            used += self.p.ambient_units   # ambient co-tenants elsewhere
-        return max(0, 7 - used)
+        """Free compute units on a device (budget per A100 minus all
+        occupants, the asking tenant's own slice included —
+        greedy_upgrade asks for the *extra*), read from the ledger."""
+        return self.ledger.headroom_units(device)
 
     # -------------------------------------------------------- fabric state
     def _bg_effective_pcie(self, bg: _BackgroundTenant) -> float:

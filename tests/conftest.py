@@ -19,6 +19,13 @@ except ImportError:
     _install_hypothesis_stub()
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "tier2: sim<->serving parity / property suites, run as a separate "
+        "non-blocking CI job (select with -m tier2)")
+
+
 @pytest.fixture(scope="session")
 def rng_key():
     return jax.random.key(0)

@@ -1,0 +1,163 @@
+"""Registry-driven admission (paper §2.3): the admit/queue/reject matrix
+over fabric-saturated vs. rho-bound-violating vs. safe tenants, verdicts
+committing to the shared DeviceLedger, and a QUEUE'd tenant admitting once
+a slot frees."""
+import pytest
+
+from repro.core.admission import (AdmissionConfig, AdmissionController,
+                                  AdmissionVerdict)
+from repro.core.ledger import DeviceLedger
+from repro.core.profiles import A100_MIG
+from repro.core.tenancy import BACKGROUND, TenantRegistry, TenantSpec
+from repro.core.topology import ClusterTopology, make_p4d_cluster
+
+
+def make_stack(topo=None, specs=(), cfg=AdmissionConfig(), **ledger_kw):
+    topo = topo or make_p4d_cluster(1)
+    reg = TenantRegistry(specs)
+    ledger = DeviceLedger.from_registry(topo, reg, A100_MIG, **ledger_kw)
+    return topo, reg, ledger, AdmissionController(topo, reg, ledger, cfg)
+
+
+SIZES = ((1.0, 12e6),)
+
+
+def safe_spec(name="NEW", **kw):
+    kw.setdefault("rate", 6.0)
+    kw.setdefault("sizes", SIZES)
+    return TenantSpec(name=name, **kw)
+
+
+# ------------------------------------------------------------ the matrix
+def test_safe_tenant_admitted_and_ledger_updated():
+    topo, reg, ledger, adm = make_stack(
+        specs=[TenantSpec(name="T1", sizes=SIZES,
+                          placement=("h0:g0:s0",))])
+    free_before = len(ledger.free_slots())
+    verdict, slots = adm.decide(safe_spec())
+    assert verdict == AdmissionVerdict.ADMIT
+    assert len(slots) == 1
+    assert ledger.owner_of(slots[0].key) == "NEW/r0"
+    assert len(ledger.free_slots()) == free_before - 1
+    assert "NEW" in reg                       # registry expanded
+    assert reg["NEW"].placement == (slots[0].key,)
+    # the pinned placement keeps resolve_placements stable
+    resolved = reg.resolve_placements(topo)
+    assert [s.key for s in resolved["NEW"]] == [slots[0].key]
+    ledger.check()
+
+
+def test_fabric_saturated_tenant_queued_then_rejected():
+    """Claim-1: a demand that saturates every root finds no safe slot."""
+    topo, reg, ledger, adm = make_stack(cfg=AdmissionConfig(max_queue=1))
+    heavy = TenantSpec(name="ETL9", role=BACKGROUND, pcie_demand=30e9)
+    verdict, slots = adm.decide(heavy)
+    assert verdict == AdmissionVerdict.QUEUE and slots is None
+    heavy2 = TenantSpec(name="ETL10", role=BACKGROUND, pcie_demand=30e9)
+    verdict, _ = adm.decide(heavy2)
+    assert verdict == AdmissionVerdict.REJECT
+    assert adm.counts() == {"admit": 0, "queue": 1, "reject": 1}
+    assert "ETL9" not in reg and "ETL10" not in reg
+    ledger.check()
+
+
+def test_rho_bound_violating_tenant_not_admitted():
+    """Kingman guidance: a newcomer whose own rho = lambda E[S] exceeds
+    the bound is unsafe on every root."""
+    topo, reg, ledger, adm = make_stack()
+    hot = safe_spec("HOT", rate=200.0)       # rho >> 0.85 at any share
+    verdict, slots = adm.decide(hot)
+    assert verdict == AdmissionVerdict.QUEUE and slots is None
+
+
+def test_rho_bound_protects_existing_tenant():
+    """A newcomer that would push a *resident* latency tenant over the
+    rho bound is kept off that root."""
+    topo = ClusterTopology(num_hosts=1, devices_per_host=2,
+                           devices_per_root=2, numa_per_host=1,
+                           slots_per_device=2)          # one root complex
+    # resident rho ~ 0.82 at full fabric share; halving its share (one
+    # more PS flow on the root) pushes it to ~ 0.88 > 0.85
+    resident = TenantSpec(name="R", rate=110.0, sizes=SIZES,
+                          placement=("h0:g0:s0",))
+    topo, reg, ledger, adm = make_stack(topo, [resident])
+    verdict, slots = adm.decide(safe_spec())
+    assert verdict == AdmissionVerdict.QUEUE and slots is None
+    assert "NEW" not in reg
+
+
+def test_unit_feasibility_respects_gpu_budget():
+    """A 7g slice only fits a device with 7 free units."""
+    specs = [TenantSpec(name=f"L{i}", sizes=SIZES, rate=1.0,
+                        placement=(f"h0:g{i}:s0",)) for i in range(8)]
+    topo, reg, ledger, adm = make_stack(specs=specs)
+    big = safe_spec("BIG", rate=1.0, profile="7g.80gb")
+    verdict, slots = adm.decide(big)
+    assert verdict == AdmissionVerdict.QUEUE      # every device has 2u used
+    ledger.release("L3")
+    reg.remove("L3")
+    admitted = adm.retry_queued()
+    assert [s.name for s, _ in admitted] == ["BIG"]
+    assert ledger.slots_of("BIG")[0].device == "h0:g3"
+
+
+def test_queued_tenant_admits_once_slot_frees():
+    """The paper's QUEUE verdict is a promise: departures re-trigger
+    placement and the queued tenant lands."""
+    topo = ClusterTopology(num_hosts=1, devices_per_host=2,
+                           devices_per_root=2, numa_per_host=1,
+                           slots_per_device=1)           # 2 slots total
+    specs = [TenantSpec(name="A", rate=2.0, sizes=SIZES,
+                        placement=("h0:g0:s0",)),
+             TenantSpec(name="B", rate=2.0, sizes=SIZES,
+                        placement=("h0:g1:s0",))]
+    topo, reg, ledger, adm = make_stack(topo, specs)
+    assert ledger.free_slots() == []
+    verdict, _ = adm.decide(safe_spec(rate=2.0), now=1.0)
+    assert verdict == AdmissionVerdict.QUEUE
+    assert adm.retry_queued(now=2.0) == []       # still full
+    adm.release("A", now=3.0)                    # departure frees a slot
+    admitted = adm.retry_queued(now=3.0)
+    assert [s.name for s, _ in admitted] == ["NEW"]
+    assert adm.queue == []
+    assert ledger.owner_of("h0:g0:s0") == "NEW/r0"
+    assert "NEW" in reg and "A" not in reg
+    ledger.check()
+
+
+def test_multi_replica_admission_spreads_and_accounts_demand():
+    topo, reg, ledger, adm = make_stack(topo=make_p4d_cluster(2))
+    spec = safe_spec("MR", replicas=4, rate=8.0)
+    verdict, slots = adm.decide(spec)
+    assert verdict == AdmissionVerdict.ADMIT and len(slots) == 4
+    keys = [s.key for s in slots]
+    assert len(set(keys)) == 4                   # distinct slots
+    per_rep = spec.rate * spec.mean_size / 4
+    roots = {topo.root_of(s.device) for s in slots}
+    for r in roots:
+        assert ledger.root_demand(r) > 0
+    total = sum(ledger.root_demand(r) for r in topo.roots())
+    assert total == pytest.approx(per_rep * 4)
+
+
+def test_duplicate_admission_refused():
+    topo, reg, ledger, adm = make_stack(
+        specs=[TenantSpec(name="T1", sizes=SIZES,
+                          placement=("h0:g0:s0",))])
+    with pytest.raises(ValueError):
+        adm.decide(TenantSpec(name="T1", sizes=SIZES))
+
+
+def test_duplicate_queued_name_refused_and_release_purges_queue():
+    """A name can be queued at most once, and a departing tenant's
+    queued copy is dropped (retry_queued stays crash-free)."""
+    topo, reg, ledger, adm = make_stack(cfg=AdmissionConfig(max_queue=4))
+    hot = safe_spec("HOT", rate=200.0)        # never placeable
+    verdict, _ = adm.decide(hot)
+    assert verdict == AdmissionVerdict.QUEUE
+    with pytest.raises(ValueError):
+        adm.decide(safe_spec("HOT", rate=200.0))
+    assert [q.name for q in adm.queue] == ["HOT"]
+    adm.release("HOT")                        # caller gives up on it
+    assert adm.queue == []
+    assert adm.retry_queued() == []           # nothing stale left behind

@@ -1,0 +1,153 @@
+"""DeviceLedger invariants, property-tested (hypothesis, via the repo's
+deterministic stub when the real package is absent): per-GPU budget never
+exceeded, no slot double-occupied, move is occupancy-conserving, release
+is idempotent."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ledger import DeviceLedger, LedgerError
+from repro.core.profiles import A100_MIG
+from repro.core.tenancy import TenantRegistry
+from repro.core.topology import Slot, make_p4d_cluster
+
+pytestmark = pytest.mark.tier2
+
+TOPO = make_p4d_cluster(1)
+SLOTS = TOPO.slots()
+TENANTS = [f"P{i}" for i in range(6)]
+
+# one random operation: (kind, tenant, replica, slot index, units)
+ops = st.tuples(st.sampled_from(["occupy", "release", "move", "resize"]),
+                st.sampled_from(TENANTS),
+                st.integers(min_value=0, max_value=1),
+                st.integers(min_value=0, max_value=len(SLOTS) - 1),
+                st.integers(min_value=1, max_value=7))
+
+
+def apply_op(ledger, op):
+    """Apply one op; invalid ops must raise LedgerError and leave the
+    ledger untouched (their effect is exactly 'nothing happened')."""
+    kind, tenant, replica, sidx, units = op
+    try:
+        if kind == "occupy":
+            ledger.occupy(tenant, SLOTS[sidx], units, replica=replica,
+                          demand=float(units) * 1e9)
+        elif kind == "release":
+            ledger.release(tenant, replica)
+        elif kind == "move":
+            ledger.move(tenant, replica, SLOTS[sidx])
+        elif kind == "resize":
+            ledger.set_units(tenant, units)
+    except LedgerError:
+        pass
+
+
+@given(st.lists(ops, min_size=1, max_size=60))
+@settings(max_examples=60, deadline=None)
+def test_budget_never_exceeded_and_no_double_occupancy(op_list):
+    ledger = DeviceLedger(TOPO, budget_per_gpu=7)
+    for op in op_list:
+        apply_op(ledger, op)
+        ledger.check()                       # all invariants, every step
+        for dev in TOPO.devices():
+            assert ledger.used_units(dev) <= 7
+        occupied = [e.slot.key for e in ledger.entries()]
+        assert len(occupied) == len(set(occupied))
+        # occupancy and free set partition the slot space
+        assert len(occupied) + len(ledger.free_slots()) == len(SLOTS)
+
+
+@given(st.lists(ops, min_size=1, max_size=30),
+       st.integers(min_value=0, max_value=len(SLOTS) - 1))
+@settings(max_examples=60, deadline=None)
+def test_move_is_occupancy_conserving(op_list, target_idx):
+    ledger = DeviceLedger(TOPO, budget_per_gpu=7)
+    for op in op_list:
+        apply_op(ledger, op)
+    entries = ledger.entries()
+    if not entries:
+        return
+    entry = entries[0]
+    n_before = len(ledger.entries())
+    units_before = sum(e.units for e in ledger.entries())
+    src = entry.slot
+    target = SLOTS[target_idx]
+    try:
+        ledger.move(entry.tenant, entry.replica, target)
+    except LedgerError:
+        # refused: nothing changed
+        assert ledger.owner_of(src.key) == entry.owner
+    else:
+        if target.key != src.key:
+            assert ledger.owner_of(src.key) is None
+        assert ledger.owner_of(target.key) == entry.owner
+    # conserved either way: same entry count, same total units
+    assert len(ledger.entries()) == n_before
+    assert sum(e.units for e in ledger.entries()) == units_before
+    ledger.check()
+
+
+@given(st.lists(ops, min_size=1, max_size=30),
+       st.sampled_from(TENANTS))
+@settings(max_examples=60, deadline=None)
+def test_release_is_idempotent(op_list, tenant):
+    ledger = DeviceLedger(TOPO, budget_per_gpu=7)
+    for op in op_list:
+        apply_op(ledger, op)
+    ledger.release(tenant)
+    view_once = ledger.view()
+    assert ledger.release(tenant) == 0       # second release: no-op
+    assert ledger.view() == view_once
+    assert ledger.slots_of(tenant) == []
+    ledger.check()
+
+
+@given(st.lists(ops, min_size=1, max_size=40))
+@settings(max_examples=40, deadline=None)
+def test_view_is_consistent_with_queries(op_list):
+    ledger = DeviceLedger(TOPO, budget_per_gpu=7, home_devices=("h0:g0",),
+                          ambient_units=3)
+    for op in op_list:
+        apply_op(ledger, op)
+    view = ledger.view()
+    for dev in TOPO.devices():
+        assert view["units"][dev] == ledger.used_units(dev)
+        assert view["headroom"][dev] == ledger.headroom_units(dev)
+        ambient = 0 if dev == "h0:g0" else 3
+        assert view["headroom"][dev] == max(
+            0, 7 - view["units"][dev] - ambient)
+    for key, owner in view["occupancy"].items():
+        assert ledger.owner_of(key) == owner
+
+
+# ------------------------------------------------- registry construction
+def test_from_registry_matches_resolved_placements():
+    topo = make_p4d_cluster(2)
+    reg = TenantRegistry.slo_fleet(4, 2)
+    placements = reg.resolve_placements(topo)
+    ledger = DeviceLedger.from_registry(topo, reg, A100_MIG, placements)
+    for spec in reg:
+        keys = [s.key for s in ledger.slots_of(spec.name)]
+        want = [s.key for s in placements[spec.name]]
+        if spec.is_latency:
+            assert keys == want
+        else:
+            assert keys == want[:1] or keys == want
+    ledger.check()
+    # ETL's fabric demand lands on its root
+    etl_root = topo.root_of(ledger.slots_of("ETL")[0].device)
+    assert ledger.root_demand(etl_root) >= reg["ETL"].pcie_demand
+
+
+def test_occupy_rejects_oversubscription_and_taken_slot():
+    ledger = DeviceLedger(TOPO, budget_per_gpu=7)
+    ledger.occupy("A", Slot(0, "h0:g0", 0), 4)
+    with pytest.raises(LedgerError):
+        ledger.occupy("B", Slot(0, "h0:g0", 1), 4)       # 8 > 7 units
+    with pytest.raises(LedgerError):
+        ledger.occupy("C", Slot(0, "h0:g0", 0), 1)       # slot taken
+    ledger.occupy("B", Slot(0, "h0:g0", 1), 3)           # exactly 7: fits
+    assert ledger.used_units("h0:g0") == 7
+    with pytest.raises(LedgerError):
+        ledger.set_units("B", 4)                          # resize past 7
+    assert ledger.used_units("h0:g0") == 7

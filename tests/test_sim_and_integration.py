@@ -1,15 +1,11 @@
 """End-to-end behaviour: the controller against the discrete-event cluster
-(short runs), reproducing the paper's *directional* claims; plus the
-admission controller and the real serving-engine integration."""
+(short runs), reproducing the paper's *directional* claims.  (The
+registry-driven admission matrix lives in tests/test_admission.py.)"""
 import numpy as np
 import pytest
 
-from repro.core.admission import (AdmissionConfig, AdmissionController,
-                                  AdmissionVerdict, TenantDemand)
 from repro.core.controller import Controller, ControllerConfig
-from repro.core.kingman import GG1
 from repro.core.policy import PolicyConfig
-from repro.core.topology import Slot, make_p4d_cluster
 from repro.sim.cluster import ClusterSim
 from repro.sim.params import SimParams, default_schedule
 
@@ -91,24 +87,22 @@ def test_mig_moves_are_rare():
     assert res.actions.get("move", 0) < 5
 
 
-# ------------------------------------------------------------- admission
-def test_admission_queue_and_reject():
-    topo = make_p4d_cluster(1)
-    adm = AdmissionController(topo, AdmissionConfig(max_queue=1))
-    placements = {"T1": Slot(0, "h0:g0", 0)}
-    demands = {"T1": TenantDemand("T1", 1e9)}
-    gg1 = {"T1": GG1(arrival_rate=30, mean_service=0.008)}
-    heavy = TenantDemand("T9", 30e9)     # exceeds any root capacity
-    verdict, slot = adm.decide(heavy, placements, demands, gg1,
-                               topo.slots())
-    assert verdict == AdmissionVerdict.QUEUE and slot is None
-    verdict, _ = adm.decide(heavy, placements, demands, gg1, topo.slots())
-    assert verdict == AdmissionVerdict.REJECT
+# ------------------------------------------------------- ledger coupling
+def test_sim_ledger_mirrors_replica_state():
+    """The sim's free_slots/headroom derive from the shared ledger, and
+    the ledger tracks actuator-driven moves/reconfigures."""
+    from repro.core.profiles import A100_MIG
 
-
-def test_admission_admits_light_tenant():
-    topo = make_p4d_cluster(1)
-    adm = AdmissionController(topo)
-    light = TenantDemand("T9", 1e9)
-    verdict, slot = adm.decide(light, {}, {}, {}, topo.slots())
-    assert verdict == AdmissionVerdict.ADMIT and slot is not None
+    sim = ClusterSim(SimParams(duration_s=60.0, schedule=()))
+    assert {s.key for s in sim.free_slots()} == \
+        {s.key for s in sim.ledger.free_slots()}
+    assert sim.ledger.owner_of("h0:g0:s0") == "T1/r0"
+    h0 = sim.headroom_units("h0:g0")          # T1 (2u) + T3 (2u), home
+    assert h0 == 3
+    sim.reconfigure("T1", A100_MIG["4g.40gb"])
+    assert sim.headroom_units("h0:g0") == h0 - 2
+    target = next(s for s in sim.free_slots() if s.device == "h0:g2")
+    sim.move("T1", target)
+    assert sim.ledger.owner_of(target.key) == "T1/r0"
+    assert sim.ledger.owner_of("h0:g0:s0") is None
+    sim.ledger.check()
