@@ -16,9 +16,14 @@ fleet's DeviceLedger, with periodic departures freeing capacity so QUEUE'd
 tenants re-admit; per-verdict counts are reported alongside the arbiter
 audit and the ledger invariants are asserted at the end.
 
+``--engine-backend dense|paged|both`` adds a real-engine arm (once per
+run, not per cell): a small multi-tenant trace served by live JAX engines
+via ``repro.launch.serve`` on the selected KV backend(s), so the sweep's
+JSON also tracks the serving runtime the simulator abstracts.
+
     PYTHONPATH=src:. python benchmarks/e5_multitenant.py \
         [--tenants 2,4,8] [--replicas 1,2] [--duration 900] [--seed 0] \
-        [--churn] [--out e5.json] [--smoke]
+        [--churn] [--engine-backend both] [--out e5.json] [--smoke]
 """
 from __future__ import annotations
 
@@ -161,8 +166,26 @@ def run_cell(n_tenants: int, replicas: int, duration: float,
     return out
 
 
+def run_engine_arm(backend: str, seed: int) -> dict:
+    """Small real-engine multi-tenant trace on the selected backend(s)."""
+    from repro.launch.serve import serve
+    backends = ("dense", "paged") if backend == "both" else (backend,)
+    arm = {}
+    for b in backends:
+        res = serve(arch="stablelm_3b", requests=6, qps=4.0, prompt_len=32,
+                    max_new=4, slots=2, num_tenants=2, replicas=1,
+                    with_controller=False, seed=seed, verbose=False,
+                    backend=b)
+        arm[b] = {name: {k: stats[k] for k in
+                         ("completed", "preempted", "ttft_p99_ms",
+                          "itl_p99_ms")}
+                  for name, stats in res.items()
+                  if isinstance(stats, dict) and "completed" in stats}
+    return arm
+
+
 def run(tenant_counts=(2, 4, 8), replica_counts=(1, 2), duration=900.0,
-        seed=0, verbose=True, churn=False) -> dict:
+        seed=0, verbose=True, churn=False, engine_backend=None) -> dict:
     sweep = []
     for n in tenant_counts:
         for r in replica_counts:
@@ -192,6 +215,15 @@ def run(tenant_counts=(2, 4, 8), replica_counts=(1, 2), duration=900.0,
         "sweep": sweep,
         "budget_respected": all(c["arbiter"]["ok"] for c in sweep),
     }
+    if engine_backend:
+        out["engine_arm"] = run_engine_arm(engine_backend, seed)
+        if verbose:
+            for b, tenants in out["engine_arm"].items():
+                done = sum(t["completed"] for t in tenants.values())
+                worst = max((t["ttft_p99_ms"] for t in tenants.values()),
+                            default=0.0)
+                print(f"  engine arm [{b}]: {done} completed, "
+                      f"worst TTFT p99 {worst:.1f}ms")
     if verbose:
         print(f"  per-GPU unit budget respected everywhere: "
               f"{out['budget_respected']}")
@@ -209,6 +241,10 @@ def main():
     ap.add_argument("--churn", action="store_true",
                     help="add the admission-churn arm (per-verdict counts "
                          "alongside the arbiter audit)")
+    ap.add_argument("--engine-backend", default=None,
+                    choices=("dense", "paged", "both"),
+                    help="add a real-engine serving arm on the selected "
+                         "KV backend(s)")
     ap.add_argument("--out", default=None, help="write JSON here")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI config: 4 tenants x 2 replicas, 240 s")
@@ -227,7 +263,7 @@ def main():
         duration = args.duration
     print("== E5: multi-tenant scaling (N SLO tenants x R replicas) ==")
     out = run(tenant_counts, replica_counts, duration, args.seed,
-              churn=args.churn)
+              churn=args.churn, engine_backend=args.engine_backend)
     payload = json.dumps(out, indent=2)
     if args.out:
         with open(args.out, "w") as f:

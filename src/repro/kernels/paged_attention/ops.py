@@ -1,4 +1,23 @@
-"""Jit'd public wrapper for paged decode attention."""
+"""Jit'd public wrapper for paged decode attention.
+
+This is the entry point the paged serving runtime calls each decode step
+with *real* per-sequence block tables and lengths (built from the
+``PagedKVCache`` page tables).  ``impl`` selects the execution path:
+
+  * ``"auto"``   — Pallas kernel on TPU, pure-jnp oracle elsewhere (the
+                   oracle is the fast CPU fallback; the interpreted kernel
+                   is ~100x slower than the oracle on CPU);
+  * ``"kernel"`` — always the Pallas kernel (interpret mode off-TPU), used
+                   by the parity tests and kernel benchmarks;
+  * ``"ref"``    — always the pure-jnp oracle.
+
+Contract expected by both paths: ``block_tables`` may be narrower than the
+maximum pages-per-sequence (the runtime buckets the width to the longest
+live sequence so decode cost tracks live tokens, not the seq cap), every
+table entry must be a valid page index, and ``lengths`` must be >= 1
+(masked-out padding lanes are clamped by the caller — a zero length would
+NaN the online softmax).
+"""
 from __future__ import annotations
 
 import functools
@@ -13,9 +32,15 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+@functools.partial(jax.jit, static_argnames=("scale", "impl", "interpret"))
 def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
-                    scale=None, interpret: bool = False):
+                    scale=None, impl: str = "auto", interpret: bool = False):
+    """q: [B,H,hd]; pages: [P,page,KV,hd]; tables: [B,PPS]; lengths: [B]."""
+    if impl not in ("auto", "kernel", "ref"):
+        raise ValueError(f"unknown paged_attention impl {impl!r}")
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return paged_attention_ref(q, k_pages, v_pages, block_tables, lengths,
+                                   scale=scale)
     return _kernel(q, k_pages, v_pages, block_tables, lengths, scale=scale,
                    interpret=interpret or not _on_tpu())
 

@@ -3,7 +3,12 @@ first-class integration), generalized to N latency tenants x R replicas.
 
     PYTHONPATH=src python -m repro.launch.serve --arch stablelm_3b \
         --requests 32 --qps 4 [--tenants 2] [--replicas 2] \
-        [--interfere] [--no-controller] [--admit 2]
+        [--interfere] [--no-controller] [--admit 2] [--backend paged]
+
+``--backend paged`` swaps every tenant-replica engine onto the
+block-table paged runtime (chunked prefill + SLO-aware preemption over a
+shared page pool) instead of the dense slot cache; the rest of the
+harness — fabric, controller, admission — is unchanged.
 
 Runs one continuous-batching engine per tenant-replica on the reduced
 config, all sharing a FabricState (the PS fabric model injects PCIe-class
@@ -26,7 +31,7 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
           prompt_len: int = 48, max_new: int = 8, slots: int = 4,
           num_tenants: int = 1, replicas: int = 1, interfere: bool = False,
           with_controller: bool = True, seed: int = 0, verbose: bool = True,
-          admit: int = 0):
+          admit: int = 0, backend: str = "dense"):
     """Virtual-time multi-tenant serving run; returns per-tenant stats."""
     import numpy as np
     from repro.configs.base import get_config, reduced
@@ -50,7 +55,7 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
     names = ["T1"] if num_tenants == 1 else [f"L{i}"
                                              for i in range(num_tenants)]
     engines = {name: [ServingEngine(cfg, max_slots=slots, seq_cap=128,
-                                    seed=seed + 17 * i + j)
+                                    seed=seed + 17 * i + j, backend=backend)
                       for j in range(replicas)]
                for i, name in enumerate(names)}
     fabric = FabricState()
@@ -141,13 +146,15 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
     for name in names:
         gen_traffic(name)
     shed = {name: 0 for name in names}
+    preempts = {name: 0 for name in names}
     # per-engine availability clock: engines run in parallel
     avail = {(name, j): 0.0 for name in names for j in range(replicas)}
     next_sample = 1.0
     if verbose:
         print(f"serving {cfg.name}: {len(names)} tenant(s) x {replicas} "
               f"replica(s), {requests} req/tenant at {qps} qps "
-              f"(interference={'on' if interfere else 'off'}, "
+              f"(backend={backend}, "
+              f"interference={'on' if interfere else 'off'}, "
               f"controller={'on' if with_controller else 'off'})")
 
     # ---- §2.3 admission path: K late tenants arrive mid-run ----------
@@ -167,13 +174,15 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
         name = spec.name
         names.append(name)
         engines[name] = [ServingEngine(cfg, max_slots=slots, seq_cap=128,
-                                       seed=seed + 1000 + len(names))]
+                                       seed=seed + 1000 + len(names),
+                                       backend=backend)]
         actuator.engines[name] = engines[name]
         actuator.compute_scales.setdefault(name, 1.0)
         actuator.pauses.setdefault(name, 0.0)
         warm(name)
         windows[name] = LatencyWindow()
         shed[name] = 0
+        preempts[name] = 0
         avail[(name, 0)] = t
         fabric.set_on_root(name, any(
             topo.root_of(s.device) == contended for s in slots_))
@@ -248,6 +257,7 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
                 if avail[(name, j)] > now[0] or not eng.has_work():
                     continue
                 rep = eng.step()
+                preempts[name] += len(rep.preempted)
                 if rep.kind == "idle":
                     continue
                 transfer = (rep.tokens * 0.4e6 / fabric.bandwidth(name)
@@ -285,6 +295,7 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
             "completed": len(done),
             "offered": requests,
             "shed": shed[name],
+            "preempted": preempts[name],
             "ttft_p50_ms": float(np.quantile(ttfts, .5)) if len(done) else 0.0,
             "ttft_p99_ms": float(np.quantile(ttfts, .99)) if len(done) else 0.0,
             "itl_p99_ms": (float(np.quantile(np.array(itls) * 1e3, .99))
@@ -324,6 +335,9 @@ def main():
     ap.add_argument("--no-controller", action="store_true")
     ap.add_argument("--admit", type=int, default=0,
                     help="late-arriving tenants pushed through admission")
+    ap.add_argument("--backend", choices=("dense", "paged"), default="dense",
+                    help="engine KV backend: dense slot cache or the "
+                         "block-table paged runtime")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     serve(arch=args.arch, requests=args.requests, qps=args.qps,
@@ -331,7 +345,7 @@ def main():
           slots=args.slots, num_tenants=args.tenants,
           replicas=args.replicas, interfere=args.interfere,
           with_controller=not args.no_controller, seed=args.seed,
-          admit=args.admit)
+          admit=args.admit, backend=args.backend)
 
 
 if __name__ == "__main__":

@@ -108,9 +108,13 @@ def attn_cache_plan(cfg: ModelConfig, layer: LayerSpec, batch: int, seq_len: int
                          pspec=scale_spec),
             "pos": P((batch, cap), dtype="int32", pspec=pos_spec),
         }
+    # the unquantized cache stores the model dtype (bf16 for every real
+    # config; fp32 configs keep fp32 so cached K/V match prefill exactly)
     return {
-        "k": P((batch, cap, a.num_kv_heads, a.head_dim), pspec=kvp),
-        "v": P((batch, cap, a.num_kv_heads, a.head_dim), pspec=kvp),
+        "k": P((batch, cap, a.num_kv_heads, a.head_dim), dtype=cfg.dtype,
+               pspec=kvp),
+        "v": P((batch, cap, a.num_kv_heads, a.head_dim), dtype=cfg.dtype,
+               pspec=kvp),
         "pos": P((batch, cap), dtype="int32", pspec=pos_spec),
     }
 
@@ -134,8 +138,10 @@ def cross_cache_plan(cfg: ModelConfig, batch: int, enc_len: int,
     a = cfg.attn
     kvp = policy.kv_cache or ()
     return {
-        "ck": P((batch, enc_len, a.num_kv_heads, a.head_dim), pspec=kvp),
-        "cv": P((batch, enc_len, a.num_kv_heads, a.head_dim), pspec=kvp),
+        "ck": P((batch, enc_len, a.num_kv_heads, a.head_dim), dtype=cfg.dtype,
+                pspec=kvp),
+        "cv": P((batch, enc_len, a.num_kv_heads, a.head_dim), dtype=cfg.dtype,
+                pspec=kvp),
     }
 
 

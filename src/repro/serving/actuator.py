@@ -236,3 +236,19 @@ class ServingActuator:
 
     def headroom_units(self, device: str) -> int:
         return self.ledger.headroom_units(device)
+
+    # ------------------------------------------------------- KV observability
+    def kv_pressure(self, tenant: str) -> Dict[str, float]:
+        """Aggregate KV page-pool pressure across a tenant's replicas
+        (works on either engine backend; the paged runtime's reserved ==
+        live pages, the dense backend reserves prompt+max_new up front).
+        Distinguishing reserved from used is what lets admission see
+        headroom the dense reservation hides."""
+        engs = self.tenant_engines(tenant)
+        used = sum(e.metrics.kv_used_pages for e in engs)
+        reserved = sum(e.metrics.kv_reserved_pages for e in engs)
+        total = sum(e.metrics.kv_total_pages for e in engs)
+        return {"used_pages": used, "reserved_pages": reserved,
+                "total_pages": total,
+                "reserved_frac": reserved / total if total else 0.0,
+                "used_frac": used / total if total else 0.0}

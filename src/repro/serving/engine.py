@@ -1,12 +1,22 @@
-"""Slot-based continuous-batching serving engine.
+"""Continuous-batching serving engine with two interchangeable backends.
 
 One engine instance serves one tenant's model on one slice.  The engine
-performs *one unit of work* per ``step()`` call — a prefill of the oldest
-queued request, or one batched decode step over all active slots — and
-reports the measured compute seconds.  The harness (real-time driver or the
-cluster simulator) decides what wall/virtual time the step consumed (e.g.
-adding PS-fabric transfer delay) and then calls ``finalize_step`` so TTFT
-and completion timestamps reflect the environment.
+performs *one unit of work* per ``step()`` call — a prefill (or, paged
+backend, one prefill *chunk*) or one batched decode step — and reports the
+measured compute seconds.  The harness (real-time driver or the cluster
+simulator) decides what wall/virtual time the step consumed (e.g. adding
+PS-fabric transfer delay) and then calls ``finalize_step`` so TTFT and
+completion timestamps reflect the environment.
+
+Backends (``backend=`` ctor arg, same public API either way):
+
+* ``"dense"`` — the original slot cache: ``[max_slots, seq_cap]`` KV per
+  layer, whole-prompt prefill, prompt+max_new pages reserved at submit
+  (admission rejects when the pool is full).
+* ``"paged"`` — the block-table runtime (``serving/paged_runtime.py``):
+  KV lives in a page pool addressed through ``PagedKVCache`` block tables,
+  prompts prefill in chunks interleaved with decode, and pool exhaustion
+  triggers SLO-aware preemption instead of submit-time rejection.
 
 Guardrail hook (paper §2.2, MPS-quota analogue): ``set_quota(frac)`` caps
 the engine's concurrency — the number of active decode slots and the
@@ -50,12 +60,19 @@ class StepReport:
     prefilled: Optional[Request] = None
     decoded: List[Request] = field(default_factory=list)
     completed: List[Request] = field(default_factory=list)
+    # paged backend: sequences evicted (pages released, requeued for a full
+    # restart) by SLO-aware preemption during this step
+    preempted: List[Request] = field(default_factory=list)
 
 
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params=None, *, max_slots: int = 8,
                  seq_cap: int = 256, page_size: int = 16, seed: int = 0,
-                 policy=NO_POLICY):
+                 policy=NO_POLICY, backend: str = "dense",
+                 pool_pages: Optional[int] = None,
+                 chunk_tokens: Optional[int] = None, attn_impl: str = "auto"):
+        if backend not in ("dense", "paged"):
+            raise ValueError(f"unknown backend {backend!r}")
         self.cfg = cfg
         self.model = Model(cfg)
         self.policy = policy
@@ -64,7 +81,24 @@ class ServingEngine:
         self.params = params
         self.max_slots = max_slots
         self.seq_cap = seq_cap
+        self.backend = backend
         self.quota = 1.0
+        self.metrics = TenantMetrics()
+        self._rng = np.random.default_rng(seed)
+        if backend == "paged":
+            from repro.serving.paged_runtime import PagedRuntime
+            self.runtime = PagedRuntime(
+                cfg, self.params, max_slots=max_slots, seq_cap=seq_cap,
+                page_size=page_size, pool_pages=pool_pages,
+                chunk_tokens=chunk_tokens, policy=policy,
+                attn_impl=attn_impl, seed=seed)
+            self.kv = self.runtime.kv
+            # the scheduler's waiting deque doubles as the engine queue
+            # (same object for the lifetime of the engine, so load-based
+            # dispatch `len(engine.queue)` works on either backend)
+            self.queue = self.runtime.queue
+            return
+        self.runtime = None
         self.queue: deque = deque()
         self.slots: List[Optional[Request]] = [None] * max_slots
         self.positions = np.zeros(max_slots, np.int32)
@@ -72,25 +106,30 @@ class ServingEngine:
         # paged accounting mirrors the dense slot cache capacity
         self.kv = PagedKVCache(num_pages=max_slots * (seq_cap // page_size),
                                page_size=page_size)
-        self.metrics = TenantMetrics()
         cplan = self.model.cache_plan(max_slots, seq_cap, policy)
         self.cache = init_cache_from_plan(cplan)
         self._decode_fn = jax.jit(
             lambda p, c, t, q: decode_step(p, cfg, c, t, q, policy))
         self._prefill_fn = jax.jit(
             lambda p, b: prefill(p, cfg, b, policy, seq_cap=seq_cap))
-        self._rng = np.random.default_rng(seed)
 
     # ------------------------------------------------------------------ API
     def set_quota(self, frac: float) -> None:
         self.quota = float(np.clip(frac, 0.1, 1.0))
+        if self.runtime is not None:
+            self.runtime.set_budget(self.active_slot_budget)
 
     @property
     def active_slot_budget(self) -> int:
         return max(1, int(np.ceil(self.quota * self.max_slots)))
 
     def submit(self, req: Request) -> bool:
-        """Returns False if rejected by admission control."""
+        """Returns False if rejected by admission control.  The dense
+        backend rejects whenever the conservative prompt+max_new page
+        reservation does not fit; the paged backend only rejects requests
+        that could NEVER fit and resolves pressure by preemption."""
+        if self.runtime is not None:
+            return self.runtime.submit(req)
         if not self.kv.can_admit(req.prompt_len, req.max_new_tokens):
             return False
         self.kv.allocate(req.req_id, req.prompt_len,
@@ -99,14 +138,26 @@ class ServingEngine:
         return True
 
     def active(self) -> List[Request]:
+        if self.runtime is not None:
+            return self.runtime.running()
         return [r for r in self.slots if r is not None]
 
     def has_work(self) -> bool:
+        if self.runtime is not None:
+            return self.runtime.has_work()
         return bool(self.queue) or any(s is not None for s in self.slots)
 
     # ----------------------------------------------------------------- step
     def step(self) -> StepReport:
         """One unit of work.  Compute time measured with a real clock."""
+        report = self._step_backend()
+        self.metrics.observe_kv(self.kv.used_pages, self.kv.reserved_pages,
+                                self.kv.num_pages)
+        return report
+
+    def _step_backend(self) -> StepReport:
+        if self.runtime is not None:
+            return self.runtime.step()
         free = [i for i, s in enumerate(self.slots) if s is None]
         n_active = self.max_slots - len(free)
         if self.queue and free and n_active < self.active_slot_budget:
@@ -136,6 +187,24 @@ class ServingEngine:
             self.metrics.observe_tokens(end_time, report.tokens)
 
     # ------------------------------------------------------------ internals
+    def _merge_slot_cache(self, cache1, slot: int) -> None:
+        """Merge a single-sequence prefill cache into the batched slot
+        cache.  Prefix-layer leaves are [batch, ...] but period leaves are
+        stacked [repeats, batch, ...] — indexing them with ``at[slot]``
+        would hit the repeats axis and broadcast one request's KV across
+        every slot (and silently drop merges for slot >= repeats), so the
+        two groups must be merged along different axes."""
+        new = dict(self.cache)
+        if "prefix" in self.cache:
+            new["prefix"] = jax.tree.map(
+                lambda full, one: full.at[slot].set(one[0]),
+                self.cache["prefix"], cache1["prefix"])
+        if "period" in self.cache:
+            new["period"] = jax.tree.map(
+                lambda full, one: full.at[:, slot].set(one[:, 0]),
+                self.cache["period"], cache1["period"])
+        self.cache = new
+
     def _prompt_tokens(self, req: Request):
         if req.prompt_tokens is not None:
             return jnp.asarray(req.prompt_tokens, jnp.int32)[None]
@@ -159,9 +228,7 @@ class ServingEngine:
         logits = jax.block_until_ready(logits)
         dt = time.perf_counter() - t0
         first_tok = int(jnp.argmax(logits[0]))
-        # merge the single-sequence cache into the batched slot cache
-        self.cache = jax.tree.map(lambda full, one: full.at[slot].set(one[0]),
-                                  self.cache, cache1)
+        self._merge_slot_cache(cache1, slot)
         req.slot = slot
         req.generated = 1
         req.output_tokens.append(first_tok)

@@ -4,6 +4,15 @@ Host-side page-table bookkeeping (free list, per-sequence block tables) plus
 device-side page pools consumed by the ``paged_attention`` Pallas kernel.
 The dense slot-cache path used by the pure-jnp models shares the same
 accounting so admission control sees identical memory pressure either way.
+
+Two occupancy views are exposed (they differ under the dense engine's
+conservative prompt+max_new reservation, and under the paged runtime's
+grow-on-demand reservation):
+
+  * ``reserved_pages`` — pages taken off the free list (capacity pressure:
+    what admission must respect);
+  * ``used_pages``     — pages holding live KV (``entry.length`` tokens):
+    what the decode kernels actually read.
 """
 from __future__ import annotations
 
@@ -56,6 +65,27 @@ class PagedKVCache:
         self._grow(entry, entry.length + 1)
         entry.length += 1
 
+    def reserve(self, seq_id: int, target_tokens: int) -> None:
+        """Grow a sequence's page list to cover ``target_tokens`` WITHOUT
+        marking them live — the paged runtime reserves before launching a
+        forward pass (the device scatter needs real page ids), then calls
+        :meth:`extend` once the tokens are actually written.  Allocates the
+        sequence lazily on first use (the paged runtime does not reserve
+        prompt+max_new at submit).  Raises MemoryError when the pool is
+        exhausted; partial growth is kept (tracked, released on release())."""
+        entry = self.tables.get(seq_id)
+        if entry is None:
+            entry = PageTableEntry(seq_id)
+            self.tables[seq_id] = entry
+        self._grow(entry, target_tokens)
+
+    def extend(self, seq_id: int, target_tokens: int) -> None:
+        """Mark the sequence as holding ``target_tokens`` live tokens
+        (monotone), growing pages if the caller skipped reserve()."""
+        entry = self.tables[seq_id]
+        self._grow(entry, target_tokens)
+        entry.length = max(entry.length, target_tokens)
+
     def _grow(self, entry: PageTableEntry, target_tokens: int) -> None:
         need = self.pages_needed(target_tokens)
         while len(entry.pages) < need:
@@ -70,13 +100,29 @@ class PagedKVCache:
     # -- views --------------------------------------------------------------
     def block_table(self, seq_id: int, pages_per_seq: int) -> np.ndarray:
         entry = self.tables[seq_id]
+        if len(entry.pages) > pages_per_seq:
+            raise ValueError(
+                f"seq {seq_id} holds {len(entry.pages)} pages but the block "
+                f"table is only {pages_per_seq} wide — a truncated table "
+                f"would make the kernel read the wrong pages")
         out = np.zeros(pages_per_seq, np.int32)
-        out[: len(entry.pages)] = entry.pages[:pages_per_seq]
+        out[: len(entry.pages)] = entry.pages
         return out
 
     def utilisation(self) -> float:
+        """Reserved fraction of the pool (capacity pressure)."""
         return 1.0 - len(self.free) / self.num_pages
+
+    def live_utilisation(self) -> float:
+        """Fraction of the pool holding live KV tokens."""
+        return self.used_pages / self.num_pages
+
+    @property
+    def reserved_pages(self) -> int:
+        """Pages off the free list (live KV + reserved-but-unwritten)."""
+        return self.num_pages - len(self.free)
 
     @property
     def used_pages(self) -> int:
-        return self.num_pages - len(self.free)
+        """Pages backing live KV (tokens actually written/accounted)."""
+        return sum(self.pages_needed(e.length) for e in self.tables.values())

@@ -112,9 +112,33 @@ class TenantMetrics:
     itl: LatencyWindow = field(default_factory=LatencyWindow)
     throughput_window: Deque[Tuple[float, int]] = field(
         default_factory=lambda: deque(maxlen=4096))
+    # KV page-pool gauges (latest sample): ``kv_used_pages`` counts pages
+    # holding live KV, ``kv_reserved_pages`` counts pages off the free list
+    # (live + reserved-but-unwritten) — under the dense backend's
+    # prompt+max_new reservation these diverge, and admission/utilisation
+    # signals must distinguish them
+    kv_used_pages: int = 0
+    kv_reserved_pages: int = 0
+    kv_total_pages: int = 0
 
     def observe_tokens(self, now: float, n: int) -> None:
         self.throughput_window.append((now, n))
+
+    def observe_kv(self, used: int, reserved: int, total: int) -> None:
+        self.kv_used_pages = used
+        self.kv_reserved_pages = reserved
+        self.kv_total_pages = total
+
+    def kv_utilisation(self) -> float:
+        """Reserved fraction of the pool (capacity pressure)."""
+        if not self.kv_total_pages:
+            return 0.0
+        return self.kv_reserved_pages / self.kv_total_pages
+
+    def kv_live_utilisation(self) -> float:
+        if not self.kv_total_pages:
+            return 0.0
+        return self.kv_used_pages / self.kv_total_pages
 
     def itl_p99(self, now: Optional[float] = None) -> float:
         return self.itl.quantile(0.99, now)

@@ -1,0 +1,403 @@
+"""Block-table-driven paged decode runtime (the vLLM-style serving core).
+
+Where the dense ``ServingEngine`` path stores KV in a ``[max_slots,
+seq_cap]`` slot cache, this runtime keeps every attention layer's KV in a
+fixed pool of ``page_size``-token pages (plus one trash page for masked
+lanes) and addresses it through per-sequence block tables owned by
+``PagedKVCache``.  Decode memory therefore scales with *live tokens*, the
+pool can be overcommitted (admission never reserves prompt+max_new up
+front), and the block-table width handed to the attention kernel is
+bucketed to the longest live sequence, so per-step attention cost tracks
+live context rather than ``max_slots x seq_cap``.
+
+Three forward passes, all pure and jitted:
+
+* ``prefill chunk`` — ``chunk_tokens`` prompt tokens at a time (padded to a
+  fixed width so one compilation serves every chunk): scatter the chunk's
+  K/V into the pages, then attend over the pages gathered through the
+  block table.  Interleaving chunks with decode steps is the scheduler's
+  job (``serving/sched.py``).
+* ``decode step`` — one token for every active sequence, batched to
+  ``max_slots`` lanes; attention runs through
+  ``kernels/paged_attention/ops.paged_attention`` (Pallas kernel on TPU /
+  interpret mode, jnp oracle as the CPU fallback — ``attn_impl``).
+* masked lanes write to the trash page and carry ``length=1`` so the
+  online softmax never sees an empty sequence.
+
+Only pure-GQA decoder stacks are supported (no MLA / SSM / RWKV mixers, no
+sliding windows, no cross-attention): that covers the paper's serving case
+study (OLMo-2, StableLM); everything else keeps the dense backend.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.kernels.paged_attention.ops import paged_attention
+from repro.models import attention as attn_mod
+from repro.models.common import NO_POLICY, ShardPolicy, apply_rope, rms_norm, shard
+from repro.models.model import _apply_ffn, _logits, embed_tokens
+from repro.serving.engine import StepReport
+from repro.serving.kvcache import PagedKVCache
+from repro.serving.request import Request
+from repro.serving.sched import PagedScheduler, SchedConfig
+
+
+def paged_unsupported_reason(cfg: ModelConfig) -> Optional[str]:
+    """None when the paged runtime can serve this config, else why not."""
+    if cfg.encoder is not None:
+        return "encoder-decoder models"
+    if cfg.frontend.kind != "none":
+        return "multimodal frontends"
+    if cfg.attn.kind != "gqa":
+        return f"attention kind {cfg.attn.kind!r}"
+    for layer in cfg.layer_specs():
+        if layer.mixer != "attn":
+            return f"mixer {layer.mixer!r}"
+        if layer.window:
+            return "sliding-window layers"
+        if layer.cross_attn:
+            return "cross-attention layers"
+    return None
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, (n - 1).bit_length())
+
+
+class PagedRuntime:
+    """One tenant-replica's paged serving state: page pools + scheduler +
+    jitted chunk-prefill / batched-decode forward passes."""
+
+    def __init__(self, cfg: ModelConfig, params, *, max_slots: int = 8,
+                 seq_cap: int = 256, page_size: int = 16,
+                 pool_pages: Optional[int] = None,
+                 chunk_tokens: Optional[int] = None,
+                 policy: ShardPolicy = NO_POLICY, attn_impl: str = "auto",
+                 seed: int = 0):
+        reason = paged_unsupported_reason(cfg)
+        if reason is not None:
+            raise ValueError(
+                f"paged backend does not support {reason} ({cfg.name}); "
+                f"use backend='dense'")
+        self.cfg = cfg
+        self.params = params
+        self.policy = policy
+        self.page = page_size
+        self.pps = -(-seq_cap // page_size)          # block-table width cap
+        self.seq_cap = self.pps * page_size
+        self.max_slots = max_slots
+        self.pool_pages = (pool_pages if pool_pages is not None
+                           else max_slots * self.pps)
+        chunk = chunk_tokens or min(self.seq_cap, 4 * page_size)
+        self.chunk = max(page_size, (chunk // page_size) * page_size)
+        self.attn_impl = attn_impl
+        self.kv = PagedKVCache(self.pool_pages, page_size)
+        self.sched = PagedScheduler(
+            self.kv, SchedConfig(chunk_tokens=self.chunk,
+                                 max_active=max_slots))
+        self.pools = self._init_pools()
+        # donate the pools so the per-step KV scatter updates in place
+        # (without aliasing every step would copy the whole page pool,
+        # making step cost O(pool) instead of O(live tokens))
+        self._prefill_fn = jax.jit(self._prefill_impl, donate_argnums=(1,))
+        self._decode_fn = jax.jit(self._decode_impl, donate_argnums=(1,))
+        self._rng = np.random.default_rng(seed)
+
+    # ------------------------------------------------------------- pools
+    def _init_pools(self) -> Dict[str, Any]:
+        a = self.cfg.attn
+        dt = jnp.dtype(self.cfg.dtype)
+        shape = (self.pool_pages + 1, self.page, a.num_kv_heads, a.head_dim)
+
+        def pool(stack: int = 0):
+            s = (stack,) + shape if stack else shape
+            return {"k": jnp.zeros(s, dt), "v": jnp.zeros(s, dt)}
+
+        pools: Dict[str, Any] = {}
+        if self.cfg.prefix:
+            pools["prefix"] = {f"layer{i}": pool()
+                               for i in range(len(self.cfg.prefix))}
+        if self.cfg.period:
+            pools["period"] = {f"sub{i}": pool(self.cfg.repeats)
+                               for i in range(len(self.cfg.period))}
+        return pools
+
+    # ------------------------------------------------------- forward: shared
+    def _scatter(self, kp, vp, k, v, page_ids, offs):
+        """Write one K/V row per lane/token into the page pools."""
+        kp = kp.at[page_ids, offs].set(k.astype(kp.dtype))
+        vp = vp.at[page_ids, offs].set(v.astype(vp.dtype))
+        return kp, vp
+
+    # ------------------------------------------------ forward: prefill chunk
+    def _prefill_layer(self, lp, h, layer: LayerSpec, positions2, page_ids,
+                       offs, block_table, kp, vp):
+        """One GQA layer over a prompt chunk, KV via the page pool.
+
+        Mirrors ``attn_mod.gqa_prefill`` numerics exactly (same einsums,
+        same ``_attend_block``), with the gathered pages standing in for
+        the chunk-local K/V: gathered slot t holds sequence position t, so
+        the causal mask alone excludes stale/unwritten slots."""
+        cfg, policy = self.cfg, self.policy
+        a = cfg.attn
+        scale = 1.0 / jnp.sqrt(a.head_dim).astype(jnp.float32)
+        xin = rms_norm(h, lp["norm1"], cfg.norm_eps)
+        ap = lp["attn"]
+        q = jnp.einsum("bsd,dhk->bshk", xin, ap["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", xin, ap["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", xin, ap["wv"])
+        q = shard(apply_rope(q, positions2, cfg.rope_theta), policy.heads)
+        k = apply_rope(k, positions2, cfg.rope_theta)
+        kp, vp = self._scatter(kp, vp, k[0], v[0], page_ids, offs)
+        t = block_table.shape[0] * self.page
+        k_all = kp[block_table].reshape(t, a.num_kv_heads, a.head_dim)[None]
+        v_all = vp[block_table].reshape(t, a.num_kv_heads, a.head_dim)[None]
+        pos_k = jnp.arange(t, dtype=jnp.int32)[None]
+        qg = attn_mod._split_heads(q, a.num_kv_heads)
+        ctx = attn_mod._attend_block(qg, k_all.astype(h.dtype),
+                                     v_all.astype(h.dtype), positions2, pos_k,
+                                     scale, a, layer, True, h.dtype)
+        ctx = ctx.reshape(1, -1, a.num_heads, a.head_dim)
+        out = jnp.einsum("bshk,hkd->bsd", ctx, ap["wo"])
+        h = h + shard(out, policy.act)
+        h, _, _ = _apply_ffn(lp, h, layer, cfg, policy)
+        return h, kp, vp
+
+    def _walk_layers(self, params, pools, h, layer_fn):
+        """Run ``layer_fn(lp, h, layer, kp, vp) -> (h, kp, vp)`` over the
+        prefix layers and the scanned period stack, threading each layer's
+        page pool through (the stacked period pools are indexed/updated
+        per scan step, mirroring the dense decode path), then apply the
+        final norm.  Shared by the chunk-prefill and decode forwards."""
+        cfg = self.cfg
+        new_pools = dict(pools)
+        if cfg.prefix:
+            new_pools["prefix"] = dict(pools["prefix"])
+            for i, layer in enumerate(cfg.prefix):
+                key = f"layer{i}"
+                p = pools["prefix"][key]
+                h, kp, vp = layer_fn(params["prefix"][key], h, layer,
+                                     p["k"], p["v"])
+                new_pools["prefix"][key] = {"k": kp, "v": vp}
+        if cfg.period:
+            def body(carry, xs):
+                hh, pp = carry
+                lp_stack, idx = xs
+                for i, layer in enumerate(cfg.period):
+                    sub = f"sub{i}"
+                    kp = jax.lax.dynamic_index_in_dim(pp[sub]["k"], idx, 0,
+                                                      keepdims=False)
+                    vp = jax.lax.dynamic_index_in_dim(pp[sub]["v"], idx, 0,
+                                                      keepdims=False)
+                    hh, kp, vp = layer_fn(lp_stack[sub], hh, layer, kp, vp)
+                    pp = {**pp, sub: {
+                        "k": jax.lax.dynamic_update_index_in_dim(
+                            pp[sub]["k"], kp, idx, 0),
+                        "v": jax.lax.dynamic_update_index_in_dim(
+                            pp[sub]["v"], vp, idx, 0)}}
+                return (hh, pp), ()
+
+            idxs = jnp.arange(cfg.repeats, dtype=jnp.int32)
+            (h, period_pools), _ = jax.lax.scan(
+                body, (h, pools["period"]), (params["period"], idxs))
+            new_pools["period"] = period_pools
+        return rms_norm(h, params["final_norm"], cfg.norm_eps), new_pools
+
+    def _prefill_impl(self, params, pools, tokens, start, valid, block_table):
+        """tokens [C] int32 (padded chunk); start/valid scalars int32;
+        block_table [PPS].  Returns (last-valid-token logits [V], pools)."""
+        cfg, policy = self.cfg, self.policy
+        c = tokens.shape[0]
+        positions = start + jnp.arange(c, dtype=jnp.int32)
+        positions2 = positions[None]
+        wmask = jnp.arange(c, dtype=jnp.int32) < valid
+        page_ids = jnp.where(wmask, block_table[positions // self.page],
+                             self.pool_pages)
+        offs = positions % self.page
+        h = embed_tokens(params, cfg, tokens[None], policy)
+        h, new_pools = self._walk_layers(
+            params, pools, h,
+            lambda lp, hh, layer, kp, vp: self._prefill_layer(
+                lp, hh, layer, positions2, page_ids, offs, block_table,
+                kp, vp))
+        h_last = jax.lax.dynamic_slice_in_dim(h, valid - 1, 1, axis=1)
+        logits = _logits(params, cfg, h_last, policy)[0, 0]
+        return logits, new_pools
+
+    # ---------------------------------------------------- forward: decode
+    def _decode_layer(self, lp, h, layer: LayerSpec, positions, page_ids,
+                      offs, block_tables, lengths, kp, vp):
+        cfg, policy = self.cfg, self.policy
+        a = cfg.attn
+        xin = rms_norm(h, lp["norm1"], cfg.norm_eps)
+        ap = lp["attn"]
+        pos2 = positions[:, None]
+        q = jnp.einsum("bsd,dhk->bshk", xin, ap["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", xin, ap["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", xin, ap["wv"])
+        q = apply_rope(q, pos2, cfg.rope_theta)
+        k = apply_rope(k, pos2, cfg.rope_theta)
+        kp, vp = self._scatter(kp, vp, k[:, 0], v[:, 0], page_ids, offs)
+        ctx = paged_attention(q[:, 0].astype(h.dtype), kp, vp, block_tables,
+                              lengths, impl=self.attn_impl)    # [B, H, hd]
+        out = jnp.einsum("bshk,hkd->bsd", ctx[:, None].astype(h.dtype),
+                         ap["wo"])
+        h = h + shard(out, policy.act)
+        h, _, _ = _apply_ffn(lp, h, layer, cfg, policy)
+        return h, kp, vp
+
+    def _decode_impl(self, params, pools, tokens, positions, block_tables,
+                     lengths, active):
+        """tokens/positions/lengths [B] int32, block_tables [B, W] int32
+        (W bucketed), active [B] bool.  Returns (logits [B, V], pools)."""
+        cfg, policy = self.cfg, self.policy
+        b = tokens.shape[0]
+        bidx = jnp.arange(b)
+        width = block_tables.shape[1]
+        slot = jnp.clip(positions // self.page, 0, width - 1)
+        page_ids = jnp.where(active, block_tables[bidx, slot],
+                             self.pool_pages)
+        offs = positions % self.page
+        lens = jnp.maximum(jnp.where(active, lengths, 1), 1)
+        h = embed_tokens(params, cfg, tokens[:, None], policy)
+        h, new_pools = self._walk_layers(
+            params, pools, h,
+            lambda lp, hh, layer, kp, vp: self._decode_layer(
+                lp, hh, layer, positions, page_ids, offs, block_tables,
+                lens, kp, vp))
+        logits = _logits(params, cfg, h, policy)[:, 0]
+        return logits, new_pools
+
+    # ------------------------------------------------------------ engine API
+    def submit(self, req: Request) -> bool:
+        """Rejects only requests that can NEVER fit (footprint beyond the
+        block-table width or the whole pool); pool pressure is resolved
+        later by SLO-aware preemption instead of at submit."""
+        if req.prompt_len + req.max_new_tokens > self.seq_cap:
+            return False
+        if req.prompt_tokens is None:
+            # materialise synthetic prompts once so every chunk (and any
+            # post-preemption recompute) sees identical tokens
+            req.prompt_tokens = self._rng.integers(
+                0, self.cfg.vocab_size, req.prompt_len)
+        return self.sched.submit(req)
+
+    def has_work(self) -> bool:
+        return self.sched.has_work()
+
+    def running(self) -> List[Request]:
+        return self.sched.running()
+
+    @property
+    def queue(self):
+        return self.sched.waiting
+
+    def set_budget(self, n: int) -> None:
+        self.sched.set_budget(n)
+
+    def step(self) -> StepReport:
+        kind = self.sched.plan()
+        if kind == "prefill":
+            rep = self._step_prefill()
+            if rep is not None:
+                return rep
+            kind = "decode" if self.sched.active else "idle"
+        if kind == "decode":
+            return self._step_decode()
+        return StepReport(kind="idle")
+
+    # ------------------------------------------------------------ internals
+    def _step_prefill(self) -> Optional[StepReport]:
+        seq, start, clen = self.sched.next_chunk()
+        req = seq.req
+        ok, victims = self.sched.reserve_for_prefill(seq, start + clen)
+        if not ok:
+            if victims:      # partial eviction still happened: surface it
+                rep = StepReport(kind="idle")
+                rep.preempted = [s.req for s in victims]
+                return rep
+            return None     # every page held by more-urgent work; decode on
+        # bucket the padded chunk width and the block-table width to the
+        # actual work (powers of two -> bounded recompiles), so a short
+        # prompt/chunk doesn't pay the full chunk_tokens x seq_cap forward
+        cb = min(self.chunk,
+                 self.page * _next_pow2(self.kv.pages_needed(clen)))
+        width = min(self.pps, _next_pow2(self.kv.pages_needed(start + cb)))
+        bt = jnp.asarray(self.kv.block_table(req.req_id, width))
+        toks = np.zeros(cb, np.int32)
+        toks[:clen] = np.asarray(req.prompt_tokens, np.int32)[start:start + clen]
+        t0 = time.perf_counter()
+        logits, self.pools = self._prefill_fn(
+            self.params, self.pools, jnp.asarray(toks), np.int32(start),
+            np.int32(clen), bt)
+        logits = jax.block_until_ready(logits)
+        dt = time.perf_counter() - t0
+        self.sched.finish_chunk(seq, clen)
+        report = StepReport(kind="prefill", compute_s=dt, tokens=clen)
+        report.preempted = [s.req for s in victims]
+        if seq.prefilled >= req.prompt_len:        # final chunk: first token
+            first = int(jnp.argmax(logits))
+            seq.last_token = first
+            req.generated = 1
+            req.output_tokens.append(first)
+            # a restart after preemption regenerates the SAME first token,
+            # so only a fresh emission defines TTFT (no second sample)
+            if req.prefill_done < 0:
+                report.prefilled = req
+            if req.generated >= req.max_new_tokens:
+                self.sched.complete(seq)
+                report.completed.append(req)
+        return report
+
+    def _step_decode(self) -> StepReport:
+        ready, preempted = self.sched.reserve_for_decode()
+        report = StepReport(kind="decode")
+        report.preempted = [s.req for s in preempted]
+        if not ready:
+            report.kind = "idle"
+            return report
+        b = self.max_slots
+        tokens = np.zeros(b, np.int32)
+        positions = np.zeros(b, np.int32)
+        lengths = np.ones(b, np.int32)
+        active = np.zeros(b, bool)
+        max_pages = 1
+        for i, s in enumerate(ready):
+            pos = s.req.prompt_len + s.req.generated - 1
+            tokens[i] = s.last_token
+            positions[i] = pos
+            lengths[i] = pos + 1
+            active[i] = True
+            max_pages = max(max_pages, self.kv.pages_needed(pos + 1))
+        # bucket the block-table width so decode cost tracks the longest
+        # LIVE sequence (few power-of-two recompiles), not the seq cap
+        width = min(self.pps, _next_pow2(max_pages))
+        bts = np.zeros((b, width), np.int32)
+        for i, s in enumerate(ready):
+            bts[i] = self.kv.block_table(s.req.req_id, width)
+        t0 = time.perf_counter()
+        logits, self.pools = self._decode_fn(
+            self.params, self.pools, jnp.asarray(tokens),
+            jnp.asarray(positions), jnp.asarray(bts), jnp.asarray(lengths),
+            jnp.asarray(active))
+        logits = jax.block_until_ready(logits)
+        report.compute_s = time.perf_counter() - t0
+        next_tokens = np.asarray(jnp.argmax(logits, axis=-1))
+        for i, s in enumerate(ready):
+            self.sched.commit_decode(s)
+            tok = int(next_tokens[i])
+            s.last_token = tok
+            s.req.generated += 1
+            s.req.output_tokens.append(tok)
+            report.tokens += 1
+            report.decoded.append(s.req)
+            if s.req.generated >= s.req.max_new_tokens:
+                self.sched.complete(s)
+                report.completed.append(s.req)
+        return report

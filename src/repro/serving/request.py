@@ -14,6 +14,10 @@ class Request:
     arrival: float                      # seconds (sim or wall clock)
     slo_ms: Optional[float] = None      # per-request TTFT SLO, if any
     prompt_tokens: Optional[object] = None   # [S] int32 (None => synthetic)
+    # scheduling weight for the paged runtime's SLO-aware preemption:
+    # lower-priority sequences are evicted first when the page pool is
+    # exhausted (ties broken by deadline = arrival + slo)
+    priority: float = 1.0
 
     # --- runtime state ---
     slot: int = -1

@@ -1,0 +1,256 @@
+"""Scheduler for the paged decode runtime: chunked prefill + SLO-aware
+preemption over a shared KV page pool.
+
+Host-side policy only — no jax in this module, so the scheduling logic is
+unit-testable without touching a device.  The runtime
+(``serving/paged_runtime.py``) asks for one unit of work per engine step
+and executes the forward passes.
+
+Two policies live here:
+
+* **Chunked prefill** (predictable-latency scheduling of prefill vs decode
+  work): prompts are prefilled in ``chunk_tokens``-sized pieces
+  (a ``page_size`` multiple), and when decode-active sequences exist the
+  planner alternates prefill chunks with decode steps, so a long prompt
+  adds at most one chunk of compute between consecutive decode steps
+  instead of head-of-line-blocking every running sequence for the whole
+  prompt (TTFT *and* ITL tails both stay bounded).
+
+* **SLO-aware preemption** (serving mixed loads with SLO guarantees):
+  page-pool exhaustion evicts the least-SLO-urgent page holder — lowest
+  ``Request.priority`` first, then the furthest deadline
+  (``arrival + slo``) — releases its pages, and requeues it for a full
+  restart (recompute-style preemption: greedy decode regenerates the same
+  tokens).  Admission-time prefill may only preempt victims strictly less
+  urgent than the beneficiary, which makes eviction thrash-free; decode of
+  already-running sequences may evict any holder (including, as a last
+  resort, the least urgent of the decoding set itself).
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+from typing import Deque, List, Optional, Tuple
+
+from repro.serving.kvcache import PagedKVCache
+from repro.serving.request import Request
+
+_INF = float("inf")
+
+
+@dataclass
+class SchedConfig:
+    chunk_tokens: int = 64        # per-step prefill token budget
+    max_active: int = 8           # decode-concurrency cap (engine slots)
+
+
+@dataclass(eq=False)          # identity semantics for in/remove on lists
+class SeqState:
+    """Runtime state of one request inside the paged scheduler."""
+    req: Request
+    prefilled: int = 0            # prompt tokens already written to pages
+    preemptions: int = 0
+    last_token: int = 0           # feedback token for the next decode step
+
+    def deadline(self) -> float:
+        if self.req.slo_ms is None:
+            return _INF
+        return self.req.arrival + self.req.slo_ms / 1e3
+
+
+def _urgency_key(s: SeqState) -> Tuple[float, float, float, float]:
+    """Greater tuple = more SLO-urgent: higher priority, then sooner
+    deadline, then older arrival, then older req_id.  ``min`` over this
+    key picks the eviction victim; the strict ``<`` comparison gates
+    admission-time preemption.  The req_id tie-break makes the order a
+    strict TOTAL order — without it two equal-urgency sequences on an
+    overcommitted pool can self-evict alternately forever (each decode
+    evicting its own requester), and the deterministic pecking order is
+    what guarantees progress."""
+    return (s.req.priority, -s.deadline(), -s.req.arrival, -s.req.req_id)
+
+
+class PagedScheduler:
+    """Owns the waiting queue, the single in-flight chunked prefill, the
+    decode-active set, and all page accounting against one PagedKVCache."""
+
+    def __init__(self, kv: PagedKVCache, cfg: SchedConfig):
+        self.kv = kv
+        self.cfg = cfg
+        self.waiting: Deque[SeqState] = deque()
+        self.prefilling: Optional[SeqState] = None
+        self.active: List[SeqState] = []
+        self.budget = cfg.max_active
+        self.preempt_log: List[Tuple[int, int]] = []   # (victim, beneficiary)
+        self._prefer_decode = False    # alternation toggle for interleaving
+
+    # ------------------------------------------------------------ lifecycle
+    def submit(self, req: Request) -> bool:
+        """Queue a request.  Only requests that could never fit (their total
+        footprint exceeds the whole pool, or the block-table width) are
+        rejected — pool pressure is handled later by preemption, not here."""
+        total = req.prompt_len + req.max_new_tokens
+        if self.kv.pages_needed(total) > self.kv.num_pages:
+            return False
+        self.waiting.append(SeqState(req))
+        return True
+
+    def set_budget(self, budget: int) -> None:
+        self.budget = max(1, budget)
+
+    def has_work(self) -> bool:
+        return bool(self.waiting) or self.prefilling is not None \
+            or bool(self.active)
+
+    def running(self) -> List[Request]:
+        out = [s.req for s in self.active]
+        if self.prefilling is not None:
+            out.append(self.prefilling.req)
+        return out
+
+    # ----------------------------------------------------------------- plan
+    def plan(self) -> str:
+        """Pick the next unit of work: "prefill" | "decode" | "idle".
+
+        When both a prefill and decode work are pending the planner
+        alternates, which is exactly the chunked-prefill interleave: each
+        engine step is either ONE chunk of prefill or ONE batched decode
+        step, never an unbounded prompt."""
+        can_start = (self.prefilling is not None or
+                     (bool(self.waiting) and
+                      len(self.active) + 1 <= self.budget))
+        if can_start and (not self.active or not self._prefer_decode):
+            if self.prefilling is None:
+                self.prefilling = self.waiting.popleft()
+            self._prefer_decode = True
+            return "prefill"
+        if self.active:
+            self._prefer_decode = False
+            return "decode"
+        if can_start:
+            if self.prefilling is None:
+                self.prefilling = self.waiting.popleft()
+            return "prefill"
+        return "idle"
+
+    # ------------------------------------------------------------- prefill
+    def next_chunk(self) -> Tuple[SeqState, int, int]:
+        """(seq, start, chunk_len) for the in-flight prefill."""
+        seq = self.prefilling
+        assert seq is not None
+        start = seq.prefilled
+        return seq, start, min(self.cfg.chunk_tokens,
+                               seq.req.prompt_len - start)
+
+    def reserve_for_prefill(self, seq: SeqState,
+                            target_tokens: int) -> Tuple[bool, List[SeqState]]:
+        """Reserve pages for the next chunk, evicting strictly-less-urgent
+        holders if needed.  Returns (ok, victims-this-call); ok=False (with
+        ``seq`` left queued as the in-flight prefill) means no eligible
+        victim exists — the planner falls back to decode and retries."""
+        victims: List[SeqState] = []
+        while True:
+            try:
+                self.kv.reserve(seq.req.req_id, target_tokens)
+                return True, victims
+            except MemoryError:
+                victim = self._pick_victim(
+                    exclude=seq, strictly_less_urgent_than=seq)
+                if victim is None:
+                    return False, victims
+                self.preempt(victim, beneficiary=seq)
+                victims.append(victim)
+
+    def finish_chunk(self, seq: SeqState, n_tokens: int) -> None:
+        self.kv.extend(seq.req.req_id, seq.prefilled + n_tokens)
+        seq.prefilled += n_tokens
+        if seq.prefilled >= seq.req.prompt_len:
+            self.prefilling = None
+            self.active.append(seq)
+
+    # -------------------------------------------------------------- decode
+    def reserve_for_decode(self) -> Tuple[List[SeqState], List[SeqState]]:
+        """Reserve one more token of pages for every decode-active
+        sequence, most urgent first.  Under an exhausted pool the least
+        urgent holders are evicted until the rest fit.  Returns
+        (ready, preempted-this-call)."""
+        preempted: List[SeqState] = []
+        ready: List[SeqState] = []
+        for seq in sorted(self.active, key=_urgency_key, reverse=True):
+            if seq not in self.active:      # evicted by an earlier reserve
+                continue
+            done = False
+            while not done:
+                try:
+                    self.kv.reserve(seq.req.req_id, self._tokens_of(seq) + 1)
+                    ready.append(seq)
+                    done = True
+                except MemoryError:
+                    victim = self._pick_victim(exclude=None)
+                    if victim is None:      # pool smaller than one seq
+                        raise
+                    self.preempt(victim, beneficiary=seq)
+                    preempted.append(victim)
+                    if victim is seq:
+                        done = True
+        ready = [s for s in ready if s in self.active]
+        return ready, preempted
+
+    def commit_decode(self, seq: SeqState) -> None:
+        """One token was appended by the decode step."""
+        self.kv.extend(seq.req.req_id, self._tokens_of(seq) + 1)
+
+    def _tokens_of(self, seq: SeqState) -> int:
+        """Tokens currently in the cache: the prompt plus every generated
+        token except the newest (which is only appended by the next decode
+        step, mirroring the dense engine's position bookkeeping)."""
+        return seq.req.prompt_len + max(0, seq.req.generated - 1)
+
+    # ---------------------------------------------------------- preemption
+    def _pick_victim(self, exclude: Optional[SeqState],
+                     strictly_less_urgent_than: Optional[SeqState] = None
+                     ) -> Optional[SeqState]:
+        holders = [s for s in self.active if s is not exclude]
+        if self.prefilling is not None and self.prefilling is not exclude:
+            holders.append(self.prefilling)
+        holders = [s for s in holders if s.req.req_id in self.kv.tables]
+        if strictly_less_urgent_than is not None:
+            bar = _urgency_key(strictly_less_urgent_than)
+            holders = [s for s in holders if _urgency_key(s) < bar]
+        if not holders:
+            return None
+        return min(holders, key=_urgency_key)
+
+    def preempt(self, victim: SeqState,
+                beneficiary: Optional[SeqState] = None) -> None:
+        """Release the victim's pages and requeue it for a full restart.
+
+        ``prefill_done`` is deliberately kept: greedy recompute regenerates
+        the *same* tokens, so the original first-token emission remains the
+        request's TTFT and the restart must not observe a second sample
+        (the runtime only reports ``prefilled`` for a fresh first token).
+        The preemption stall still shows up honestly — the first
+        regenerated decode gap is measured from the original emission."""
+        if victim.req.req_id in self.kv.tables:
+            self.kv.release(victim.req.req_id)
+        if victim is self.prefilling:
+            self.prefilling = None
+        if victim in self.active:
+            self.active.remove(victim)
+        r = victim.req
+        victim.prefilled = 0
+        victim.preemptions += 1
+        r.generated = 0
+        r.slot = -1
+        r.output_tokens.clear()
+        r.decode_times.clear()
+        self.preempt_log.append(
+            (r.req_id, beneficiary.req.req_id if beneficiary else -1))
+        self.waiting.appendleft(victim)
+
+    # ------------------------------------------------------------- retire
+    def complete(self, seq: SeqState) -> None:
+        if seq.req.req_id in self.kv.tables:
+            self.kv.release(seq.req.req_id)
+        if seq in self.active:
+            self.active.remove(seq)

@@ -69,13 +69,17 @@ def test_paged_attention_allclose(b, h, kv, hd, page, pps, npages):
     vp = jnp.asarray(RNG.standard_normal((npages, page, kv, hd)), jnp.float32)
     bt = jnp.asarray(RNG.integers(0, npages, (b, pps)), jnp.int32)
     lens = jnp.asarray(RNG.integers(1, pps * page, (b,)), jnp.int32)
-    out = paged_attention(q, kp, vp, bt, lens)
+    # impl="kernel" pins the Pallas kernel (interpret mode on CPU); the
+    # default impl="auto" routes to the oracle off-TPU, which would make
+    # this comparison vacuous
+    out = paged_attention(q, kp, vp, bt, lens, impl="kernel")
     ref = paged_attention_ref(q, kp, vp, bt, lens)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-3,
                                atol=2e-3)
 
 
-def test_paged_attention_ignores_pages_beyond_length():
+@pytest.mark.parametrize("impl", ["kernel", "ref"])
+def test_paged_attention_ignores_pages_beyond_length(impl):
     """Property: garbage in pages past `lengths` must not leak into output."""
     b, h, kv, hd, page, pps, npages = 1, 2, 2, 64, 128, 4, 8
     q = jnp.asarray(RNG.standard_normal((b, h, hd)), jnp.float32)
@@ -83,11 +87,26 @@ def test_paged_attention_ignores_pages_beyond_length():
     vp = jnp.asarray(RNG.standard_normal((npages, page, kv, hd)), jnp.float32)
     bt = jnp.asarray([[0, 1, 2, 3]], jnp.int32)
     lens = jnp.asarray([130], jnp.int32)
-    out1 = paged_attention(q, kp, vp, bt, lens)
+    out1 = paged_attention(q, kp, vp, bt, lens, impl=impl)
     kp2 = kp.at[2:].set(1e4)     # poison pages beyond length
     vp2 = vp.at[2:].set(-1e4)
-    out2 = paged_attention(q, kp2, vp2, bt, lens)
+    out2 = paged_attention(q, kp2, vp2, bt, lens, impl=impl)
     np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-5)
+
+
+def test_paged_attention_bucketed_width_invariance():
+    """Property: narrowing the block table to the live pages (the
+    runtime's width bucketing) must not change the output."""
+    b, h, kv, hd, page, npages = 2, 4, 2, 64, 128, 8
+    q = jnp.asarray(RNG.standard_normal((b, h, hd)), jnp.float32)
+    kp = jnp.asarray(RNG.standard_normal((npages, page, kv, hd)), jnp.float32)
+    vp = jnp.asarray(RNG.standard_normal((npages, page, kv, hd)), jnp.float32)
+    bt = jnp.asarray(RNG.integers(0, npages, (b, 4)), jnp.int32)
+    lens = jnp.asarray([100, 200], jnp.int32)    # <= 2 pages live
+    wide = paged_attention(q, kp, vp, bt, lens, impl="ref")
+    narrow = paged_attention(q, kp, vp, bt[:, :2], lens, impl="ref")
+    np.testing.assert_allclose(np.asarray(wide), np.asarray(narrow),
+                               rtol=1e-6, atol=1e-6)
 
 
 # ------------------------------------------------------------- sel. scan
