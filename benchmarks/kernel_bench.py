@@ -49,14 +49,56 @@ def _paged_decode_bench() -> float:
     decode_s, counted, seen = 0.0, 0, 0
     while eng.has_work():
         rep = eng.step()
-        if rep.kind == "decode" and rep.tokens:
+        if rep.kind == "decode" and rep.decode_tokens:
+            # pure-decode steps only (mixed steps are benched separately);
             # skip the first decodes so bucket compile time stays out
             if seen >= 8:
                 decode_s += rep.compute_s
-                counted += rep.tokens
-            seen += rep.tokens
+                counted += rep.decode_tokens
+            seen += rep.decode_tokens
         eng.finalize_step(rep, 0.0)
     return decode_s / max(counted, 1) * 1e6
+
+
+def _mixed_step_bench() -> float:
+    """Fused mixed prefill+decode step (the continuous-batching hot path):
+    a long prompt's chunks ride in the same jitted call as the running
+    decode lanes.  Reported as warm us per token (prefill + decode tokens)
+    over the mixed steps only; the same admission pattern runs twice so
+    the second pass hits a warm jit cache."""
+    from repro.configs.base import get_config, reduced
+    from repro.serving.engine import ServingEngine
+    from repro.serving.request import Request
+    cfg = reduced(get_config("stablelm_3b"))
+    eng = ServingEngine(cfg, max_slots=4, seq_cap=128, page_size=16, seed=0,
+                        backend="paged", attn_impl="auto",
+                        prefix_cache=False)
+
+    def one_pass(base_id):
+        mixed_s, mixed_tokens = 0.0, 0
+        eng.submit(Request(req_id=base_id, tenant="T1", prompt_len=16,
+                           max_new_tokens=24, arrival=0.0))
+        # admit a long prompt once the first request is decoding, so its
+        # chunks fuse with live decode lanes
+        admitted = False
+        steps = 0
+        while eng.has_work():
+            if not admitted and eng.active():
+                eng.submit(Request(req_id=base_id + 1, tenant="T1",
+                                   prompt_len=96, max_new_tokens=8,
+                                   arrival=0.0))
+                admitted = True
+            rep = eng.step()
+            if rep.kind == "mixed":
+                mixed_s += rep.compute_s
+                mixed_tokens += rep.tokens
+            eng.finalize_step(rep, float(steps))
+            steps += 1
+        return mixed_s, mixed_tokens
+
+    one_pass(0)                       # warm the mixed-step jit shapes
+    mixed_s, mixed_tokens = one_pass(10)
+    return mixed_s / max(mixed_tokens, 1) * 1e6
 
 
 def run(verbose=True):
@@ -80,6 +122,7 @@ def run(verbose=True):
     rows.append(("paged_attention_ref",
                  timeit(jax.jit(paged_attention_ref), qd, kp, vp, bt, ln)))
     rows.append(("paged_decode_us_per_token", _paged_decode_bench()))
+    rows.append(("mixed_step_us_per_token", _mixed_step_bench()))
 
     x = jnp.asarray(rng.standard_normal((1, 128, 128)) * 0.3, jnp.float32)
     dt = jnp.asarray(np.abs(rng.standard_normal((1, 128, 128))) * 0.1,

@@ -1,4 +1,11 @@
-"""Pallas TPU paged decode attention (the vLLM-style serving hot spot).
+"""Pallas TPU paged attention (the vLLM-style serving hot spot), ragged.
+
+One kernel serves the whole fused mixed prefill+decode step: every batch
+lane carries a block of ``Q`` query rows (a decode lane uses one live row,
+a prefill chunk uses ``chunk`` rows; pad rows are masked by position) and
+causality is enforced *inside the page walk* — key slot ``t`` of the
+gathered pages contributes to query row ``i`` only when
+``t <= q_positions[lane, i]``.
 
 TPU adaptation notes:
   * page gathering is done through the BlockSpec index map driven by a
@@ -6,9 +13,13 @@ TPU adaptation notes:
     analogue of vLLM's gather from the page pool, but resolved by the DMA
     engine ahead of compute instead of per-warp pointer chasing;
   * one (batch, kv_head) pair per grid step keeps the whole per-head state
-    (page tile + accumulator) in VMEM; pages stream over the innermost grid
-    dimension with the online-softmax accumulator in VMEM scratch;
-  * page_size is a multiple of 128 so the K^T q matmul hits the MXU.
+    (page tile + [Q, G] accumulator) in VMEM; pages stream over the
+    innermost grid dimension with the online-softmax accumulator in VMEM
+    scratch;
+  * page_size is a multiple of 128 so the K^T q matmul hits the MXU;
+  * int8 page pools ride the same specs: per-page-row scales are streamed
+    next to their pages and the dequant happens in-register, so HBM
+    traffic stays at the int8 footprint.
 
 Grid: (batch, kv_heads, pages_per_seq), pages innermost.
 """
@@ -24,9 +35,9 @@ from jax.experimental.pallas import tpu as pltpu
 _NEG_INF = -2.0e38
 
 
-def _paged_kernel(tables_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
-                  acc_ref, m_ref, l_ref, *, scale: float, page: int):
-    bi = pl.program_id(0)
+def _mixed_kernel(tables_ref, qpos_ref, q_ref, k_ref, v_ref, o_ref,
+                  acc_ref, m_ref, l_ref, *, scale: float, page: int,
+                  ks_ref=None, vs_ref=None):
     pi = pl.program_id(2)
     np_ = pl.num_programs(2)
 
@@ -36,72 +47,108 @@ def _paged_kernel(tables_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
         m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    q = q_ref[0, 0].astype(jnp.float32)               # [G, hd]
+    q = q_ref[0, :, 0].astype(jnp.float32)            # [Q, G, hd]
     k = k_ref[0, :, 0, :].astype(jnp.float32)         # [page, hd]
     v = v_ref[0, :, 0, :].astype(jnp.float32)         # [page, hd]
+    if ks_ref is not None:
+        k = k * ks_ref[0, :, 0].astype(jnp.float32)[:, None]
+    if vs_ref is not None:
+        v = v * vs_ref[0, :, 0].astype(jnp.float32)[:, None]
 
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+    s = jax.lax.dot_general(q, k, (((2,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
-    pos = pi * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    mask = pos < lengths_ref[bi]
+    pos_k = pi * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+    qpos = qpos_ref[0]                                # [Q]
+    mask = pos_k <= qpos[:, None, None]               # causal page walk
     s = jnp.where(mask, s, _NEG_INF)
 
-    m_prev = m_ref[...]
-    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    m_prev = m_ref[...]                               # [Q, G]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=2))
     alpha = jnp.exp(m_prev - m_cur)
-    p = jnp.where(mask, jnp.exp(s - m_cur[:, None]), 0.0)
-    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    p = jnp.where(mask, jnp.exp(s - m_cur[:, :, None]), 0.0)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=2)
     m_ref[...] = m_cur
-    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
-        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha[:, :, None] + jax.lax.dot_general(
+        p, v, (((2,), (0,)), ((), ())), preferred_element_type=jnp.float32)
 
     @pl.when(pi == np_ - 1)
     def _finalize():
-        o_ref[0, 0] = (acc_ref[...] /
-                       (l_ref[...][:, None] + 1e-30)).astype(o_ref.dtype)
+        o_ref[0, :, 0] = (acc_ref[...] /
+                          (l_ref[...][..., None] + 1e-30)).astype(o_ref.dtype)
 
 
-def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
-                    scale=None, interpret: bool = False):
-    """q: [B,H,hd]; pages: [P,page,KV,hd]; tables: [B,PPS]; lengths: [B]."""
-    b, h, hd = q.shape
+def paged_attention_mixed(q, k_pages, v_pages, block_tables, q_positions, *,
+                          scale=None, interpret: bool = False,
+                          k_scales=None, v_scales=None):
+    """q: [B,Q,H,hd]; pages: [P,page,KV,hd]; tables: [B,PPS];
+    q_positions: [B,Q] (per-row sequence position, causal bound);
+    k_scales/v_scales: [P,page,KV] when the pages are int8."""
+    b, qn, h, hd = q.shape
     page = k_pages.shape[1]
     kv = k_pages.shape[2]
     g = h // kv
     pps = block_tables.shape[1]
     if scale is None:
         scale = 1.0 / float(hd) ** 0.5
-    qr = q.reshape(b, kv, g, hd)
+    qr = q.reshape(b, qn, kv, g, hd)
 
     grid = (b, kv, pps)
-    kernel = functools.partial(_paged_kernel, scale=scale, page=page)
+    kernel = functools.partial(_mixed_kernel, scale=scale, page=page)
+
+    def at_lane(bi, ki, pi, tables):
+        return (bi, 0)
+
+    in_specs = [
+        pl.BlockSpec((1, qn), at_lane),                       # q_positions
+        pl.BlockSpec((1, qn, 1, g, hd),
+                     lambda bi, ki, pi, tables: (bi, 0, ki, 0, 0)),
+        pl.BlockSpec((1, page, 1, hd),
+                     lambda bi, ki, pi, tables: (tables[bi, pi], 0, ki, 0)),
+        pl.BlockSpec((1, page, 1, hd),
+                     lambda bi, ki, pi, tables: (tables[bi, pi], 0, ki, 0)),
+    ]
+    inputs = [block_tables, q_positions, qr, k_pages, v_pages]
+    if k_scales is not None:
+        # scales stream next to their pages through the same gather
+        spec = pl.BlockSpec((1, page, 1),
+                            lambda bi, ki, pi, tables: (tables[bi, pi], 0, ki))
+        in_specs += [spec, spec]
+        inputs += [k_scales, v_scales]
+
+        def kernel(tables_ref, qpos_ref, q_ref, k_ref, v_ref, ks, vs, o_ref,
+                   acc_ref, m_ref, l_ref):
+            _mixed_kernel(tables_ref, qpos_ref, q_ref, k_ref, v_ref, o_ref,
+                          acc_ref, m_ref, l_ref, scale=scale, page=page,
+                          ks_ref=ks, vs_ref=vs)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=1,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, g, hd),
-                         lambda bi, ki, pi, tables, lens: (bi, ki, 0, 0)),
-            pl.BlockSpec((1, page, 1, hd),
-                         lambda bi, ki, pi, tables, lens:
-                         (tables[bi, pi], 0, ki, 0)),
-            pl.BlockSpec((1, page, 1, hd),
-                         lambda bi, ki, pi, tables, lens:
-                         (tables[bi, pi], 0, ki, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, g, hd),
-                               lambda bi, ki, pi, tables, lens: (bi, ki, 0, 0)),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, qn, 1, g, hd),
+                               lambda bi, ki, pi, tables: (bi, 0, ki, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((g, hd), jnp.float32),
-            pltpu.VMEM((g,), jnp.float32),
-            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((qn, g, hd), jnp.float32),
+            pltpu.VMEM((qn, g), jnp.float32),
+            pltpu.VMEM((qn, g), jnp.float32),
         ],
     )
 
     out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, kv, g, hd), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((b, qn, kv, g, hd), q.dtype),
         interpret=interpret,
-    )(block_tables, lengths, qr, k_pages, v_pages)
-    return out.reshape(b, h, hd)
+    )(*inputs)
+    return out.reshape(b, qn, h, hd)
+
+
+def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
+                    scale=None, interpret: bool = False,
+                    k_scales=None, v_scales=None):
+    """Single-token decode: q [B,H,hd], lengths [B] — the q_len=1 case."""
+    qpos = (lengths - 1)[:, None].astype(jnp.int32)
+    out = paged_attention_mixed(q[:, None], k_pages, v_pages, block_tables,
+                                qpos, scale=scale, interpret=interpret,
+                                k_scales=k_scales, v_scales=v_scales)
+    return out[:, 0]

@@ -31,7 +31,8 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
           prompt_len: int = 48, max_new: int = 8, slots: int = 4,
           num_tenants: int = 1, replicas: int = 1, interfere: bool = False,
           with_controller: bool = True, seed: int = 0, verbose: bool = True,
-          admit: int = 0, backend: str = "dense"):
+          admit: int = 0, backend: str = "dense", kv_dtype: str = "auto",
+          prefix_cache: bool = True):
     """Virtual-time multi-tenant serving run; returns per-tenant stats."""
     import numpy as np
     from repro.configs.base import get_config, reduced
@@ -54,8 +55,10 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
     cfg = reduced(get_config(arch))
     names = ["T1"] if num_tenants == 1 else [f"L{i}"
                                              for i in range(num_tenants)]
-    engines = {name: [ServingEngine(cfg, max_slots=slots, seq_cap=128,
-                                    seed=seed + 17 * i + j, backend=backend)
+    eng_kw = dict(max_slots=slots, seq_cap=128, backend=backend)
+    if backend == "paged":
+        eng_kw.update(kv_dtype=kv_dtype, prefix_cache=prefix_cache)
+    engines = {name: [ServingEngine(cfg, seed=seed + 17 * i + j, **eng_kw)
                       for j in range(replicas)]
                for i, name in enumerate(names)}
     fabric = FabricState()
@@ -173,9 +176,8 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
     def on_admitted(spec, slots_, t):
         name = spec.name
         names.append(name)
-        engines[name] = [ServingEngine(cfg, max_slots=slots, seq_cap=128,
-                                       seed=seed + 1000 + len(names),
-                                       backend=backend)]
+        engines[name] = [ServingEngine(cfg, seed=seed + 1000 + len(names),
+                                       **eng_kw)]
         actuator.engines[name] = engines[name]
         actuator.compute_scales.setdefault(name, 1.0)
         actuator.pauses.setdefault(name, 0.0)
@@ -260,15 +262,17 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
                 preempts[name] += len(rep.preempted)
                 if rep.kind == "idle":
                     continue
-                transfer = (rep.tokens * 0.4e6 / fabric.bandwidth(name)
-                            if rep.kind == "prefill" else 0.0)
+                # only the prompt share of a (possibly mixed) step pays
+                # fabric transfer
+                transfer = (rep.prefill_tokens * 0.4e6
+                            / fabric.bandwidth(name))
                 dur = rep.compute_s * actuator.compute_scale_of(name) \
                     + transfer
                 end = now[0] + dur
                 avail[(name, j)] = end
                 eng.finalize_step(rep, end)
-                if rep.prefilled is not None:
-                    windows[name].observe(end, rep.prefilled.ttft, slo=0.2)
+                for pr in rep.prefilled:
+                    windows[name].observe(end, pr.ttft, slo=0.2)
                 stepped = True
         if stepped:
             continue
@@ -338,6 +342,12 @@ def main():
     ap.add_argument("--backend", choices=("dense", "paged"), default="dense",
                     help="engine KV backend: dense slot cache or the "
                          "block-table paged runtime")
+    ap.add_argument("--kv-dtype", choices=("auto", "int8"), default="auto",
+                    help="paged backend page-pool dtype; int8 quantizes "
+                         "K/V pages with per-page-row scales")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable cross-request prefix-page sharing "
+                         "(paged backend)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     serve(arch=args.arch, requests=args.requests, qps=args.qps,
@@ -345,7 +355,8 @@ def main():
           slots=args.slots, num_tenants=args.tenants,
           replicas=args.replicas, interfere=args.interfere,
           with_controller=not args.no_controller, seed=args.seed,
-          admit=args.admit, backend=args.backend)
+          admit=args.admit, backend=args.backend, kv_dtype=args.kv_dtype,
+          prefix_cache=not args.no_prefix_cache)
 
 
 if __name__ == "__main__":

@@ -54,15 +54,22 @@ def init_cache_from_plan(plan):
 
 @dataclass
 class StepReport:
-    kind: str                            # "prefill" | "decode" | "idle"
+    kind: str                 # "prefill" | "decode" | "mixed" | "idle"
     compute_s: float = 0.0
-    tokens: int = 0
-    prefilled: Optional[Request] = None
+    tokens: int = 0                      # total tokens this step
+    prefill_tokens: int = 0              # prompt tokens written this step
+    decode_tokens: int = 0               # decode tokens emitted this step
+    # requests whose first token was emitted this step (TTFT events);
+    # a fused mixed step can complete several prefills at once
+    prefilled: List[Request] = field(default_factory=list)
     decoded: List[Request] = field(default_factory=list)
     completed: List[Request] = field(default_factory=list)
     # paged backend: sequences evicted (pages released, requeued for a full
     # restart) by SLO-aware preemption during this step
     preempted: List[Request] = field(default_factory=list)
+    # paged backend: prompt tokens served from the shared prefix cache
+    # while planning this step (prefill compute skipped entirely)
+    prefix_hit_tokens: int = 0
 
 
 class ServingEngine:
@@ -70,9 +77,15 @@ class ServingEngine:
                  seq_cap: int = 256, page_size: int = 16, seed: int = 0,
                  policy=NO_POLICY, backend: str = "dense",
                  pool_pages: Optional[int] = None,
-                 chunk_tokens: Optional[int] = None, attn_impl: str = "auto"):
+                 chunk_tokens: Optional[int] = None,
+                 step_tokens: Optional[int] = None, attn_impl: str = "auto",
+                 kv_dtype: str = "auto", prefix_cache: bool = True):
         if backend not in ("dense", "paged"):
             raise ValueError(f"unknown backend {backend!r}")
+        if kv_dtype != "auto" and backend == "dense":
+            raise ValueError(
+                "kv_dtype applies to the paged backend's page pools; the "
+                "dense slot cache quantizes via REPRO_KV_INT8=1")
         self.cfg = cfg
         self.model = Model(cfg)
         self.policy = policy
@@ -90,8 +103,9 @@ class ServingEngine:
             self.runtime = PagedRuntime(
                 cfg, self.params, max_slots=max_slots, seq_cap=seq_cap,
                 page_size=page_size, pool_pages=pool_pages,
-                chunk_tokens=chunk_tokens, policy=policy,
-                attn_impl=attn_impl, seed=seed)
+                chunk_tokens=chunk_tokens, step_tokens=step_tokens,
+                policy=policy, attn_impl=attn_impl, kv_dtype=kv_dtype,
+                prefix_cache=prefix_cache, seed=seed)
             self.kv = self.runtime.kv
             # the scheduler's waiting deque doubles as the engine queue
             # (same object for the lifetime of the engine, so load-based
@@ -153,6 +167,8 @@ class ServingEngine:
         report = self._step_backend()
         self.metrics.observe_kv(self.kv.used_pages, self.kv.reserved_pages,
                                 self.kv.num_pages)
+        self.metrics.observe_prefill(report.prefill_tokens,
+                                     report.prefix_hit_tokens)
         return report
 
     def _step_backend(self) -> StepReport:
@@ -168,8 +184,7 @@ class ServingEngine:
 
     def finalize_step(self, report: StepReport, end_time: float) -> None:
         """Record timestamps using the harness-provided completion time."""
-        if report.prefilled is not None:
-            req = report.prefilled
+        for req in report.prefilled:
             req.prefill_done = end_time
             self.metrics.latency.observe(end_time, (end_time - req.arrival),
                                          slo=(req.slo_ms or 0) / 1e3 or None)
@@ -236,7 +251,7 @@ class ServingEngine:
         self.positions[slot] = req.prompt_len
         self.last_token[slot] = first_tok
         report = StepReport(kind="prefill", compute_s=dt, tokens=req.prompt_len,
-                            prefilled=req)
+                            prefill_tokens=req.prompt_len, prefilled=[req])
         if req.generated >= req.max_new_tokens:
             self._retire(req, report)
         return report
@@ -259,6 +274,7 @@ class ServingEngine:
             req.output_tokens.append(int(next_tokens[i]))
             self.kv.append_token(req.req_id)
             report.tokens += 1
+            report.decode_tokens += 1
             report.decoded.append(req)
             if req.generated >= req.max_new_tokens:
                 self._retire(req, report)

@@ -120,9 +120,26 @@ class TenantMetrics:
     kv_used_pages: int = 0
     kv_reserved_pages: int = 0
     kv_total_pages: int = 0
+    # prefix-cache sharing (paged backend): prompt tokens whose prefill
+    # compute ran vs tokens served straight from shared prefix pages —
+    # their ratio is the prefix-hit rate the --shared-prefix benchmark
+    # arm reports
+    prefill_tokens_total: int = 0
+    prefix_hit_tokens_total: int = 0
 
     def observe_tokens(self, now: float, n: int) -> None:
         self.throughput_window.append((now, n))
+
+    def observe_prefill(self, computed: int, prefix_hits: int) -> None:
+        self.prefill_tokens_total += computed
+        self.prefix_hit_tokens_total += prefix_hits
+
+    def prefix_hit_rate(self) -> float:
+        """Fraction of prompt tokens served from the prefix cache."""
+        total = self.prefill_tokens_total + self.prefix_hit_tokens_total
+        if not total:
+            return 0.0
+        return self.prefix_hit_tokens_total / total
 
     def observe_kv(self, used: int, reserved: int, total: int) -> None:
         self.kv_used_pages = used

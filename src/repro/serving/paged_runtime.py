@@ -1,4 +1,4 @@
-"""Block-table-driven paged decode runtime (the vLLM-style serving core).
+"""Block-table-driven paged serving runtime (the vLLM-style serving core).
 
 Where the dense ``ServingEngine`` path stores KV in a ``[max_slots,
 seq_cap]`` slot cache, this runtime keeps every attention layer's KV in a
@@ -10,19 +10,32 @@ front), and the block-table width handed to the attention kernel is
 bucketed to the longest live sequence, so per-step attention cost tracks
 live context rather than ``max_slots x seq_cap``.
 
-Three forward passes, all pure and jitted:
+ONE forward pass, pure and jitted — the **fused mixed step**: the batch
+is the FLATTENED token stream of the step (the vLLM ragged-batch layout):
+every decode lane contributes one row, every prefill chunk contributes
+``chunk`` rows, all packed back to back under the scheduler's per-step
+token budget (``PagedScheduler.plan()``).  Each row carries its own
+sequence position and its lane's block table; the rows' K/V are scattered
+into the pages, then every row attends its pages through
+``kernels/paged_attention/ops.paged_attention_mixed`` with causal masking
+*inside the page walk* (a chunk row sees its own chunk's earlier rows
+because the scatter lands before the gather and the mask is positional).
+Because decode lanes ride in the same call as prefill chunks, an admitted
+prompt never stalls the decode lanes — it only consumes the prefill share
+of the step budget — which is what keeps ITL tails flat under admission
+churn; and because the batch is packed, step cost tracks REAL tokens
+(8 decodes + a 64-token chunk cost ~72 rows, not lanes x max-chunk
+padding).  Row counts are bucketed (pow2 then /16 granules) so the jit
+shape set stays bounded; pad rows write to the trash page and carry
+position 0, so they read one valid slot and their output is discarded.
 
-* ``prefill chunk`` — ``chunk_tokens`` prompt tokens at a time (padded to a
-  fixed width so one compilation serves every chunk): scatter the chunk's
-  K/V into the pages, then attend over the pages gathered through the
-  block table.  Interleaving chunks with decode steps is the scheduler's
-  job (``serving/sched.py``).
-* ``decode step`` — one token for every active sequence, batched to
-  ``max_slots`` lanes; attention runs through
-  ``kernels/paged_attention/ops.paged_attention`` (Pallas kernel on TPU /
-  interpret mode, jnp oracle as the CPU fallback — ``attn_impl``).
-* masked lanes write to the trash page and carry ``length=1`` so the
-  online softmax never sees an empty sequence.
+Page pools may be int8 (``kv_dtype="int8"``): K/V rows are quantized
+per-row on scatter with the scales stored in parallel per-page-row pools,
+and both attention paths dequantize only the gathered pages.
+
+Prefix-cache sharing (``prefix_cache=True``) lives in ``PagedKVCache``:
+prompts sharing a page-aligned prefix map it to existing pages and skip
+that prefill compute entirely — see ``serving/kvcache.py``.
 
 Only pure-GQA decoder stacks are supported (no MLA / SSM / RWKV mixers, no
 sliding windows, no cross-attention): that covers the paper's serving case
@@ -38,7 +51,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import LayerSpec, ModelConfig
-from repro.kernels.paged_attention.ops import paged_attention
+from repro.kernels.paged_attention.ops import paged_attention_mixed
 from repro.models import attention as attn_mod
 from repro.models.common import NO_POLICY, ShardPolicy, apply_rope, rms_norm, shard
 from repro.models.model import _apply_ffn, _logits, embed_tokens
@@ -70,21 +83,35 @@ def _next_pow2(n: int) -> int:
     return 1 << max(0, (n - 1).bit_length())
 
 
+def _bucket_rows(n: int) -> int:
+    """Row-count bucket for the flattened mixed batch: powers of two up to
+    16, then 16-token granules — bounded compile variants with <= 2x (and
+    typically ~1.1x) padding waste."""
+    if n <= 16:
+        return _next_pow2(n)
+    return -(-n // 16) * 16
+
+
 class PagedRuntime:
     """One tenant-replica's paged serving state: page pools + scheduler +
-    jitted chunk-prefill / batched-decode forward passes."""
+    the jitted fused mixed prefill+decode forward pass."""
 
     def __init__(self, cfg: ModelConfig, params, *, max_slots: int = 8,
                  seq_cap: int = 256, page_size: int = 16,
                  pool_pages: Optional[int] = None,
                  chunk_tokens: Optional[int] = None,
+                 step_tokens: Optional[int] = None,
                  policy: ShardPolicy = NO_POLICY, attn_impl: str = "auto",
+                 kv_dtype: str = "auto", prefix_cache: bool = True,
                  seed: int = 0):
         reason = paged_unsupported_reason(cfg)
         if reason is not None:
             raise ValueError(
                 f"paged backend does not support {reason} ({cfg.name}); "
                 f"use backend='dense'")
+        if kv_dtype not in ("auto", "int8"):
+            raise ValueError(f"unknown kv_dtype {kv_dtype!r} "
+                             f"(expected 'auto' or 'int8')")
         self.cfg = cfg
         self.params = params
         self.policy = policy
@@ -97,27 +124,42 @@ class PagedRuntime:
         chunk = chunk_tokens or min(self.seq_cap, 4 * page_size)
         self.chunk = max(page_size, (chunk // page_size) * page_size)
         self.attn_impl = attn_impl
-        self.kv = PagedKVCache(self.pool_pages, page_size)
+        self.kv_quant = kv_dtype == "int8"
+        self.kv = PagedKVCache(self.pool_pages, page_size,
+                               enable_prefix_cache=prefix_cache)
         self.sched = PagedScheduler(
             self.kv, SchedConfig(chunk_tokens=self.chunk,
-                                 max_active=max_slots))
+                                 max_active=max_slots,
+                                 step_tokens=step_tokens))
         self.pools = self._init_pools()
         # donate the pools so the per-step KV scatter updates in place
         # (without aliasing every step would copy the whole page pool,
         # making step cost O(pool) instead of O(live tokens))
-        self._prefill_fn = jax.jit(self._prefill_impl, donate_argnums=(1,))
-        self._decode_fn = jax.jit(self._decode_impl, donate_argnums=(1,))
+        self._mixed_fn = jax.jit(self._mixed_impl, donate_argnums=(1,))
+        # executable cache per (rows, width) bucket: the fused step has
+        # more shape buckets than the old split prefill/decode passes, so
+        # each bucket is AOT-compiled on first sight OUTSIDE the timed
+        # region (production runtimes precompile their bucket grid at
+        # startup; compile time must not pollute the virtual clock's
+        # measured per-step compute)
+        self._mixed_exec: Dict[tuple, Any] = {}
         self._rng = np.random.default_rng(seed)
 
     # ------------------------------------------------------------- pools
     def _init_pools(self) -> Dict[str, Any]:
         a = self.cfg.attn
-        dt = jnp.dtype(self.cfg.dtype)
+        dt = jnp.int8 if self.kv_quant else jnp.dtype(self.cfg.dtype)
         shape = (self.pool_pages + 1, self.page, a.num_kv_heads, a.head_dim)
+        sshape = (self.pool_pages + 1, self.page, a.num_kv_heads)
 
         def pool(stack: int = 0):
             s = (stack,) + shape if stack else shape
-            return {"k": jnp.zeros(s, dt), "v": jnp.zeros(s, dt)}
+            d = {"k": jnp.zeros(s, dt), "v": jnp.zeros(s, dt)}
+            if self.kv_quant:
+                ss = (stack,) + sshape if stack else sshape
+                d["k_scale"] = jnp.zeros(ss, jnp.float32)
+                d["v_scale"] = jnp.zeros(ss, jnp.float32)
+            return d
 
         pools: Dict[str, Any] = {}
         if self.cfg.prefix:
@@ -129,78 +171,55 @@ class PagedRuntime:
         return pools
 
     # ------------------------------------------------------- forward: shared
-    def _scatter(self, kp, vp, k, v, page_ids, offs):
-        """Write one K/V row per lane/token into the page pools."""
-        kp = kp.at[page_ids, offs].set(k.astype(kp.dtype))
-        vp = vp.at[page_ids, offs].set(v.astype(vp.dtype))
-        return kp, vp
-
-    # ------------------------------------------------ forward: prefill chunk
-    def _prefill_layer(self, lp, h, layer: LayerSpec, positions2, page_ids,
-                       offs, block_table, kp, vp):
-        """One GQA layer over a prompt chunk, KV via the page pool.
-
-        Mirrors ``attn_mod.gqa_prefill`` numerics exactly (same einsums,
-        same ``_attend_block``), with the gathered pages standing in for
-        the chunk-local K/V: gathered slot t holds sequence position t, so
-        the causal mask alone excludes stale/unwritten slots."""
-        cfg, policy = self.cfg, self.policy
-        a = cfg.attn
-        scale = 1.0 / jnp.sqrt(a.head_dim).astype(jnp.float32)
-        xin = rms_norm(h, lp["norm1"], cfg.norm_eps)
-        ap = lp["attn"]
-        q = jnp.einsum("bsd,dhk->bshk", xin, ap["wq"])
-        k = jnp.einsum("bsd,dhk->bshk", xin, ap["wk"])
-        v = jnp.einsum("bsd,dhk->bshk", xin, ap["wv"])
-        q = shard(apply_rope(q, positions2, cfg.rope_theta), policy.heads)
-        k = apply_rope(k, positions2, cfg.rope_theta)
-        kp, vp = self._scatter(kp, vp, k[0], v[0], page_ids, offs)
-        t = block_table.shape[0] * self.page
-        k_all = kp[block_table].reshape(t, a.num_kv_heads, a.head_dim)[None]
-        v_all = vp[block_table].reshape(t, a.num_kv_heads, a.head_dim)[None]
-        pos_k = jnp.arange(t, dtype=jnp.int32)[None]
-        qg = attn_mod._split_heads(q, a.num_kv_heads)
-        ctx = attn_mod._attend_block(qg, k_all.astype(h.dtype),
-                                     v_all.astype(h.dtype), positions2, pos_k,
-                                     scale, a, layer, True, h.dtype)
-        ctx = ctx.reshape(1, -1, a.num_heads, a.head_dim)
-        out = jnp.einsum("bshk,hkd->bsd", ctx, ap["wo"])
-        h = h + shard(out, policy.act)
-        h, _, _ = _apply_ffn(lp, h, layer, cfg, policy)
-        return h, kp, vp
+    def _scatter(self, pool, k, v, page_ids, offs):
+        """Write the K/V rows of every valid (lane, row) into the page
+        pools (masked rows land on the trash page).  int8 pools quantize
+        per-row and store the scales beside the pages."""
+        if not self.kv_quant:
+            return {**pool,
+                    "k": pool["k"].at[page_ids, offs].set(
+                        k.astype(pool["k"].dtype)),
+                    "v": pool["v"].at[page_ids, offs].set(
+                        v.astype(pool["v"].dtype))}
+        kq, ks = attn_mod._quantize_kv(k)
+        vq, vs = attn_mod._quantize_kv(v)
+        return {**pool,
+                "k": pool["k"].at[page_ids, offs].set(kq),
+                "v": pool["v"].at[page_ids, offs].set(vq),
+                "k_scale": pool["k_scale"].at[page_ids, offs].set(
+                    ks.astype(jnp.float32)),
+                "v_scale": pool["v_scale"].at[page_ids, offs].set(
+                    vs.astype(jnp.float32))}
 
     def _walk_layers(self, params, pools, h, layer_fn):
-        """Run ``layer_fn(lp, h, layer, kp, vp) -> (h, kp, vp)`` over the
+        """Run ``layer_fn(lp, h, layer, pool) -> (h, pool)`` over the
         prefix layers and the scanned period stack, threading each layer's
-        page pool through (the stacked period pools are indexed/updated
-        per scan step, mirroring the dense decode path), then apply the
-        final norm.  Shared by the chunk-prefill and decode forwards."""
+        page-pool dict through (the stacked period pools are
+        indexed/updated per scan step, mirroring the dense decode path),
+        then apply the final norm."""
         cfg = self.cfg
         new_pools = dict(pools)
         if cfg.prefix:
             new_pools["prefix"] = dict(pools["prefix"])
             for i, layer in enumerate(cfg.prefix):
                 key = f"layer{i}"
-                p = pools["prefix"][key]
-                h, kp, vp = layer_fn(params["prefix"][key], h, layer,
-                                     p["k"], p["v"])
-                new_pools["prefix"][key] = {"k": kp, "v": vp}
+                h, p = layer_fn(params["prefix"][key], h, layer,
+                                pools["prefix"][key])
+                new_pools["prefix"][key] = p
         if cfg.period:
             def body(carry, xs):
                 hh, pp = carry
                 lp_stack, idx = xs
                 for i, layer in enumerate(cfg.period):
                     sub = f"sub{i}"
-                    kp = jax.lax.dynamic_index_in_dim(pp[sub]["k"], idx, 0,
-                                                      keepdims=False)
-                    vp = jax.lax.dynamic_index_in_dim(pp[sub]["v"], idx, 0,
-                                                      keepdims=False)
-                    hh, kp, vp = layer_fn(lp_stack[sub], hh, layer, kp, vp)
+                    pool_i = {key: jax.lax.dynamic_index_in_dim(
+                        pp[sub][key], idx, 0, keepdims=False)
+                        for key in pp[sub]}
+                    hh, pool_i = layer_fn(lp_stack[sub], hh, layer, pool_i)
                     pp = {**pp, sub: {
-                        "k": jax.lax.dynamic_update_index_in_dim(
-                            pp[sub]["k"], kp, idx, 0),
-                        "v": jax.lax.dynamic_update_index_in_dim(
-                            pp[sub]["v"], vp, idx, 0)}}
+                        key: jax.lax.dynamic_update_index_in_dim(
+                            pp[sub][key], pool_i[key], idx, 0)
+                        for key in pp[sub]}}
                 return (hh, pp), ()
 
             idxs = jnp.arange(cfg.repeats, dtype=jnp.int32)
@@ -209,69 +228,72 @@ class PagedRuntime:
             new_pools["period"] = period_pools
         return rms_norm(h, params["final_norm"], cfg.norm_eps), new_pools
 
-    def _prefill_impl(self, params, pools, tokens, start, valid, block_table):
-        """tokens [C] int32 (padded chunk); start/valid scalars int32;
-        block_table [PPS].  Returns (last-valid-token logits [V], pools)."""
+    # ------------------------------------------------ forward: fused mixed
+    def _mixed_layer(self, lp, h, layer: LayerSpec, positions, qpos,
+                     page_ids, offs, block_tables, pool):
+        """One GQA layer over the flattened fused batch: ``h`` is
+        [1, T, d] packed token rows, KV via the page pool, causality via
+        per-row positions inside the page walk.  Mirrors
+        ``attn_mod.gqa_prefill`` numerics (same einsums, same f32 masked
+        softmax) with the gathered pages standing in for the in-context
+        K/V."""
         cfg, policy = self.cfg, self.policy
-        c = tokens.shape[0]
-        positions = start + jnp.arange(c, dtype=jnp.int32)
-        positions2 = positions[None]
-        wmask = jnp.arange(c, dtype=jnp.int32) < valid
-        page_ids = jnp.where(wmask, block_table[positions // self.page],
-                             self.pool_pages)
-        offs = positions % self.page
-        h = embed_tokens(params, cfg, tokens[None], policy)
-        h, new_pools = self._walk_layers(
-            params, pools, h,
-            lambda lp, hh, layer, kp, vp: self._prefill_layer(
-                lp, hh, layer, positions2, page_ids, offs, block_table,
-                kp, vp))
-        h_last = jax.lax.dynamic_slice_in_dim(h, valid - 1, 1, axis=1)
-        logits = _logits(params, cfg, h_last, policy)[0, 0]
-        return logits, new_pools
-
-    # ---------------------------------------------------- forward: decode
-    def _decode_layer(self, lp, h, layer: LayerSpec, positions, page_ids,
-                      offs, block_tables, lengths, kp, vp):
-        cfg, policy = self.cfg, self.policy
-        a = cfg.attn
-        xin = rms_norm(h, lp["norm1"], cfg.norm_eps)
         ap = lp["attn"]
-        pos2 = positions[:, None]
+        xin = rms_norm(h, lp["norm1"], cfg.norm_eps)
         q = jnp.einsum("bsd,dhk->bshk", xin, ap["wq"])
         k = jnp.einsum("bsd,dhk->bshk", xin, ap["wk"])
         v = jnp.einsum("bsd,dhk->bshk", xin, ap["wv"])
-        q = apply_rope(q, pos2, cfg.rope_theta)
-        k = apply_rope(k, pos2, cfg.rope_theta)
-        kp, vp = self._scatter(kp, vp, k[:, 0], v[:, 0], page_ids, offs)
-        ctx = paged_attention(q[:, 0].astype(h.dtype), kp, vp, block_tables,
-                              lengths, impl=self.attn_impl)    # [B, H, hd]
-        out = jnp.einsum("bshk,hkd->bsd", ctx[:, None].astype(h.dtype),
-                         ap["wo"])
+        q = shard(apply_rope(q, positions, cfg.rope_theta), policy.heads)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        pool = self._scatter(pool, k[0], v[0], page_ids, offs)
+        kwargs = {}
+        if self.kv_quant:
+            kwargs = dict(k_scales=pool["k_scale"],
+                          v_scales=pool["v_scale"])
+        # each packed row is its own one-row lane of the ragged kernel.
+        # deliberate tradeoff: chunk rows re-gather their lane's pages per
+        # row (O(rows x pages) gather traffic) but the batch carries ZERO
+        # pad rows; the per-lane Q-block form (one Q=chunk lane, decode
+        # lanes padded to Q) amortises the gather but measured ~3x slower
+        # on the CPU oracle because padding dominates — on TPU the Q>1
+        # kernel path is the one to switch to (see ROADMAP)
+        ctx = paged_attention_mixed(q[0][:, None].astype(h.dtype),
+                                    pool["k"], pool["v"], block_tables,
+                                    qpos[:, None], impl=self.attn_impl,
+                                    **kwargs)                 # [T, 1, H, hd]
+        out = jnp.einsum("bshk,hkd->bsd",
+                         ctx[None, :, 0].astype(h.dtype), ap["wo"])
         h = h + shard(out, policy.act)
         h, _, _ = _apply_ffn(lp, h, layer, cfg, policy)
-        return h, kp, vp
+        return h, pool
 
-    def _decode_impl(self, params, pools, tokens, positions, block_tables,
-                     lengths, active):
-        """tokens/positions/lengths [B] int32, block_tables [B, W] int32
-        (W bucketed), active [B] bool.  Returns (logits [B, V], pools)."""
+    def _mixed_impl(self, params, pools, tokens, positions, n_rows,
+                    block_tables, last_rows):
+        """tokens/positions [T] int32 — the step's packed token rows
+        (T bucketed); n_rows scalar int32 (rows beyond it are padding);
+        block_tables [T, W] int32 (each row carries its lane's table,
+        W bucketed); last_rows [L] int32 (the row whose logits each lane
+        needs).  Returns (logits [L, V], pools)."""
         cfg, policy = self.cfg, self.policy
-        b = tokens.shape[0]
-        bidx = jnp.arange(b)
+        t = tokens.shape[0]
         width = block_tables.shape[1]
+        valid = jnp.arange(t, dtype=jnp.int32) < n_rows
         slot = jnp.clip(positions // self.page, 0, width - 1)
-        page_ids = jnp.where(active, block_tables[bidx, slot],
+        page_ids = jnp.where(valid, block_tables[jnp.arange(t), slot],
                              self.pool_pages)
         offs = positions % self.page
-        lens = jnp.maximum(jnp.where(active, lengths, 1), 1)
-        h = embed_tokens(params, cfg, tokens[:, None], policy)
+        # pad rows read slot 0 of their (zero) table so the online softmax
+        # never sees an empty row; their output is discarded
+        qpos = jnp.where(valid, positions, 0)
+        positions2 = qpos[None]
+        h = embed_tokens(params, cfg, tokens[None], policy)
         h, new_pools = self._walk_layers(
             params, pools, h,
-            lambda lp, hh, layer, kp, vp: self._decode_layer(
-                lp, hh, layer, positions, page_ids, offs, block_tables,
-                lens, kp, vp))
-        logits = _logits(params, cfg, h, policy)[:, 0]
+            lambda lp, hh, layer, pool: self._mixed_layer(
+                lp, hh, layer, positions2, qpos, page_ids, offs,
+                block_tables, pool))
+        h_last = h[0][last_rows][None]                   # [1, L, d]
+        logits = _logits(params, cfg, h_last, policy)[0]
         return logits, new_pools
 
     # ------------------------------------------------------------ engine API
@@ -301,103 +323,105 @@ class PagedRuntime:
     def set_budget(self, n: int) -> None:
         self.sched.set_budget(n)
 
+    # ------------------------------------------------------------ fused step
+    def _run_mixed(self, tokens, positions, n_rows, bts, last_rows):
+        """Execute the fused forward for this (rows, width) bucket,
+        AOT-compiling the bucket on first sight so compile time never
+        enters the measured compute.  Returns (logits, compute_s)."""
+        key = (tokens.shape[0], bts.shape[1])
+        fn = self._mixed_exec.get(key)
+        if fn is None:
+            fn = self._mixed_fn.lower(
+                self.params, self.pools, tokens, positions, n_rows, bts,
+                last_rows).compile()
+            self._mixed_exec[key] = fn
+        t0 = time.perf_counter()
+        logits, self.pools = fn(self.params, self.pools, tokens, positions,
+                                n_rows, bts, last_rows)
+        logits = jax.block_until_ready(logits)
+        return logits, time.perf_counter() - t0
+
     def step(self) -> StepReport:
-        kind = self.sched.plan()
-        if kind == "prefill":
-            rep = self._step_prefill()
-            if rep is not None:
-                return rep
-            kind = "decode" if self.sched.active else "idle"
-        if kind == "decode":
-            return self._step_decode()
-        return StepReport(kind="idle")
-
-    # ------------------------------------------------------------ internals
-    def _step_prefill(self) -> Optional[StepReport]:
-        seq, start, clen = self.sched.next_chunk()
-        req = seq.req
-        ok, victims = self.sched.reserve_for_prefill(seq, start + clen)
-        if not ok:
-            if victims:      # partial eviction still happened: surface it
-                rep = StepReport(kind="idle")
-                rep.preempted = [s.req for s in victims]
-                return rep
-            return None     # every page held by more-urgent work; decode on
-        # bucket the padded chunk width and the block-table width to the
-        # actual work (powers of two -> bounded recompiles), so a short
-        # prompt/chunk doesn't pay the full chunk_tokens x seq_cap forward
-        cb = min(self.chunk,
-                 self.page * _next_pow2(self.kv.pages_needed(clen)))
-        width = min(self.pps, _next_pow2(self.kv.pages_needed(start + cb)))
-        bt = jnp.asarray(self.kv.block_table(req.req_id, width))
-        toks = np.zeros(cb, np.int32)
-        toks[:clen] = np.asarray(req.prompt_tokens, np.int32)[start:start + clen]
-        t0 = time.perf_counter()
-        logits, self.pools = self._prefill_fn(
-            self.params, self.pools, jnp.asarray(toks), np.int32(start),
-            np.int32(clen), bt)
-        logits = jax.block_until_ready(logits)
-        dt = time.perf_counter() - t0
-        self.sched.finish_chunk(seq, clen)
-        report = StepReport(kind="prefill", compute_s=dt, tokens=clen)
-        report.preempted = [s.req for s in victims]
-        if seq.prefilled >= req.prompt_len:        # final chunk: first token
-            first = int(jnp.argmax(logits))
-            seq.last_token = first
-            req.generated = 1
-            req.output_tokens.append(first)
-            # a restart after preemption regenerates the SAME first token,
-            # so only a fresh emission defines TTFT (no second sample)
-            if req.prefill_done < 0:
-                report.prefilled = req
-            if req.generated >= req.max_new_tokens:
-                self.sched.complete(seq)
-                report.completed.append(req)
-        return report
-
-    def _step_decode(self) -> StepReport:
-        ready, preempted = self.sched.reserve_for_decode()
-        report = StepReport(kind="decode")
-        report.preempted = [s.req for s in preempted]
-        if not ready:
-            report.kind = "idle"
+        plan = self.sched.plan()
+        report = StepReport(kind="idle")
+        report.preempted = [s.req for s in plan.preempted]
+        report.prefix_hit_tokens = plan.prefix_hit_tokens
+        if plan.empty:
             return report
-        b = self.max_slots
-        tokens = np.zeros(b, np.int32)
-        positions = np.zeros(b, np.int32)
-        lengths = np.ones(b, np.int32)
-        active = np.zeros(b, bool)
+        decodes, prefills = plan.decodes, plan.prefills
+        report.kind = ("mixed" if decodes and prefills
+                       else "decode" if decodes else "prefill")
+
+        # pack the step's real tokens back to back: one row per decode
+        # lane, ``clen`` rows per prefill chunk — cost tracks live tokens,
+        # and the row/width buckets keep the jit shape set bounded
+        n_rows = len(decodes) + sum(c for _, _, c in prefills)
+        t = _bucket_rows(n_rows)
+        tokens = np.zeros(t, np.int32)
+        positions = np.zeros(t, np.int32)
+        last_rows = np.zeros(self.max_slots, np.int32)
+        lanes: List[tuple] = []
+        row_of: List[tuple] = []          # (row_start, n) per lane
+        row = 0
         max_pages = 1
-        for i, s in enumerate(ready):
+        for s in decodes:
+            lanes.append(("d", s))
             pos = s.req.prompt_len + s.req.generated - 1
-            tokens[i] = s.last_token
-            positions[i] = pos
-            lengths[i] = pos + 1
-            active[i] = True
+            tokens[row] = s.last_token
+            positions[row] = pos
+            last_rows[len(lanes) - 1] = row
+            row_of.append((row, 1))
+            row += 1
             max_pages = max(max_pages, self.kv.pages_needed(pos + 1))
-        # bucket the block-table width so decode cost tracks the longest
-        # LIVE sequence (few power-of-two recompiles), not the seq cap
+        for s, start, clen in prefills:
+            lanes.append(("p", s, start, clen))
+            tokens[row:row + clen] = np.asarray(
+                s.req.prompt_tokens, np.int32)[start:start + clen]
+            positions[row:row + clen] = start + np.arange(clen,
+                                                          dtype=np.int32)
+            last_rows[len(lanes) - 1] = row + clen - 1
+            row_of.append((row, clen))
+            row += clen
+            max_pages = max(max_pages, self.kv.pages_needed(start + clen))
         width = min(self.pps, _next_pow2(max_pages))
-        bts = np.zeros((b, width), np.int32)
-        for i, s in enumerate(ready):
-            bts[i] = self.kv.block_table(s.req.req_id, width)
-        t0 = time.perf_counter()
-        logits, self.pools = self._decode_fn(
-            self.params, self.pools, jnp.asarray(tokens),
-            jnp.asarray(positions), jnp.asarray(bts), jnp.asarray(lengths),
-            jnp.asarray(active))
-        logits = jax.block_until_ready(logits)
-        report.compute_s = time.perf_counter() - t0
+        bts = np.zeros((t, width), np.int32)
+        for (r0, n), lane in zip(row_of, lanes):
+            bts[r0:r0 + n] = self.kv.block_table(lane[1].req.req_id, width)
+
+        logits, report.compute_s = self._run_mixed(
+            jnp.asarray(tokens), jnp.asarray(positions), np.int32(n_rows),
+            jnp.asarray(bts), jnp.asarray(last_rows))
         next_tokens = np.asarray(jnp.argmax(logits, axis=-1))
-        for i, s in enumerate(ready):
-            self.sched.commit_decode(s)
-            tok = int(next_tokens[i])
-            s.last_token = tok
-            s.req.generated += 1
-            s.req.output_tokens.append(tok)
-            report.tokens += 1
-            report.decoded.append(s.req)
-            if s.req.generated >= s.req.max_new_tokens:
-                self.sched.complete(s)
-                report.completed.append(s.req)
+
+        for i, lane in enumerate(lanes):
+            if lane[0] == "d":
+                s = lane[1]
+                self.sched.commit_decode(s)
+                tok = int(next_tokens[i])
+                s.last_token = tok
+                s.req.generated += 1
+                s.req.output_tokens.append(tok)
+                report.decode_tokens += 1
+                report.tokens += 1
+                report.decoded.append(s.req)
+                if s.req.generated >= s.req.max_new_tokens:
+                    self.sched.complete(s)
+                    report.completed.append(s.req)
+            else:
+                _, s, start, clen = lane
+                self.sched.finish_chunk(s, clen)
+                report.prefill_tokens += clen
+                report.tokens += clen
+                if s.prefilled >= s.req.prompt_len:   # final chunk: 1st token
+                    first = int(next_tokens[i])
+                    s.last_token = first
+                    s.req.generated = 1
+                    s.req.output_tokens.append(first)
+                    # a restart after preemption regenerates the SAME first
+                    # token, so only a fresh emission defines TTFT
+                    if s.req.prefill_done < 0:
+                        report.prefilled.append(s.req)
+                    if s.req.generated >= s.req.max_new_tokens:
+                        self.sched.complete(s)
+                        report.completed.append(s.req)
         return report

@@ -1,35 +1,48 @@
-"""Scheduler for the paged decode runtime: chunked prefill + SLO-aware
-preemption over a shared KV page pool.
+"""Scheduler for the paged runtime: fused mixed prefill+decode batch
+composition + SLO-aware, refcount-aware preemption over a shared KV page
+pool.
 
 Host-side policy only — no jax in this module, so the scheduling logic is
 unit-testable without touching a device.  The runtime
-(``serving/paged_runtime.py``) asks for one unit of work per engine step
-and executes the forward passes.
+(``serving/paged_runtime.py``) asks for one :class:`MixedPlan` per engine
+step and executes it as a single fused forward pass.
 
-Two policies live here:
+Three policies live here:
 
-* **Chunked prefill** (predictable-latency scheduling of prefill vs decode
-  work): prompts are prefilled in ``chunk_tokens``-sized pieces
-  (a ``page_size`` multiple), and when decode-active sequences exist the
-  planner alternates prefill chunks with decode steps, so a long prompt
-  adds at most one chunk of compute between consecutive decode steps
-  instead of head-of-line-blocking every running sequence for the whole
-  prompt (TTFT *and* ITL tails both stay bounded).
+* **Continuous batching under a per-step token budget** (the core lever in
+  SLO-aware batch composition): every step's batch starts from ALL
+  decode-ready lanes (one token each) and the remaining budget
+  (``step_tokens - n_decode``) is filled with prefill chunk tokens — the
+  in-flight chunked prompts first, then new admissions.  Decode lanes
+  therefore never stall on an admission: a new prompt only shrinks the
+  prefill share of the step, never displaces a decode token, which is what
+  keeps ITL tails flat under churn (the PR 3 interleave instead alternated
+  whole steps, stalling every decode lane for a full chunk).
+
+* **Prefix-cache sharing**: when a prompt is first scheduled, the longest
+  cached page-aligned prefix is mapped straight into its block table
+  (``PagedKVCache.match_prefix``) and those tokens are never prefilled —
+  TTFT for shared-prefix workloads drops from O(prompt) to O(tail).  Fully
+  prefilled pages are published back (``commit_prefix``) as chunks finish.
 
 * **SLO-aware preemption** (serving mixed loads with SLO guarantees):
   page-pool exhaustion evicts the least-SLO-urgent page holder — lowest
   ``Request.priority`` first, then the furthest deadline
-  (``arrival + slo``) — releases its pages, and requeues it for a full
-  restart (recompute-style preemption: greedy decode regenerates the same
-  tokens).  Admission-time prefill may only preempt victims strictly less
-  urgent than the beneficiary, which makes eviction thrash-free; decode of
-  already-running sequences may evict any holder (including, as a last
-  resort, the least urgent of the decoding set itself).
+  (``arrival + slo``) — releases its *references*, and requeues it for a
+  full restart (recompute-style preemption: greedy decode regenerates the
+  same tokens).  Refcount-awareness is structural: eviction only drops the
+  victim's references, so a page with live sharers is never freed, and a
+  victim whose pages are all shared yields nothing — the loop then moves
+  to the next victim in the strict total order (no livelock).  Admission-
+  time prefill may only preempt victims strictly less urgent than the
+  beneficiary, which keeps eviction thrash-free; decode of already-running
+  sequences may evict any holder (including, as a last resort, the least
+  urgent of the decoding set itself).
 """
 from __future__ import annotations
 
 from collections import deque
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Deque, List, Optional, Tuple
 
 from repro.serving.kvcache import PagedKVCache
@@ -40,8 +53,12 @@ _INF = float("inf")
 
 @dataclass
 class SchedConfig:
-    chunk_tokens: int = 64        # per-step prefill token budget
-    max_active: int = 8           # decode-concurrency cap (engine slots)
+    chunk_tokens: int = 64        # per-seq prefill chunk cap per step
+    max_active: int = 8           # lane cap (decode + prefill rows)
+    # fused per-step token budget (decode lanes + prefill chunk tokens);
+    # None = max_active + chunk_tokens, i.e. a full decode batch never
+    # forfeits prefill progress and vice versa
+    step_tokens: Optional[int] = None
 
 
 @dataclass(eq=False)          # identity semantics for in/remove on lists
@@ -51,11 +68,31 @@ class SeqState:
     prefilled: int = 0            # prompt tokens already written to pages
     preemptions: int = 0
     last_token: int = 0           # feedback token for the next decode step
+    prefix_hit: int = 0           # prompt tokens served from the prefix cache
 
     def deadline(self) -> float:
         if self.req.slo_ms is None:
             return _INF
         return self.req.arrival + self.req.slo_ms / 1e3
+
+
+@dataclass
+class MixedPlan:
+    """One fused engine step: decode lanes + prefill chunks, all pages
+    reserved, composed under the step token budget."""
+    decodes: List[SeqState] = field(default_factory=list)
+    prefills: List[Tuple[SeqState, int, int]] = \
+        field(default_factory=list)           # (seq, start, chunk_len)
+    preempted: List[SeqState] = field(default_factory=list)
+    prefix_hit_tokens: int = 0                # matched while planning
+
+    @property
+    def total_tokens(self) -> int:
+        return len(self.decodes) + sum(c for _, _, c in self.prefills)
+
+    @property
+    def empty(self) -> bool:
+        return not self.decodes and not self.prefills
 
 
 def _urgency_key(s: SeqState) -> Tuple[float, float, float, float]:
@@ -71,18 +108,17 @@ def _urgency_key(s: SeqState) -> Tuple[float, float, float, float]:
 
 
 class PagedScheduler:
-    """Owns the waiting queue, the single in-flight chunked prefill, the
+    """Owns the waiting queue, the in-flight chunked prefills, the
     decode-active set, and all page accounting against one PagedKVCache."""
 
     def __init__(self, kv: PagedKVCache, cfg: SchedConfig):
         self.kv = kv
         self.cfg = cfg
         self.waiting: Deque[SeqState] = deque()
-        self.prefilling: Optional[SeqState] = None
+        self.prefilling: List[SeqState] = []
         self.active: List[SeqState] = []
         self.budget = cfg.max_active
         self.preempt_log: List[Tuple[int, int]] = []   # (victim, beneficiary)
-        self._prefer_decode = False    # alternation toggle for interleaving
 
     # ------------------------------------------------------------ lifecycle
     def submit(self, req: Request) -> bool:
@@ -99,55 +135,78 @@ class PagedScheduler:
         self.budget = max(1, budget)
 
     def has_work(self) -> bool:
-        return bool(self.waiting) or self.prefilling is not None \
+        return bool(self.waiting) or bool(self.prefilling) \
             or bool(self.active)
 
     def running(self) -> List[Request]:
-        out = [s.req for s in self.active]
-        if self.prefilling is not None:
-            out.append(self.prefilling.req)
-        return out
+        return [s.req for s in self.active] + \
+            [s.req for s in self.prefilling]
+
+    def step_token_budget(self) -> int:
+        if self.cfg.step_tokens is not None:
+            return max(1, self.cfg.step_tokens)
+        return self.cfg.max_active + self.cfg.chunk_tokens
 
     # ----------------------------------------------------------------- plan
-    def plan(self) -> str:
-        """Pick the next unit of work: "prefill" | "decode" | "idle".
-
-        When both a prefill and decode work are pending the planner
-        alternates, which is exactly the chunked-prefill interleave: each
-        engine step is either ONE chunk of prefill or ONE batched decode
-        step, never an unbounded prompt."""
-        can_start = (self.prefilling is not None or
-                     (bool(self.waiting) and
-                      len(self.active) + 1 <= self.budget))
-        if can_start and (not self.active or not self._prefer_decode):
-            if self.prefilling is None:
-                self.prefilling = self.waiting.popleft()
-            self._prefer_decode = True
-            return "prefill"
-        if self.active:
-            self._prefer_decode = False
-            return "decode"
-        if can_start:
-            if self.prefilling is None:
-                self.prefilling = self.waiting.popleft()
-            return "prefill"
-        return "idle"
+    def plan(self) -> MixedPlan:
+        """Compose one fused step: every decode-ready lane plus as many
+        prefill chunk tokens as fit under the step token budget, all with
+        pages reserved.  Eviction during planning can remove a
+        previously-planned lane — the final filters keep the plan
+        consistent with what actually still holds pages."""
+        plan = MixedPlan()
+        plan.decodes = self._reserve_decodes(plan.preempted)
+        budget = self.step_token_budget() - len(plan.decodes)
+        # no separate lane cap: concurrency is already bounded by the
+        # admission gate below (active + prefilling < self.budget), so an
+        # in-flight chunk keeps progressing even with every slot decoding.
+        # iterate a snapshot: a reservation below can evict an earlier
+        # member of self.prefilling, and a live index would then skip the
+        # next in-flight prompt for the step
+        candidates = list(self.prefilling)
+        idx = 0
+        while budget > 0:
+            if idx < len(candidates):
+                seq = candidates[idx]
+                idx += 1
+                if seq not in self.prefilling:   # evicted while planning
+                    continue
+            elif self.waiting and (len(self.active) + len(self.prefilling)
+                                   < self.budget):
+                seq = self.waiting.popleft()
+                self.prefilling.append(seq)
+                if seq.prefilled == 0:
+                    matched = self.kv.match_prefix(seq.req.req_id,
+                                                   seq.req.prompt_tokens)
+                    if matched:
+                        seq.prefilled = matched
+                        seq.prefix_hit = matched
+                        plan.prefix_hit_tokens += matched
+            else:
+                break
+            clen = min(self.cfg.chunk_tokens, budget,
+                       seq.req.prompt_len - seq.prefilled)
+            if clen <= 0:
+                continue
+            ok, victims = self._reserve_prefill(seq, seq.prefilled + clen)
+            plan.preempted.extend(victims)
+            if not ok:
+                break       # no eligible victim; decode-only step
+            plan.prefills.append((seq, seq.prefilled, clen))
+            budget -= clen
+        # eviction during later reservations may have unplanned earlier work
+        plan.decodes = [s for s in plan.decodes if s in self.active]
+        plan.prefills = [(s, a, c) for (s, a, c) in plan.prefills
+                         if s in self.prefilling]
+        return plan
 
     # ------------------------------------------------------------- prefill
-    def next_chunk(self) -> Tuple[SeqState, int, int]:
-        """(seq, start, chunk_len) for the in-flight prefill."""
-        seq = self.prefilling
-        assert seq is not None
-        start = seq.prefilled
-        return seq, start, min(self.cfg.chunk_tokens,
-                               seq.req.prompt_len - start)
-
-    def reserve_for_prefill(self, seq: SeqState,
-                            target_tokens: int) -> Tuple[bool, List[SeqState]]:
+    def _reserve_prefill(self, seq: SeqState,
+                         target_tokens: int) -> Tuple[bool, List[SeqState]]:
         """Reserve pages for the next chunk, evicting strictly-less-urgent
         holders if needed.  Returns (ok, victims-this-call); ok=False (with
-        ``seq`` left queued as the in-flight prefill) means no eligible
-        victim exists — the planner falls back to decode and retries."""
+        ``seq`` left queued in the prefilling set) means no eligible victim
+        exists — the planner falls back to decode-only and retries."""
         victims: List[SeqState] = []
         while True:
             try:
@@ -162,19 +221,23 @@ class PagedScheduler:
                 victims.append(victim)
 
     def finish_chunk(self, seq: SeqState, n_tokens: int) -> None:
+        """``n_tokens`` of prompt were written by the fused step; publish
+        the completed full pages to the prefix index so later requests
+        sharing this prompt skip their prefill."""
         self.kv.extend(seq.req.req_id, seq.prefilled + n_tokens)
         seq.prefilled += n_tokens
+        self.kv.commit_prefix(seq.req.req_id, seq.req.prompt_tokens,
+                              seq.prefilled)
         if seq.prefilled >= seq.req.prompt_len:
-            self.prefilling = None
+            self.prefilling.remove(seq)
             self.active.append(seq)
 
     # -------------------------------------------------------------- decode
-    def reserve_for_decode(self) -> Tuple[List[SeqState], List[SeqState]]:
+    def _reserve_decodes(self,
+                         preempted: List[SeqState]) -> List[SeqState]:
         """Reserve one more token of pages for every decode-active
         sequence, most urgent first.  Under an exhausted pool the least
-        urgent holders are evicted until the rest fit.  Returns
-        (ready, preempted-this-call)."""
-        preempted: List[SeqState] = []
+        urgent holders are evicted until the rest fit."""
         ready: List[SeqState] = []
         for seq in sorted(self.active, key=_urgency_key, reverse=True):
             if seq not in self.active:      # evicted by an earlier reserve
@@ -193,11 +256,10 @@ class PagedScheduler:
                     preempted.append(victim)
                     if victim is seq:
                         done = True
-        ready = [s for s in ready if s in self.active]
-        return ready, preempted
+        return [s for s in ready if s in self.active]
 
     def commit_decode(self, seq: SeqState) -> None:
-        """One token was appended by the decode step."""
+        """One token was appended by the fused step."""
         self.kv.extend(seq.req.req_id, self._tokens_of(seq) + 1)
 
     def _tokens_of(self, seq: SeqState) -> int:
@@ -211,8 +273,7 @@ class PagedScheduler:
                      strictly_less_urgent_than: Optional[SeqState] = None
                      ) -> Optional[SeqState]:
         holders = [s for s in self.active if s is not exclude]
-        if self.prefilling is not None and self.prefilling is not exclude:
-            holders.append(self.prefilling)
+        holders += [s for s in self.prefilling if s is not exclude]
         holders = [s for s in holders if s.req.req_id in self.kv.tables]
         if strictly_less_urgent_than is not None:
             bar = _urgency_key(strictly_less_urgent_than)
@@ -223,7 +284,11 @@ class PagedScheduler:
 
     def preempt(self, victim: SeqState,
                 beneficiary: Optional[SeqState] = None) -> None:
-        """Release the victim's pages and requeue it for a full restart.
+        """Release the victim's page references and requeue it for a full
+        restart.  Shared pages survive (their other sharers keep them, or
+        they park on the prefix cache), so a preempted shared-prefix
+        request usually restarts with a prefix hit instead of a cold
+        prefill.
 
         ``prefill_done`` is deliberately kept: greedy recompute regenerates
         the *same* tokens, so the original first-token emission remains the
@@ -233,12 +298,13 @@ class PagedScheduler:
         regenerated decode gap is measured from the original emission."""
         if victim.req.req_id in self.kv.tables:
             self.kv.release(victim.req.req_id)
-        if victim is self.prefilling:
-            self.prefilling = None
+        if victim in self.prefilling:
+            self.prefilling.remove(victim)
         if victim in self.active:
             self.active.remove(victim)
         r = victim.req
         victim.prefilled = 0
+        victim.prefix_hit = 0
         victim.preemptions += 1
         r.generated = 0
         r.slot = -1

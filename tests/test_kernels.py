@@ -8,8 +8,10 @@ from hypothesis import given, settings, strategies as st
 
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import flash_attention_ref
-from repro.kernels.paged_attention.ops import paged_attention
-from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.kernels.paged_attention.ops import (paged_attention,
+                                               paged_attention_mixed)
+from repro.kernels.paged_attention.ref import (paged_attention_mixed_ref,
+                                               paged_attention_ref)
 from repro.kernels.rwkv6_scan.ops import rwkv6_scan
 from repro.kernels.rwkv6_scan.ref import rwkv6_scan_ref
 from repro.kernels.selective_scan.ops import selective_scan
@@ -92,6 +94,87 @@ def test_paged_attention_ignores_pages_beyond_length(impl):
     vp2 = vp.at[2:].set(-1e4)
     out2 = paged_attention(q, kp2, vp2, bt, lens, impl=impl)
     np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-5)
+
+
+@pytest.mark.parametrize("b,qn,h,kv,hd,page,pps,npages", [
+    (2, 8, 4, 2, 64, 128, 4, 16),
+    (3, 16, 8, 4, 128, 128, 2, 8),
+    (1, 4, 4, 1, 64, 128, 8, 32),
+])
+def test_paged_attention_mixed_allclose(b, qn, h, kv, hd, page, pps, npages):
+    """Ragged mixed rows (per-row causal positions, including pad rows at
+    position 0): Pallas kernel (interpret) vs oracle."""
+    q = jnp.asarray(RNG.standard_normal((b, qn, h, hd)), jnp.float32)
+    kp = jnp.asarray(RNG.standard_normal((npages, page, kv, hd)), jnp.float32)
+    vp = jnp.asarray(RNG.standard_normal((npages, page, kv, hd)), jnp.float32)
+    bt = jnp.asarray(RNG.integers(0, npages, (b, pps)), jnp.int32)
+    # lane 0: a prefill-style run of consecutive positions; other lanes:
+    # random valid positions with trailing pad rows at 0
+    qpos = RNG.integers(0, pps * page, (b, qn)).astype(np.int32)
+    qpos[0] = np.arange(qn) + RNG.integers(0, pps * page - qn)
+    qpos[:, qn - qn // 2:] = 0                      # pad-row tail
+    qpos = jnp.asarray(qpos)
+    out = paged_attention_mixed(q, kp, vp, bt, qpos, impl="kernel")
+    ref = paged_attention_mixed_ref(q, kp, vp, bt, qpos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-3,
+                               atol=2e-3)
+
+
+def test_paged_attention_mixed_q1_matches_decode():
+    """Property: the ragged path with q_len=1 IS the decode path."""
+    b, h, kv, hd, page, pps, npages = 2, 4, 2, 64, 128, 4, 16
+    q = jnp.asarray(RNG.standard_normal((b, h, hd)), jnp.float32)
+    kp = jnp.asarray(RNG.standard_normal((npages, page, kv, hd)), jnp.float32)
+    vp = jnp.asarray(RNG.standard_normal((npages, page, kv, hd)), jnp.float32)
+    bt = jnp.asarray(RNG.integers(0, npages, (b, pps)), jnp.int32)
+    lens = jnp.asarray([200, 400], jnp.int32)
+    dec = paged_attention(q, kp, vp, bt, lens, impl="ref")
+    mix = paged_attention_mixed(q[:, None], kp, vp, bt,
+                                (lens - 1)[:, None], impl="ref")
+    np.testing.assert_allclose(np.asarray(mix[:, 0]), np.asarray(dec),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("impl", ["kernel", "ref"])
+def test_paged_attention_mixed_causal_within_chunk(impl):
+    """Garbage at key slots PAST a row's position must not leak into that
+    row — the in-page-walk causal mask (poisoning slots past position p
+    leaves rows <= p bit-identical)."""
+    b, qn, h, kv, hd, page, pps, npages = 1, 4, 2, 2, 64, 128, 2, 4
+    q = jnp.asarray(RNG.standard_normal((b, qn, h, hd)), jnp.float32)
+    kp = jnp.asarray(RNG.standard_normal((npages, page, kv, hd)), jnp.float32)
+    vp = jnp.asarray(RNG.standard_normal((npages, page, kv, hd)), jnp.float32)
+    bt = jnp.asarray([[0, 1]], jnp.int32)
+    qpos = jnp.asarray([[60, 61, 62, 63]], jnp.int32)
+    out1 = paged_attention_mixed(q, kp, vp, bt, qpos, impl=impl)
+    kp2 = kp.at[0, 64:].set(1e4).at[1].set(1e4)     # poison past pos 63
+    vp2 = vp.at[0, 64:].set(-1e4).at[1].set(-1e4)
+    out2 = paged_attention_mixed(q, kp2, vp2, bt, qpos, impl=impl)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-5)
+
+
+@pytest.mark.parametrize("impl", ["kernel", "ref"])
+def test_paged_attention_int8_pages_close(impl):
+    """int8 pages + per-page-row scales stay close to the fp path."""
+    b, qn, h, kv, hd, page, pps, npages = 2, 4, 4, 2, 64, 128, 2, 8
+    q = jnp.asarray(RNG.standard_normal((b, qn, h, hd)), jnp.float32)
+    kp = jnp.asarray(RNG.standard_normal((npages, page, kv, hd)), jnp.float32)
+    vp = jnp.asarray(RNG.standard_normal((npages, page, kv, hd)), jnp.float32)
+    bt = jnp.asarray(RNG.integers(0, npages, (b, pps)), jnp.int32)
+    qpos = jnp.asarray(RNG.integers(0, pps * page, (b, qn)), jnp.int32)
+
+    def quant(p):
+        s = np.abs(np.asarray(p)).max(-1) / 127.0 + 1e-8
+        iv = np.clip(np.round(np.asarray(p) / s[..., None]), -127, 127)
+        return jnp.asarray(iv.astype(np.int8)), jnp.asarray(s, jnp.float32)
+
+    kq, ks = quant(kp)
+    vq, vs = quant(vp)
+    fp = paged_attention_mixed(q, kp, vp, bt, qpos, impl=impl)
+    i8 = paged_attention_mixed(q, kq, vq, bt, qpos, impl=impl,
+                               k_scales=ks, v_scales=vs)
+    np.testing.assert_allclose(np.asarray(i8), np.asarray(fp), rtol=0.05,
+                               atol=0.05)
 
 
 def test_paged_attention_bucketed_width_invariance():
