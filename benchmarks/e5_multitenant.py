@@ -21,9 +21,15 @@ run, not per cell): a small multi-tenant trace served by live JAX engines
 via ``repro.launch.serve`` on the selected KV backend(s), so the sweep's
 JSON also tracks the serving runtime the simulator abstracts.
 
+``--hosts 4`` swaps the fleet onto the scaled 4-host p4d topology
+(``make_p4d_fleet``) and every cell reports controller wall-clock per
+decision tick beside the arbiter audit — the first "scale the fleet"
+measurement (Table 4's controller-CPU% analogue at fleet size).
+
     PYTHONPATH=src:. python benchmarks/e5_multitenant.py \
         [--tenants 2,4,8] [--replicas 1,2] [--duration 900] [--seed 0] \
-        [--churn] [--engine-backend both] [--out e5.json] [--smoke]
+        [--hosts 4] [--churn] [--engine-backend both] [--out e5.json] \
+        [--smoke]
 """
 from __future__ import annotations
 
@@ -38,7 +44,7 @@ from repro.core.controller import Controller, ControllerConfig
 from repro.core.ledger import DeviceLedger
 from repro.core.profiles import A100_MIG
 from repro.core.tenancy import BACKGROUND, TenantRegistry, TenantSpec
-from repro.core.topology import make_p4d_cluster
+from repro.core.topology import make_p4d_fleet
 from repro.sim.cluster import ClusterSim
 from repro.sim.params import InterferenceWindow, SimParams
 
@@ -97,12 +103,12 @@ def churn_spec(kind: str, idx: int) -> TenantSpec:
 
 
 def run_churn(n_tenants: int, replicas: int, seed: int,
-              arrivals: int = 24) -> dict:
+              arrivals: int = 24, hosts: int = 2) -> dict:
     """Admission-churn arm: stream late tenants through the registry-
     driven admission controller over the fleet's shared ledger; every 4th
     arrival an admitted tenant departs, so QUEUE'd tenants re-admit."""
     reg = TenantRegistry.slo_fleet(n_tenants, replicas)
-    topo = make_p4d_cluster(2)
+    topo = make_p4d_fleet(hosts)
     ledger = DeviceLedger.from_registry(topo, reg, A100_MIG,
                                         home_devices=("h0:g0",),
                                         ambient_units=3)
@@ -138,10 +144,11 @@ def run_churn(n_tenants: int, replicas: int, seed: int,
 
 
 def run_cell(n_tenants: int, replicas: int, duration: float,
-             seed: int, churn: bool = False) -> dict:
+             seed: int, churn: bool = False, hosts: int = 2) -> dict:
     p = make_params(n_tenants, replicas, duration, seed)
-    static = ClusterSim(p).run()
-    controlled = ClusterSim(p, controlled_factory).run()
+    topo = make_p4d_fleet(hosts)
+    static = ClusterSim(p, topo=topo).run()
+    controlled = ClusterSim(p, controlled_factory, topo=topo).run()
     improved = sum(
         1 for name in controlled.tenants
         if controlled.tenants[name].miss_rate
@@ -159,10 +166,21 @@ def run_cell(n_tenants: int, replicas: int, duration: float,
             "budget": controlled.arbiter_budget,
             "ok": controlled.arbiter_max_units <= controlled.arbiter_budget,
         },
+        # controller wall-clock per decision tick (Table 4's controller
+        # CPU% analogue at fleet scale — the "scale the fleet" signal the
+        # --hosts sweep tracks)
+        "controller": {
+            "hosts": hosts,
+            "devices": len(topo.devices()),
+            "ticks": controlled.controller_ticks,
+            "tick_ms_mean": round(controlled.controller_tick_ms_mean, 3),
+            "tick_ms_max": round(controlled.controller_tick_ms_max, 3),
+            "cpu_frac": round(controlled.controller_cpu_frac, 6),
+        },
         "tenants_not_worse": improved,
     }
     if churn:
-        out["churn"] = run_churn(n_tenants, replicas, seed)
+        out["churn"] = run_churn(n_tenants, replicas, seed, hosts=hosts)
     return out
 
 
@@ -185,15 +203,17 @@ def run_engine_arm(backend: str, seed: int) -> dict:
 
 
 def run(tenant_counts=(2, 4, 8), replica_counts=(1, 2), duration=900.0,
-        seed=0, verbose=True, churn=False, engine_backend=None) -> dict:
+        seed=0, verbose=True, churn=False, engine_backend=None,
+        hosts=2) -> dict:
     sweep = []
     for n in tenant_counts:
         for r in replica_counts:
-            cell = run_cell(n, r, duration, seed, churn=churn)
+            cell = run_cell(n, r, duration, seed, churn=churn, hosts=hosts)
             sweep.append(cell)
             if verbose:
                 ctl = cell["controlled"]["per_tenant"]
                 worst = max(v["miss_rate"] for v in ctl.values())
+                tick = cell["controller"]
                 print(f"  N={n} R={r}: aggregate "
                       f"{cell['static']['aggregate_rps']:.1f} -> "
                       f"{cell['controlled']['aggregate_rps']:.1f} rps, "
@@ -201,7 +221,10 @@ def run(tenant_counts=(2, 4, 8), replica_counts=(1, 2), duration=900.0,
                       f"{cell['tenants_not_worse']}/{n} tenants not worse, "
                       f"arbiter peak {cell['arbiter']['max_units_per_gpu']}"
                       f"/{cell['arbiter']['budget']}u "
-                      f"(ok={cell['arbiter']['ok']})")
+                      f"(ok={cell['arbiter']['ok']}), "
+                      f"ctl tick {tick['tick_ms_mean']:.2f}ms mean / "
+                      f"{tick['tick_ms_max']:.2f}ms max "
+                      f"({tick['hosts']} hosts)")
                 if churn:
                     ch = cell["churn"]
                     print(f"           churn: verdicts {ch['verdicts']} "
@@ -212,6 +235,7 @@ def run(tenant_counts=(2, 4, 8), replica_counts=(1, 2), duration=900.0,
         "experiment": "e5_multitenant",
         "duration_s": duration,
         "seed": seed,
+        "hosts": hosts,
         "sweep": sweep,
         "budget_respected": all(c["arbiter"]["ok"] for c in sweep),
     }
@@ -238,6 +262,11 @@ def main():
                     help="comma-separated replica counts")
     ap.add_argument("--duration", type=float, default=900.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--hosts", type=int, default=2,
+                    help="p4d hosts in the fleet topology (the paper's "
+                         "testbed is 2; --hosts 4 runs the scaled-fleet "
+                         "variant and the controller tick wall-clock "
+                         "tracks the cost of the bigger placement graph)")
     ap.add_argument("--churn", action="store_true",
                     help="add the admission-churn arm (per-verdict counts "
                          "alongside the arbiter audit)")
@@ -263,7 +292,8 @@ def main():
         duration = args.duration
     print("== E5: multi-tenant scaling (N SLO tenants x R replicas) ==")
     out = run(tenant_counts, replica_counts, duration, args.seed,
-              churn=args.churn, engine_backend=args.engine_backend)
+              churn=args.churn, engine_backend=args.engine_backend,
+              hosts=args.hosts)
     payload = json.dumps(out, indent=2)
     if args.out:
         with open(args.out, "w") as f:

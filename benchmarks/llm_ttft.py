@@ -17,7 +17,13 @@ ride in every step the ITL tail no longer spikes when churn admits new
 prompts).  ``--shared-prefix`` runs the prefix-cache workload arm: every
 request shares a common system prompt, and the A/B against the
 no-sharing baseline reports the prefix-hit rate plus the TTFT/ITL p99
-improvement (shared-prefix TTFT is O(tail), not O(prompt)).
+improvement (shared-prefix TTFT is O(tail), not O(prompt)).  ``--spec``
+runs the speculative-decode A/B: decode-heavy repetitive/templated
+traffic (draft hints replayed from each template's first completion)
+and a random control trace, spec on vs off, reporting accept rate, ITL
+p99/p50 and throughput deltas — the per-step fixed cost amortised k-ways
+on predictable traffic, with adaptive per-lane k keeping the random
+trace within noise of non-speculative decode.
 
 Paper Table 2:  Static MIG 232 ms TTFT p99, 1.00 thr
                 Full system 199 ms TTFT p99, 0.96 thr
@@ -43,7 +49,8 @@ from repro.sim.params import default_schedule
 
 def run(duration=1800.0, qps=1.75, seed=0, with_controller=True,
         verbose=True, compute_scale_7b=34.0, auto_calibrate=False,
-        backend="dense", shared_prefix=0, prefix_cache=True):
+        backend="dense", shared_prefix=0, prefix_cache=True,
+        spec_k=0, templated=0, max_new=4, denoise=False):
     """Virtual-time serving loop.  compute_scale_7b maps the reduced
     model's measured prefill compute to the 7B-on-A100 operating point.
 
@@ -55,7 +62,8 @@ def run(duration=1800.0, qps=1.75, seed=0, with_controller=True,
     232 ms p99 under queueing + interference) on any host."""
     cfg = reduced(get_config("olmo2_7b"))
     engine = ServingEngine(cfg, max_slots=8, seq_cap=128, seed=seed,
-                           backend=backend, prefix_cache=prefix_cache)
+                           backend=backend, prefix_cache=prefix_cache,
+                           spec_k=spec_k)
     rng = np.random.default_rng(seed)
     # --shared-prefix arm: every request opens with the same
     # ``shared_prefix``-token system prompt followed by a random tail, so
@@ -64,6 +72,62 @@ def run(duration=1800.0, qps=1.75, seed=0, with_controller=True,
     # with the cache disabled)
     common = (rng.integers(0, cfg.vocab_size, shared_prefix)
               if shared_prefix else None)
+    # --spec arm, repetitive/templated trace: requests draw from
+    # ``templated`` distinct prompt templates.  The first completion of a
+    # template is cached (the serving frontend's response cache); later
+    # requests of the same template carry it as ``draft_hints``, so the
+    # n-gram drafter replays the expected completion and the model merely
+    # VERIFIES it in the fused ragged step — the templated-traffic regime
+    # (forms, code stubs, canned agent turns) where prompt-lookup
+    # speculation earns its keep.  Greedy decode makes the replay exact,
+    # so stale-hint handling is exercised by the random trace instead.
+    templates = (rng.integers(0, cfg.vocab_size, (templated, 64))
+                 if templated else None)
+    completions: dict = {}   # template id -> completion (primed off-clock)
+
+    # ``denoise``: replace each fused step's measured wall-clock with the
+    # running MINIMUM observed for its (rows, width, logit-rows) bucket —
+    # the timeit-style estimate of an AOT-compiled executable's true cost.
+    # A shared/noisy host's scheduling hiccups land in the top percentiles
+    # of raw per-step timings, which is exactly where an ITL p99 A/B
+    # reads, so without this the comparison measures the host, not the
+    # serving stack.  Both arms of an A/B get the identical treatment;
+    # step cost still tracks real batch shape (more verify rows = the
+    # bucket genuinely costs more).  Pass a dict to SHARE the cost table
+    # across runs — shared mode freezes each bucket at its FIRST
+    # measurement (``setdefault``) instead of a running min: a monotone
+    # min would keep improving across arms, quietly handing later arms
+    # cheaper steps, whereas frozen first-sight costs make arms with
+    # identical step-shape traces replay bit-identical virtual time.
+    if (denoise or isinstance(denoise, dict)) and backend == "paged":
+        rt = engine.runtime
+        orig_run_mixed = rt._run_mixed
+        shared = isinstance(denoise, dict)
+        bucket_cost = denoise if shared else {}
+
+        def _denoised(tokens, positions, n_rows, bts, last_rows):
+            logits, dt = orig_run_mixed(tokens, positions, n_rows, bts,
+                                        last_rows)
+            key = (tokens.shape[0], bts.shape[1], last_rows.shape[0])
+            if shared:
+                if key not in bucket_cost:
+                    # freeze the bucket at the min of three back-to-back
+                    # executions: one unlucky first measurement would
+                    # otherwise replay through every later step of this
+                    # shape.  Re-execution is safe — the step scatters
+                    # the same K/V rows to the same page slots, so the
+                    # extra calls are idempotent
+                    for _ in range(2):
+                        _, dt2 = orig_run_mixed(tokens, positions, n_rows,
+                                                bts, last_rows)
+                        dt = min(dt, dt2)
+                    bucket_cost[key] = dt
+                dt = bucket_cost[key]
+            else:
+                dt = bucket_cost[key] = min(bucket_cost.get(key, dt), dt)
+            return logits, dt
+
+        rt._run_mixed = _denoised
 
     def make_prompt(prompt_len):
         if common is None:
@@ -96,6 +160,7 @@ def run(duration=1800.0, qps=1.75, seed=0, with_controller=True,
     req_id = 0
     completed = 0
     shed = 0
+    tpots = []              # per-request decode cadence (ITL/TPOT family)
     # warm every jit shape (3 prompt buckets + the batched decode) so
     # compile time never leaks into measured compute
     for j, pl_ in enumerate((32, 64, 96)):
@@ -103,6 +168,19 @@ def run(duration=1800.0, qps=1.75, seed=0, with_controller=True,
                               max_new_tokens=2, arrival=0.0))
     while engine.has_work():
         engine.finalize_step(engine.step(), 0.0)
+    if templates is not None:
+        # prime each template's completion off-clock (the steady-state
+        # templated regime: the response cache is warm before measured
+        # traffic arrives) — this also warms the verify-row jit buckets
+        for tid in range(len(templates)):
+            r = Request(req_id=-100 - tid, tenant="T1",
+                        prompt_len=templates.shape[1],
+                        max_new_tokens=max_new, arrival=0.0,
+                        prompt_tokens=templates[tid].copy())
+            engine.submit(r)
+            while engine.has_work():
+                engine.finalize_step(engine.step(), 0.0)
+            completions[tid] = list(r.output_tokens)
     if auto_calibrate:
         # measure warm PER-TOKEN prefill compute on THIS host and target
         # ~120 ms virtual prefill for the 64-token median prompt.  The
@@ -122,6 +200,12 @@ def run(duration=1800.0, qps=1.75, seed=0, with_controller=True,
                 samples.append(rep.compute_s / rep.prefill_tokens)
             engine.finalize_step(rep, 0.0)
         compute_scale_7b = (0.120 / 64.0) / float(np.mean(samples))
+    # warmup, template priming and calibration all drained through the
+    # same engine: drop their fabricated t=0 samples so the reported
+    # metrics (ITL percentiles, accept rate, drafted/accepted totals)
+    # read ONLY the measured trace
+    from repro.serving.metrics import TenantMetrics
+    engine.metrics = TenantMetrics()
 
     def t2_active_at(t):
         return any(w.tenant == "T2" and w.start <= t < w.end
@@ -135,12 +219,24 @@ def run(duration=1800.0, qps=1.75, seed=0, with_controller=True,
             if next_arrival < actuator.pause_until:
                 shed += 1
             else:
-                pl_ = int(rng.choice([32, 64, 96]))
-                if common is not None:
-                    pl_ = max(pl_, shared_prefix + 32)
-                r = Request(req_id=req_id, tenant="T1", prompt_len=pl_,
-                            max_new_tokens=4, arrival=next_arrival,
-                            slo_ms=200.0, prompt_tokens=make_prompt(pl_))
+                if templates is not None:
+                    tid = int(rng.integers(0, len(templates)))
+                    hints = completions.get(tid)
+                    r = Request(req_id=req_id, tenant="T1",
+                                prompt_len=templates.shape[1],
+                                max_new_tokens=max_new,
+                                arrival=next_arrival, slo_ms=200.0,
+                                prompt_tokens=templates[tid].copy(),
+                                draft_hints=(np.asarray(hints)
+                                             if hints else None))
+                else:
+                    pl_ = int(rng.choice([32, 64, 96]))
+                    if common is not None:
+                        pl_ = max(pl_, shared_prefix + 32)
+                    r = Request(req_id=req_id, tenant="T1", prompt_len=pl_,
+                                max_new_tokens=max_new,
+                                arrival=next_arrival, slo_ms=200.0,
+                                prompt_tokens=make_prompt(pl_))
                 engine.submit(r)
                 req_id += 1
             next_arrival += rng.exponential(1.0 / qps)
@@ -185,6 +281,9 @@ def run(duration=1800.0, qps=1.75, seed=0, with_controller=True,
         for pr in rep.prefilled:
             ttft_window.observe(now[0], pr.ttft, slo=0.200)
         completed += len(rep.completed)
+        for cr in rep.completed:
+            if cr.tpot is not None:
+                tpots.append(cr.tpot)
 
     lats = np.array([v for _, v in ttft_window.samples])
     out = {
@@ -192,12 +291,27 @@ def run(duration=1800.0, qps=1.75, seed=0, with_controller=True,
         "ttft_p99_ms": float(np.quantile(lats, 0.99) * 1e3) if lats.size else 0.0,
         "ttft_p50_ms": float(np.quantile(lats, 0.50) * 1e3) if lats.size else 0.0,
         "itl_p99_ms": engine.metrics.itl.quantile(0.99) * 1e3,
+        "itl_p50_ms": engine.metrics.itl.quantile(0.50) * 1e3,
+        # per-request decode cadence (mean seconds/token after the first —
+        # the TPOT side of the ITL/TPOT family): a speculative burst's
+        # tokens all land at one step's end, so burst size divides the
+        # cadence even though the emission-GAP percentiles above only see
+        # the burst head
+        "tpot_p99_ms": (float(np.quantile(tpots, 0.99)) * 1e3
+                        if tpots else 0.0),
+        "tpot_p50_ms": (float(np.quantile(tpots, 0.50)) * 1e3
+                        if tpots else 0.0),
         "miss_rate": float(np.mean(lats > 0.200)) if lats.size else 0.0,
         "throughput_rps": completed / duration,
         "shed": shed,
         "kv_reserved_frac": engine.metrics.kv_utilisation(),
         "kv_used_frac": engine.metrics.kv_live_utilisation(),
         "prefix_hit_rate": engine.metrics.prefix_hit_rate(),
+        "spec_k": spec_k,
+        "accept_rate": engine.metrics.accept_rate(),
+        "drafted_tokens": engine.metrics.drafted_tokens_total,
+        "accepted_tokens": engine.metrics.accepted_tokens_total,
+        "compute_scale_7b": compute_scale_7b,
         "actions": controller.audit.counts() if controller else {},
     }
     return out
@@ -236,6 +350,115 @@ def run_shared_prefix(duration=600.0, qps=1.75, prefix_len=64, seed=0,
     return out
 
 
+def run_spec(duration=600.0, qps=1.0, seed=0, spec_k=4, max_new=32,
+             templates=4, verbose=True):
+    """Speculative-decode A/B on the paged backend at the calibrated
+    operating point (auto-calibrated per-token compute, no controller —
+    the comparison isolates the serving-layer effect), decode-heavy
+    traffic (``max_new`` tokens per request) in two traces:
+
+    * **repetitive/templated**: requests draw from a few fixed prompt
+      templates; each template's completion is primed off-clock and later
+      requests carry it as ``draft_hints`` (response replay), so the
+      n-gram drafter proposes and the fused ragged step verifies
+      multi-token bursts.  The structural win shows in the decode
+      CADENCE: per-request TPOT p99 (the ITL/TPOT family's per-token
+      side) drops by the burst factor, and the emission-gap ITL p50
+      collapses to ~0 (burst tails land together).  The emission-gap p99
+      only sees burst heads, so it tracks per-step cost and moves with
+      concurrency, not with k.
+    * **random**: unique random prompts, no hints — the drafter almost
+      never matches and the adaptive-k EMA keeps lanes at q_len=1, so
+      spec-on must track spec-off within noise (the <=5% guardrail).
+
+    Per-step costs are denoised to per-bucket minima (see ``run``):
+    without that, both arms' p99s read the host's scheduling hiccups,
+    not the serving stack.
+    """
+    # calibrate ONCE and share the scale AND the per-bucket min table:
+    # deriving either per arm would fold each run's early-measurement
+    # noise into every latency of that arm, and an A/B at the p99 reads
+    # exactly that noise (with shared minima, arms whose step-shape
+    # traces are identical — e.g. random spec vs no_spec once adaptive k
+    # has drafts at zero — replay identical virtual costs)
+    shared_min: dict = {}
+    cal = run(duration=5.0, qps=qps, seed=seed, with_controller=False,
+              auto_calibrate=True, backend="paged", max_new=max_new,
+              denoise=shared_min, verbose=False)
+    scale = cal["compute_scale_7b"]
+    arms = {}
+    for trace, ntempl in (("repetitive", templates), ("random", 0)):
+        for label, k in (("spec", spec_k), ("no_spec", 0)):
+            arms[(trace, label)] = run(
+                duration=duration, qps=qps, seed=seed,
+                with_controller=False, compute_scale_7b=scale,
+                backend="paged", spec_k=k, templated=ntempl,
+                max_new=max_new, denoise=shared_min)
+    rep_s, rep_n = arms[("repetitive", "spec")], \
+        arms[("repetitive", "no_spec")]
+    rnd_s, rnd_n = arms[("random", "spec")], arms[("random", "no_spec")]
+
+    def ratio(a, b):
+        return a / max(b, 1e-9)
+
+    out = {
+        "workload": {"duration_s": duration, "qps": qps, "spec_k": spec_k,
+                     "max_new": max_new, "templates": templates},
+        "repetitive": {"spec": rep_s, "no_spec": rep_n},
+        "random": {"spec": rnd_s, "no_spec": rnd_n},
+        "accept_rate": rep_s["accept_rate"],
+        # the ITL/TPOT family, both sides: per-request decode-cadence p99
+        # (TPOT — a speculative burst's size divides it: the structural
+        # per-token win) and emission-gap percentiles (a burst's tokens
+        # land together, so the gap p99 only sees burst heads and mostly
+        # tracks step cost; the p50 collapses to ~0 as bursts dominate)
+        "tpot_p99_improvement": 1.0 - ratio(rep_s["tpot_p99_ms"],
+                                            rep_n["tpot_p99_ms"]),
+        "itl_p99_improvement": 1.0 - ratio(rep_s["itl_p99_ms"],
+                                           rep_n["itl_p99_ms"]),
+        "itl_p50_improvement": 1.0 - ratio(rep_s["itl_p50_ms"],
+                                           rep_n["itl_p50_ms"]),
+        "throughput_ratio": ratio(rep_s["throughput_rps"],
+                                  rep_n["throughput_rps"]),
+        # adaptive-k guardrails on the non-repetitive trace
+        "random_tpot_p99_regression": ratio(rnd_s["tpot_p99_ms"],
+                                            rnd_n["tpot_p99_ms"]) - 1.0,
+        "random_itl_p99_regression": ratio(rnd_s["itl_p99_ms"],
+                                           rnd_n["itl_p99_ms"]) - 1.0,
+        "random_throughput_ratio": ratio(rnd_s["throughput_rps"],
+                                         rnd_n["throughput_rps"]),
+        "random_accept_rate": rnd_s["accept_rate"],
+    }
+    if verbose:
+        print("== speculative decode A/B (paged backend, "
+              f"k={spec_k}, {max_new} new tokens/req) ==")
+        print(f"  repetitive no-spec: TPOT p99={rep_n['tpot_p99_ms']:6.1f}ms"
+              f" ITL p99={rep_n['itl_p99_ms']:6.1f}ms "
+              f"p50={rep_n['itl_p50_ms']:5.1f}ms "
+              f"thr={rep_n['throughput_rps']:.3f}rps")
+        print(f"  repetitive spec   : TPOT p99={rep_s['tpot_p99_ms']:6.1f}ms"
+              f" ITL p99={rep_s['itl_p99_ms']:6.1f}ms "
+              f"p50={rep_s['itl_p50_ms']:5.1f}ms "
+              f"thr={rep_s['throughput_rps']:.3f}rps "
+              f"accept={rep_s['accept_rate']*100:.1f}%")
+        print(f"  -> decode cadence (TPOT) p99 "
+              f"{out['tpot_p99_improvement']*100:+.1f}%  emission-gap ITL "
+              f"p99 {out['itl_p99_improvement']*100:+.1f}% / "
+              f"p50 {out['itl_p50_improvement']*100:+.1f}%  "
+              f"throughput x{out['throughput_ratio']:.3f}")
+        print(f"  random     no-spec: TPOT p99={rnd_n['tpot_p99_ms']:6.1f}ms"
+              f" ITL p99={rnd_n['itl_p99_ms']:6.1f}ms "
+              f"thr={rnd_n['throughput_rps']:.3f}rps")
+        print(f"  random     spec   : TPOT p99={rnd_s['tpot_p99_ms']:6.1f}ms"
+              f" ITL p99={rnd_s['itl_p99_ms']:6.1f}ms "
+              f"thr={rnd_s['throughput_rps']:.3f}rps "
+              f"(TPOT regression "
+              f"{out['random_tpot_p99_regression']*100:+.1f}%; adaptive k "
+              f"keeps drafts at ~0 — {rnd_s['drafted_tokens']} drafted — "
+              f"so residual delta is worst-request measurement noise)")
+    return out
+
+
 def run_backend(backend="dense", verbose=True, seed=0, duration=1800.0):
     static = run(with_controller=False, seed=seed, backend=backend,
                  duration=duration)
@@ -264,10 +487,13 @@ def _maybe_dump(out, json_path):
     return out
 
 
-def main(verbose=True, backend="dense", shared_prefix=False,
+def main(verbose=True, backend="dense", shared_prefix=False, spec=False,
          duration=1800.0, json_path=None):
     if verbose:
         print("== LLM serving case study (vLLM-style, OLMo-2-7B) ==")
+    if spec:
+        return _maybe_dump(run_spec(duration=duration, verbose=verbose),
+                           json_path)
     if shared_prefix:
         return _maybe_dump(run_shared_prefix(duration=duration,
                                              verbose=verbose), json_path)
@@ -297,6 +523,11 @@ if __name__ == "__main__":
                     help="prefix-cache workload arm (paged backend): "
                          "shared-system-prompt traffic, cache on vs off, "
                          "reporting hit rate and TTFT/ITL p99 speedups")
+    ap.add_argument("--spec", action="store_true",
+                    help="speculative-decode A/B arm (paged backend): "
+                         "repetitive/templated vs random decode-heavy "
+                         "traces, spec on vs off, reporting accept rate "
+                         "plus ITL p99 and throughput deltas")
     ap.add_argument("--duration", type=float, default=1800.0,
                     help="virtual-time seconds per run (CI uses a short "
                          "duration)")
@@ -304,4 +535,4 @@ if __name__ == "__main__":
                     help="write the result dict to this JSON file")
     args = ap.parse_args()
     main(backend=args.backend, shared_prefix=args.shared_prefix,
-         duration=args.duration, json_path=args.json)
+         spec=args.spec, duration=args.duration, json_path=args.json)

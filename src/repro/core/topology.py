@@ -104,9 +104,40 @@ class ClusterTopology:
 def make_p4d_cluster(num_hosts: int = 2) -> ClusterTopology:
     """The paper's testbed: p4d.24xlarge x2 — 8xA100 per host, 4 PCIe root
     complexes (2 GPUs each), 2 NUMA domains."""
+    if num_hosts < 1:
+        raise ValueError(f"num_hosts must be >= 1, got {num_hosts}")
     return ClusterTopology(num_hosts=num_hosts, devices_per_host=8,
                            devices_per_root=2, numa_per_host=2,
                            slots_per_device=2, kind="gpu")
+
+
+def make_p4d_fleet(num_hosts: int = 4) -> ClusterTopology:
+    """The scaled fleet: the paper's p4d node type grown past the 2-host
+    testbed (first step of the ROADMAP's "scale the fleet" item — the E5
+    ``--hosts 4`` arm measures controller wall-clock per tick against this
+    topology)."""
+    return make_p4d_cluster(num_hosts)
+
+
+# Named catalog of the built-in testbeds (today exercised by the topology
+# test suite; e5 --hosts builds p4d fleets by host count via
+# make_p4d_fleet — a config-file/CLI name-based selector can resolve
+# through here when one grows a consumer).
+BUILTIN_TOPOLOGIES = {
+    "p4d-2host": lambda: make_p4d_cluster(2),     # the paper's testbed
+    "p4d-4host": lambda: make_p4d_fleet(4),       # scaled fleet variant
+    "tpu-v5e-pod": lambda: make_tpu_pod_hosts(1),
+}
+
+
+def builtin_topology(name: str) -> ClusterTopology:
+    """Instantiate a named built-in topology."""
+    try:
+        return BUILTIN_TOPOLOGIES[name]()
+    except KeyError:
+        raise ValueError(
+            f"unknown topology {name!r} (have "
+            f"{sorted(BUILTIN_TOPOLOGIES)})") from None
 
 
 def make_tpu_pod_hosts(num_pods: int = 1, chips_per_host: int = 4,

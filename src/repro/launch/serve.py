@@ -8,7 +8,10 @@ first-class integration), generalized to N latency tenants x R replicas.
 ``--backend paged`` swaps every tenant-replica engine onto the
 block-table paged runtime (chunked prefill + SLO-aware preemption over a
 shared page pool) instead of the dense slot cache; the rest of the
-harness — fabric, controller, admission — is unchanged.
+harness — fabric, controller, admission — is unchanged.  ``--spec-k K``
+additionally enables speculative multi-token decode lanes (n-gram
+prompt-lookup drafts verified in the fused ragged step, adaptive per-lane
+depth).
 
 Runs one continuous-batching engine per tenant-replica on the reduced
 config, all sharing a FabricState (the PS fabric model injects PCIe-class
@@ -32,7 +35,7 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
           num_tenants: int = 1, replicas: int = 1, interfere: bool = False,
           with_controller: bool = True, seed: int = 0, verbose: bool = True,
           admit: int = 0, backend: str = "dense", kv_dtype: str = "auto",
-          prefix_cache: bool = True):
+          prefix_cache: bool = True, spec_k: int = 0):
     """Virtual-time multi-tenant serving run; returns per-tenant stats."""
     import numpy as np
     from repro.configs.base import get_config, reduced
@@ -55,7 +58,10 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
     cfg = reduced(get_config(arch))
     names = ["T1"] if num_tenants == 1 else [f"L{i}"
                                              for i in range(num_tenants)]
-    eng_kw = dict(max_slots=slots, seq_cap=128, backend=backend)
+    # spec_k is passed unconditionally: requesting speculation on the
+    # dense backend must hit the engine's ValueError, not silently no-op
+    eng_kw = dict(max_slots=slots, seq_cap=128, backend=backend,
+                  spec_k=spec_k)
     if backend == "paged":
         eng_kw.update(kv_dtype=kv_dtype, prefix_cache=prefix_cache)
     engines = {name: [ServingEngine(cfg, seed=seed + 17 * i + j, **eng_kw)
@@ -348,6 +354,10 @@ def main():
     ap.add_argument("--no-prefix-cache", action="store_true",
                     help="disable cross-request prefix-page sharing "
                          "(paged backend)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="paged backend: max speculative draft tokens per "
+                         "decode lane (n-gram prompt-lookup drafter, "
+                         "verified in the fused ragged step; 0 = off)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     serve(arch=args.arch, requests=args.requests, qps=args.qps,
@@ -356,7 +366,7 @@ def main():
           replicas=args.replicas, interfere=args.interfere,
           with_controller=not args.no_controller, seed=args.seed,
           admit=args.admit, backend=args.backend, kv_dtype=args.kv_dtype,
-          prefix_cache=not args.no_prefix_cache)
+          prefix_cache=not args.no_prefix_cache, spec_k=args.spec_k)
 
 
 if __name__ == "__main__":

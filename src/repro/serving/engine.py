@@ -70,6 +70,11 @@ class StepReport:
     # paged backend: prompt tokens served from the shared prefix cache
     # while planning this step (prefill compute skipped entirely)
     prefix_hit_tokens: int = 0
+    # speculative decode lanes (paged backend, spec_k > 0): draft rows
+    # verified this step, and how many of them the model accepted —
+    # decode_tokens already counts every committed token (base + accepted)
+    drafted_tokens: int = 0
+    accepted_tokens: int = 0
 
 
 class ServingEngine:
@@ -79,13 +84,18 @@ class ServingEngine:
                  pool_pages: Optional[int] = None,
                  chunk_tokens: Optional[int] = None,
                  step_tokens: Optional[int] = None, attn_impl: str = "auto",
-                 kv_dtype: str = "auto", prefix_cache: bool = True):
+                 kv_dtype: str = "auto", prefix_cache: bool = True,
+                 spec_k: int = 0, spec_ngram: int = 3):
         if backend not in ("dense", "paged"):
             raise ValueError(f"unknown backend {backend!r}")
         if kv_dtype != "auto" and backend == "dense":
             raise ValueError(
                 "kv_dtype applies to the paged backend's page pools; the "
                 "dense slot cache quantizes via REPRO_KV_INT8=1")
+        if spec_k and backend == "dense":
+            raise ValueError(
+                "speculative decode lanes (spec_k) need the paged "
+                "runtime's ragged verify step; use backend='paged'")
         self.cfg = cfg
         self.model = Model(cfg)
         self.policy = policy
@@ -105,7 +115,8 @@ class ServingEngine:
                 page_size=page_size, pool_pages=pool_pages,
                 chunk_tokens=chunk_tokens, step_tokens=step_tokens,
                 policy=policy, attn_impl=attn_impl, kv_dtype=kv_dtype,
-                prefix_cache=prefix_cache, seed=seed)
+                prefix_cache=prefix_cache, spec_k=spec_k,
+                spec_ngram=spec_ngram, seed=seed)
             self.kv = self.runtime.kv
             # the scheduler's waiting deque doubles as the engine queue
             # (same object for the lifetime of the engine, so load-based
@@ -169,6 +180,8 @@ class ServingEngine:
                                 self.kv.num_pages)
         self.metrics.observe_prefill(report.prefill_tokens,
                                      report.prefix_hit_tokens)
+        self.metrics.observe_spec(report.drafted_tokens,
+                                  report.accepted_tokens)
         return report
 
     def _step_backend(self) -> StepReport:

@@ -151,14 +151,52 @@ class PagedKVCache:
                 f"double-release would re-free shared pages and corrupt "
                 f"the free list")
         for page in entry.pages:
-            self.ref[page] -= 1
-            if self.ref[page] > 0:
-                continue
-            del self.ref[page]
-            if self.enable_prefix_cache and page in self.page_key:
-                self.cached[page] = None     # appends at the LRU tail
-            else:
-                self.free.append(page)
+            self._drop_page_ref(page)
+
+    def _drop_page_ref(self, page: int) -> None:
+        """One sequence stops referencing ``page``: decrement, and on
+        refcount zero return it to the free list (or park an indexed
+        prefix page on the cached LRU, KV intact)."""
+        self.ref[page] -= 1
+        if self.ref[page] > 0:
+            return
+        del self.ref[page]
+        if self.enable_prefix_cache and page in self.page_key:
+            self.cached[page] = None         # appends at the LRU tail
+        else:
+            self.free.append(page)
+
+    def truncate(self, seq_id: int, new_len: int) -> None:
+        """Roll a sequence back to ``new_len`` tokens, freeing the pages
+        past ``pages_needed(new_len)`` (page-granular: a partially-covered
+        final page is kept).  This is the speculative-decode rollback
+        primitive — rejected draft tokens over-extended the sequence and
+        their pages must return to the pool without reaching into the
+        allocator's internals.
+
+        Truncating into a *shared* page (refcount > 1) raises ValueError
+        before any state changes: a shared page's KV is live for its other
+        sharers, so rolling it back would corrupt them.  In practice
+        shared pages cover the page-aligned prompt prefix, which is always
+        below any decode rollback point; hitting this error means the
+        caller computed a bogus ``new_len``."""
+        if new_len < 0:
+            raise ValueError(f"truncate to negative length {new_len}")
+        entry = self.tables[seq_id]
+        keep = self.pages_needed(new_len)
+        drop = entry.pages[keep:]
+        for page in drop:
+            if self.ref.get(page, 0) > 1:
+                raise ValueError(
+                    f"truncate(seq {seq_id}, {new_len}) would roll back "
+                    f"shared page {page} (refcount {self.ref[page]}) — "
+                    f"shared pages are live for their other sharers and "
+                    f"must never be rolled back")
+        for page in drop:
+            self._drop_page_ref(page)
+        del entry.pages[keep:]
+        entry.length = min(entry.length, new_len)
+        entry.shared_tokens = min(entry.shared_tokens, new_len)
 
     # -- prefix sharing -----------------------------------------------------
     def _chain_keys(self, tokens, n_pages: int):

@@ -126,6 +126,11 @@ class TenantMetrics:
     # arm reports
     prefill_tokens_total: int = 0
     prefix_hit_tokens_total: int = 0
+    # speculative decode lanes (paged backend): draft rows verified vs
+    # accepted by the model — their ratio is the accept rate the --spec
+    # benchmark arm reports, and the adaptive-k policy's global analogue
+    drafted_tokens_total: int = 0
+    accepted_tokens_total: int = 0
 
     def observe_tokens(self, now: float, n: int) -> None:
         self.throughput_window.append((now, n))
@@ -133,6 +138,16 @@ class TenantMetrics:
     def observe_prefill(self, computed: int, prefix_hits: int) -> None:
         self.prefill_tokens_total += computed
         self.prefix_hit_tokens_total += prefix_hits
+
+    def observe_spec(self, drafted: int, accepted: int) -> None:
+        self.drafted_tokens_total += drafted
+        self.accepted_tokens_total += accepted
+
+    def accept_rate(self) -> float:
+        """Fraction of speculative draft tokens the model accepted."""
+        if not self.drafted_tokens_total:
+            return 0.0
+        return self.accepted_tokens_total / self.drafted_tokens_total
 
     def prefix_hit_rate(self) -> float:
         """Fraction of prompt tokens served from the prefix cache."""

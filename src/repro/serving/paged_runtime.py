@@ -37,6 +37,19 @@ Prefix-cache sharing (``prefix_cache=True``) lives in ``PagedKVCache``:
 prompts sharing a page-aligned prefix map it to existing pages and skip
 that prefill compute entirely — see ``serving/kvcache.py``.
 
+Speculative multi-token decode lanes (``spec_k > 0``): the scheduler's
+n-gram/prompt-lookup drafter attaches up to k proposed tokens to a decode
+lane (see ``serving/sched.py``) and the lane rides the SAME fused ragged
+step with q_len = 1+k rows — the base feedback token plus the draft, each
+row at its own position, causality inside the page walk making row j see
+rows < j's freshly-scattered K/V.  Every decode row's logits come back;
+the longest draft prefix agreeing with the model's own argmax chain plus
+the first correction is committed (token-identical to sequential greedy
+decode), and the rejected tail's over-extended pages are rolled back via
+``PagedKVCache.truncate`` — the step's fixed cost (plan, page walk,
+dispatch) is amortised over up to k+1 tokens, which is what lifts the ITL
+floor left after continuous batching.
+
 Only pure-GQA decoder stacks are supported (no MLA / SSM / RWKV mixers, no
 sliding windows, no cross-attention): that covers the paper's serving case
 study (OLMo-2, StableLM); everything else keeps the dense backend.
@@ -103,6 +116,7 @@ class PagedRuntime:
                  step_tokens: Optional[int] = None,
                  policy: ShardPolicy = NO_POLICY, attn_impl: str = "auto",
                  kv_dtype: str = "auto", prefix_cache: bool = True,
+                 spec_k: int = 0, spec_ngram: int = 3,
                  seed: int = 0):
         reason = paged_unsupported_reason(cfg)
         if reason is not None:
@@ -112,6 +126,8 @@ class PagedRuntime:
         if kv_dtype not in ("auto", "int8"):
             raise ValueError(f"unknown kv_dtype {kv_dtype!r} "
                              f"(expected 'auto' or 'int8')")
+        if spec_k < 0:
+            raise ValueError(f"spec_k must be >= 0, got {spec_k}")
         self.cfg = cfg
         self.params = params
         self.policy = policy
@@ -125,12 +141,14 @@ class PagedRuntime:
         self.chunk = max(page_size, (chunk // page_size) * page_size)
         self.attn_impl = attn_impl
         self.kv_quant = kv_dtype == "int8"
+        self.spec_k = spec_k
         self.kv = PagedKVCache(self.pool_pages, page_size,
                                enable_prefix_cache=prefix_cache)
         self.sched = PagedScheduler(
             self.kv, SchedConfig(chunk_tokens=self.chunk,
                                  max_active=max_slots,
-                                 step_tokens=step_tokens))
+                                 step_tokens=step_tokens,
+                                 spec_k=spec_k, spec_ngram=spec_ngram))
         self.pools = self._init_pools()
         # donate the pools so the per-step KV scatter updates in place
         # (without aliasing every step would copy the whole page pool,
@@ -325,10 +343,10 @@ class PagedRuntime:
 
     # ------------------------------------------------------------ fused step
     def _run_mixed(self, tokens, positions, n_rows, bts, last_rows):
-        """Execute the fused forward for this (rows, width) bucket,
-        AOT-compiling the bucket on first sight so compile time never
-        enters the measured compute.  Returns (logits, compute_s)."""
-        key = (tokens.shape[0], bts.shape[1])
+        """Execute the fused forward for this (rows, width, logit-rows)
+        bucket, AOT-compiling the bucket on first sight so compile time
+        never enters the measured compute.  Returns (logits, compute_s)."""
+        key = (tokens.shape[0], bts.shape[1], last_rows.shape[0])
         fn = self._mixed_exec.get(key)
         if fn is None:
             fn = self._mixed_fn.lower(
@@ -352,34 +370,46 @@ class PagedRuntime:
         report.kind = ("mixed" if decodes and prefills
                        else "decode" if decodes else "prefill")
 
-        # pack the step's real tokens back to back: one row per decode
-        # lane, ``clen`` rows per prefill chunk — cost tracks live tokens,
-        # and the row/width buckets keep the jit shape set bounded
-        n_rows = len(decodes) + sum(c for _, _, c in prefills)
+        # pack the step's real tokens back to back: 1+len(draft) rows per
+        # decode lane (the base feedback token plus its speculative
+        # verify rows), ``clen`` rows per prefill chunk — cost tracks
+        # live tokens, and the row/width/logit buckets keep the jit shape
+        # set bounded
+        n_rows = sum(1 + len(s.draft) for s in decodes) \
+            + sum(c for _, _, c in prefills)
+        # every decode row needs its logits for verification; prefill
+        # chunks only need their final row's
+        n_logits = sum(1 + len(s.draft) for s in decodes) + len(prefills)
         t = _bucket_rows(n_rows)
         tokens = np.zeros(t, np.int32)
         positions = np.zeros(t, np.int32)
-        last_rows = np.zeros(self.max_slots, np.int32)
+        last_rows = np.zeros(_bucket_rows(n_logits), np.int32)
         lanes: List[tuple] = []
         row_of: List[tuple] = []          # (row_start, n) per lane
         row = 0
+        li = 0                            # next logit-row slot
         max_pages = 1
         for s in decodes:
-            lanes.append(("d", s))
+            q = 1 + len(s.draft)          # verify q_len for this lane
+            lanes.append(("d", s, li, q))
             pos = s.req.prompt_len + s.req.generated - 1
             tokens[row] = s.last_token
-            positions[row] = pos
-            last_rows[len(lanes) - 1] = row
-            row_of.append((row, 1))
-            row += 1
-            max_pages = max(max_pages, self.kv.pages_needed(pos + 1))
+            if s.draft:
+                tokens[row + 1:row + q] = np.asarray(s.draft, np.int32)
+            positions[row:row + q] = pos + np.arange(q, dtype=np.int32)
+            last_rows[li:li + q] = row + np.arange(q, dtype=np.int32)
+            li += q
+            row_of.append((row, q))
+            row += q
+            max_pages = max(max_pages, self.kv.pages_needed(pos + q))
         for s, start, clen in prefills:
-            lanes.append(("p", s, start, clen))
+            lanes.append(("p", s, start, clen, li))
             tokens[row:row + clen] = np.asarray(
                 s.req.prompt_tokens, np.int32)[start:start + clen]
             positions[row:row + clen] = start + np.arange(clen,
                                                           dtype=np.int32)
-            last_rows[len(lanes) - 1] = row + clen - 1
+            last_rows[li] = row + clen - 1
+            li += 1
             row_of.append((row, clen))
             row += clen
             max_pages = max(max_pages, self.kv.pages_needed(start + clen))
@@ -393,27 +423,50 @@ class PagedRuntime:
             jnp.asarray(bts), jnp.asarray(last_rows))
         next_tokens = np.asarray(jnp.argmax(logits, axis=-1))
 
-        for i, lane in enumerate(lanes):
+        for lane in lanes:
             if lane[0] == "d":
-                s = lane[1]
-                self.sched.commit_decode(s)
-                tok = int(next_tokens[i])
-                s.last_token = tok
-                s.req.generated += 1
-                s.req.output_tokens.append(tok)
-                report.decode_tokens += 1
-                report.tokens += 1
-                report.decoded.append(s.req)
+                _, s, li, q = lane
+                d = s.draft
+                # greedy verify: row j's argmax is the model's token for
+                # position pos+j+1 GIVEN the draft prefix d[:j]; the
+                # longest draft prefix matching the model's own argmax
+                # chain is exactly what sequential decode would have
+                # produced, so committing it (plus the first
+                # disagreement's correction — the "bonus" token) is
+                # token-identical to non-speculative decode
+                g = [int(next_tokens[li + j]) for j in range(q)]
+                a = 0
+                while a < len(d) and d[a] == g[a]:
+                    a += 1
+                m = min(a + 1, s.req.max_new_tokens - s.req.generated)
+                committed = g[:m]
+                if d:
+                    self.sched.commit_verified(s, m, drafted=len(d),
+                                               accepted=m - 1)
+                else:
+                    self.sched.commit_decode(s)
+                s.last_token = committed[-1]
+                s.req.generated += m
+                s.req.output_tokens.extend(committed)
+                report.decode_tokens += m
+                report.tokens += m
+                report.drafted_tokens += len(d)
+                report.accepted_tokens += m - 1
+                # one decoded entry per committed token: finalize_step
+                # stamps them all with this step's end time, so a burst's
+                # 2nd..mth tokens record ~zero inter-token latency (the
+                # whole point of amortising the per-step fixed cost)
+                report.decoded.extend([s.req] * m)
                 if s.req.generated >= s.req.max_new_tokens:
                     self.sched.complete(s)
                     report.completed.append(s.req)
             else:
-                _, s, start, clen = lane
+                _, s, start, clen, li = lane
                 self.sched.finish_chunk(s, clen)
                 report.prefill_tokens += clen
                 report.tokens += clen
                 if s.prefilled >= s.req.prompt_len:   # final chunk: 1st token
-                    first = int(next_tokens[i])
+                    first = int(next_tokens[li])
                     s.last_token = first
                     s.req.generated = 1
                     s.req.output_tokens.append(first)

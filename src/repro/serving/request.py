@@ -18,6 +18,13 @@ class Request:
     # lower-priority sequences are evicted first when the page pool is
     # exhausted (ties broken by deadline = arrival + slo)
     priority: float = 1.0
+    # optional speculative-decode hint corpus ([T] int tokens): text the
+    # frontend believes likely to continue this response (e.g. the
+    # completion previously observed for the same templated prompt).
+    # Hints are only ever *searched* by the n-gram drafter and *verified*
+    # by the model — a stale hint costs rejected draft rows, never a
+    # wrong output token
+    draft_hints: Optional[object] = None
 
     # --- runtime state ---
     slot: int = -1

@@ -25,6 +25,24 @@ Three policies live here:
   TTFT for shared-prefix workloads drops from O(prompt) to O(tail).  Fully
   prefilled pages are published back (``commit_prefix``) as chunks finish.
 
+* **Speculative multi-token decode lanes** (``SchedConfig.spec_k > 0``):
+  a model-free **n-gram / prompt-lookup drafter** proposes up to ``k``
+  continuation tokens per decode lane by matching the lane's recent token
+  suffix against its own reference corpus (prompt + optional
+  ``Request.draft_hints`` + generated output).  The planner attaches the
+  draft AFTER decode lanes and prefill chunks have claimed their budget —
+  drafts only consume *leftover* step-token budget, so speculation can
+  never starve a prefill chunk or another lane, and under saturation it
+  degrades to plain one-token decode automatically.  Draft page
+  reservations never preempt anyone: on pool pressure the draft is simply
+  dropped.  The runtime verifies the drafted rows in the SAME fused
+  ragged step (the kernel already takes q_len>1 decode rows) and commits
+  the longest model-agreeing prefix; a per-lane acceptance-rate EMA feeds
+  the next step's ``k`` (EMA -> 0 drives q_len back to 1, i.e.
+  speculation off, guaranteeing ITL is never structurally worse than
+  non-speculative decode), with a periodic 1-token probe so a lane can
+  rediscover predictability after a distribution shift.
+
 * **SLO-aware preemption** (serving mixed loads with SLO guarantees):
   page-pool exhaustion evicts the least-SLO-urgent page holder — lowest
   ``Request.priority`` first, then the furthest deadline
@@ -43,7 +61,9 @@ from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, List, Optional, Tuple
+from typing import Deque, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.serving.kvcache import PagedKVCache
 from repro.serving.request import Request
@@ -59,6 +79,62 @@ class SchedConfig:
     # None = max_active + chunk_tokens, i.e. a full decode batch never
     # forfeits prefill progress and vice versa
     step_tokens: Optional[int] = None
+    # --- speculative multi-token decode lanes ---
+    spec_k: int = 0               # max draft tokens per lane (0 = off)
+    spec_ngram: int = 3           # suffix length the drafter matches on
+                                  # (3 = the prompt-lookup literature
+                                  # default; short enough to fire on
+                                  # templates, long enough that random
+                                  # vocab collisions are negligible)
+    spec_ema_alpha: float = 0.3   # per-lane acceptance-rate EMA smoothing
+    # when the EMA has driven a lane's k to 0, re-probe with a 1-token
+    # draft every this-many verify opportunities (distribution shift)
+    spec_probe_every: int = 32
+
+
+class NgramDrafter:
+    """Model-free n-gram / prompt-lookup drafter.
+
+    The lane's *reference corpus* is ``prompt_tokens ++ draft_hints ++
+    output_tokens`` — its own history, optionally extended with hint
+    tokens the frontend believes likely to continue the response (e.g.
+    the completion previously observed for the same templated prompt;
+    the hints are never trusted, only *verified* by the model, so a
+    stale hint costs a rejected draft, never a wrong token).  Drafting
+    matches the most recent ``ngram`` generated tokens against the
+    corpus and proposes the tokens that followed the most recent prior
+    occurrence.  Pure host-side numpy — no model, no device."""
+
+    def __init__(self, ngram: int = 3):
+        if ngram < 1:
+            raise ValueError(f"ngram must be >= 1, got {ngram}")
+        self.ngram = ngram
+
+    def draft(self, corpus: Sequence[int], pattern: Sequence[int],
+              k: int) -> List[int]:
+        """Up to ``k`` proposed continuations: find the most recent
+        occurrence of ``pattern`` (the lane's newest ``ngram`` tokens)
+        inside ``corpus`` that has at least one token after it, and
+        propose what followed.  Empty when no such occurrence exists —
+        a miss costs nothing (no verify rows are added)."""
+        n = self.ngram
+        c = np.asarray(corpus, dtype=np.int64)
+        p = np.asarray(pattern, dtype=np.int64)
+        if k <= 0 or p.size != n or c.size < n + 1:
+            return []
+        # vectorized window match over shifted views; a window whose
+        # continuation is empty (the corpus tail is usually the pattern
+        # itself) is skipped below
+        t = c.size - n + 1                  # window starts: [0, t)
+        hit = np.ones(t, dtype=bool)
+        for j in range(n):
+            hit &= c[j:j + t] == p[j]
+        starts = np.flatnonzero(hit)
+        for s in starts[::-1]:              # most recent occurrence first
+            cont = c[s + n:s + n + k]
+            if cont.size:
+                return [int(x) for x in cont]
+        return []
 
 
 @dataclass(eq=False)          # identity semantics for in/remove on lists
@@ -69,26 +145,71 @@ class SeqState:
     preemptions: int = 0
     last_token: int = 0           # feedback token for the next decode step
     prefix_hit: int = 0           # prompt tokens served from the prefix cache
+    # --- speculative decode lane state ---
+    draft: List[int] = field(default_factory=list)   # this step's proposal
+    accept_ema: float = 1.0       # acceptance-rate EMA (optimistic start)
+    spec_probe: int = 0           # verify opportunities since k hit 0
+    # lazily-built immutable drafter inputs (prompt/hints never change)
+    _corpus_base: Optional[np.ndarray] = field(default=None, repr=False)
+    _prompt_list: Optional[List[int]] = field(default=None, repr=False)
 
     def deadline(self) -> float:
         if self.req.slo_ms is None:
             return _INF
         return self.req.arrival + self.req.slo_ms / 1e3
 
+    def corpus(self) -> np.ndarray:
+        """The drafter's searchable reference corpus: prompt, then
+        optional hints, then everything generated so far.  Hints sit
+        BETWEEN prompt and output so a replay hint (the completion
+        previously observed for this prompt) is adjacent to the prompt
+        tail — the lookup then predicts the whole response from the
+        first generated token on.  The immutable prompt+hints prefix is
+        converted to int64 once and cached: this runs per lane per
+        planning step, squarely inside the per-step fixed cost
+        speculation exists to shrink, so the per-step work is one
+        memcpy plus converting the (short) output tail."""
+        if self._corpus_base is None:
+            parts = []
+            if self.req.prompt_tokens is not None:
+                parts.append(np.asarray(self.req.prompt_tokens, np.int64))
+            if self.req.draft_hints is not None:
+                parts.append(np.asarray(self.req.draft_hints, np.int64))
+            self._corpus_base = (np.concatenate(parts) if parts
+                                 else np.zeros(0, np.int64))
+        return np.concatenate(
+            [self._corpus_base,
+             np.asarray(self.req.output_tokens, np.int64)])
+
+    def pattern(self, n: int) -> List[int]:
+        """The lane's true trailing ``n``-gram — the tail of
+        prompt+output (hints are searchable context, never part of the
+        actual history)."""
+        out = self.req.output_tokens
+        if len(out) >= n:
+            return out[-n:]
+        if self._prompt_list is None:
+            self._prompt_list = [int(t) for t in self.req.prompt_tokens] \
+                if self.req.prompt_tokens is not None else []
+        return (self._prompt_list + out)[-n:]
+
 
 @dataclass
 class MixedPlan:
-    """One fused engine step: decode lanes + prefill chunks, all pages
-    reserved, composed under the step token budget."""
+    """One fused engine step: decode lanes (each with an optional draft —
+    ``seq.draft`` — making its q_len 1+k verify rows) + prefill chunks,
+    all pages reserved, composed under the step token budget."""
     decodes: List[SeqState] = field(default_factory=list)
     prefills: List[Tuple[SeqState, int, int]] = \
         field(default_factory=list)           # (seq, start, chunk_len)
     preempted: List[SeqState] = field(default_factory=list)
     prefix_hit_tokens: int = 0                # matched while planning
+    draft_tokens: int = 0                     # speculative rows this step
 
     @property
     def total_tokens(self) -> int:
-        return len(self.decodes) + sum(c for _, _, c in self.prefills)
+        return len(self.decodes) + self.draft_tokens \
+            + sum(c for _, _, c in self.prefills)
 
     @property
     def empty(self) -> bool:
@@ -111,9 +232,13 @@ class PagedScheduler:
     """Owns the waiting queue, the in-flight chunked prefills, the
     decode-active set, and all page accounting against one PagedKVCache."""
 
-    def __init__(self, kv: PagedKVCache, cfg: SchedConfig):
+    def __init__(self, kv: PagedKVCache, cfg: SchedConfig,
+                 drafter: Optional[NgramDrafter] = None):
         self.kv = kv
         self.cfg = cfg
+        # injectable for tests (oracle / adversarial drafters); the
+        # default is the model-free prompt-lookup drafter
+        self.drafter = drafter or NgramDrafter(cfg.spec_ngram)
         self.waiting: Deque[SeqState] = deque()
         self.prefilling: List[SeqState] = []
         self.active: List[SeqState] = []
@@ -198,7 +323,83 @@ class PagedScheduler:
         plan.decodes = [s for s in plan.decodes if s in self.active]
         plan.prefills = [(s, a, c) for (s, a, c) in plan.prefills
                          if s in self.prefilling]
+        # speculative drafts LAST: only the budget neither decode lanes
+        # nor prefill chunks claimed may fund draft rows, so speculation
+        # never starves either (under saturation it self-disables)
+        plan.draft_tokens = self._plan_drafts(plan.decodes, budget)
         return plan
+
+    # ------------------------------------------------------------- drafting
+    def _plan_drafts(self, decodes: List[SeqState], budget: int) -> int:
+        """Attach a draft (``seq.draft``) to each decode lane, bounded by
+        the lane's adaptive k and the LEFTOVER step budget, round-robin so
+        one lane cannot monopolise the speculative share.  Draft page
+        reservations never evict anyone: on pool pressure the draft is
+        trimmed instead (speculation is opportunistic by contract)."""
+        for seq in decodes:
+            seq.draft = []
+        if self.cfg.spec_k <= 0 or budget <= 0 or not decodes:
+            return 0
+        want: List[Tuple[SeqState, List[int]]] = []
+        for seq in decodes:
+            k = self._adaptive_k(seq)
+            # never draft past the request's remaining token allowance
+            # (the base token always commits one, so only room-1 draft
+            # rows can ever be useful)
+            k = min(k, seq.req.max_new_tokens - seq.req.generated - 1)
+            if k <= 0:
+                continue
+            d = self.drafter.draft(seq.corpus(),
+                                   seq.pattern(self.drafter.ngram), k)
+            if d:
+                want.append((seq, d))
+        total = 0
+        progressed = True
+        while budget > 0 and progressed:     # round-robin, one row per
+            progressed = False               # lane per pass
+            for seq, d in want:
+                if budget <= 0:
+                    break
+                # each lane extends its own contiguous prefix (a failed
+                # reservation stays failed within this plan — the free
+                # list only shrinks — so the lane just stops growing)
+                depth = len(seq.draft)
+                if depth < len(d) and self._reserve_draft(seq, depth + 1):
+                    seq.draft.append(d[depth])
+                    budget -= 1
+                    total += 1
+                    progressed = True
+        return total
+
+    def _adaptive_k(self, seq: SeqState) -> int:
+        """Acceptance-EMA-driven draft depth.  EMA -> 0 turns the lane's
+        q_len back to 1 (speculation off); a periodic 1-token probe lets a
+        disabled lane rediscover predictability."""
+        k = int(round(seq.accept_ema * self.cfg.spec_k))
+        if k > 0:
+            return min(k, self.cfg.spec_k)
+        seq.spec_probe += 1
+        if seq.spec_probe >= self.cfg.spec_probe_every:
+            seq.spec_probe = 0
+            return 1
+        return 0
+
+    def _reserve_draft(self, seq: SeqState, n_draft: int) -> bool:
+        """Reserve pages for the lane's base token + ``n_draft`` draft
+        tokens.  Unlike prefill/decode reservations this NEVER preempts
+        — and it only draws on truly-FREE pages: ``reserve`` would
+        otherwise evict refcount-zero cached prefix pages (killing their
+        index entries) before raising, and speculation must not spend
+        the prefix cache's reclaimable capacity either — a draft is
+        worth at most k tokens, a cached prefix page saves a whole
+        prefill."""
+        target = self._tokens_of(seq) + 1 + n_draft
+        entry = self.kv.tables.get(seq.req.req_id)
+        held = len(entry.pages) if entry is not None else 0
+        if self.kv.pages_needed(target) - held > len(self.kv.free):
+            return False
+        self.kv.reserve(seq.req.req_id, target)
+        return True
 
     # ------------------------------------------------------------- prefill
     def _reserve_prefill(self, seq: SeqState,
@@ -259,8 +460,27 @@ class PagedScheduler:
         return [s for s in ready if s in self.active]
 
     def commit_decode(self, seq: SeqState) -> None:
-        """One token was appended by the fused step."""
+        """One token was appended by the fused step (no speculation)."""
         self.kv.extend(seq.req.req_id, self._tokens_of(seq) + 1)
+
+    def commit_verified(self, seq: SeqState, committed: int,
+                        drafted: int, accepted: int) -> None:
+        """A verify step committed ``committed`` tokens (the base token
+        plus ``accepted`` model-agreeing draft tokens) out of a
+        ``drafted``-token draft.  Marks the committed tokens live, rolls
+        the over-extended pages of REJECTED draft tokens back to the pool
+        (page-granular, refcount-safe — shared pages live below any
+        decode position and are never dropped), and folds the acceptance
+        rate into the lane's EMA, which feeds the next step's adaptive k.
+        Must be called BEFORE ``req.generated`` is advanced (same
+        contract as :meth:`commit_decode`)."""
+        assert 1 <= committed <= drafted + 1
+        target = self._tokens_of(seq) + committed
+        self.kv.extend(seq.req.req_id, target)
+        self.kv.truncate(seq.req.req_id, target)
+        rate = accepted / drafted if drafted else 0.0
+        a = self.cfg.spec_ema_alpha
+        seq.accept_ema = (1.0 - a) * seq.accept_ema + a * rate
 
     def _tokens_of(self, seq: SeqState) -> int:
         """Tokens currently in the cache: the prompt plus every generated
@@ -305,6 +525,7 @@ class PagedScheduler:
         r = victim.req
         victim.prefilled = 0
         victim.prefix_hit = 0
+        victim.draft = []        # stale proposals die with the eviction
         victim.preemptions += 1
         r.generated = 0
         r.slot = -1

@@ -137,6 +137,11 @@ class SimResult:
     aggregate_rps: float = 0.0            # all latency tenants combined
     arbiter_max_units: int = 0            # peak per-GPU units (audit)
     arbiter_budget: int = 7
+    # controller wall-clock per sample tick (the fleet-scaling signal:
+    # Table 4's controller CPU% analogue, measured per decision round)
+    controller_ticks: int = 0
+    controller_tick_ms_mean: float = 0.0
+    controller_tick_ms_max: float = 0.0
 
 
 class ClusterSim:
@@ -463,6 +468,7 @@ class ClusterSim:
         if self.controller is not None:
             self._push(p.sample_period_s, "sample")
         ctl_cpu = 0.0
+        tick_s: List[float] = []    # controller wall-clock per sample tick
 
         while self.events:
             ev = heapq.heappop(self.events)
@@ -505,7 +511,9 @@ class ClusterSim:
             elif ev.kind == "sample":
                 t0 = _time.perf_counter()
                 self.controller.on_snapshot(self.snapshot())
-                ctl_cpu += _time.perf_counter() - t0
+                dt = _time.perf_counter() - t0
+                ctl_cpu += dt
+                tick_s.append(dt)
                 self._push(self.now + p.sample_period_s, "sample")
 
         per_tenant: Dict[str, TenantSimResult] = {}
@@ -547,4 +555,9 @@ class ClusterSim:
             aggregate_rps=sum(t.throughput_rps for t in per_tenant.values()),
             arbiter_max_units=arb.max_used() if arb is not None else 0,
             arbiter_budget=arb.budget if arb is not None else 7,
+            controller_ticks=len(tick_s),
+            controller_tick_ms_mean=(float(np.mean(tick_s)) * 1e3
+                                     if tick_s else 0.0),
+            controller_tick_ms_max=(float(np.max(tick_s)) * 1e3
+                                    if tick_s else 0.0),
         )

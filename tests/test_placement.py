@@ -5,7 +5,8 @@ from repro.core.placement import (PlacementWeights, best_candidate,
                                   intra_device_first, placement_score,
                                   rank_candidates)
 from repro.core.signals import Snapshot, SystemSignals, TenantSignals
-from repro.core.topology import Slot, make_p4d_cluster
+from repro.core.topology import (BUILTIN_TOPOLOGIES, Slot, builtin_topology,
+                                 make_p4d_cluster, make_p4d_fleet)
 
 
 @pytest.fixture
@@ -26,6 +27,25 @@ def test_p4d_topology_shape(topo):
     assert not topo.same_root("h0:g0", "h0:g2")
     assert topo.host_of("h1:g3") == 1
     assert "h0:g1" in topo.siblings("h0:g0")
+
+
+def test_p4d_fleet_and_builtin_topologies():
+    """The scaled-fleet variant (e5 --hosts 4) and the name-based
+    registry: every builtin instantiates, the 4-host fleet doubles the
+    2-host testbed, and unknown names fail loudly."""
+    fleet = make_p4d_fleet(4)
+    assert len(fleet.devices()) == 32
+    assert len(fleet.roots()) == 16
+    assert fleet.host_of("h3:g7") == 3
+    for name in BUILTIN_TOPOLOGIES:
+        t = builtin_topology(name)
+        assert t.devices(), name
+    assert len(builtin_topology("p4d-4host").devices()) == \
+        2 * len(builtin_topology("p4d-2host").devices())
+    with pytest.raises(ValueError):
+        builtin_topology("nonexistent")
+    with pytest.raises(ValueError):
+        make_p4d_cluster(0)
 
 
 def test_score_penalises_busy_root(topo):

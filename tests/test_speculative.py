@@ -1,0 +1,442 @@
+"""Speculative multi-token decode lanes: dense<->paged<->speculative
+token parity (deterministic drafter), accept/rollback correctness (page
+leaks, refcounts, shared pages) under churn + preemption, step-budget
+bounds with speculation on, adaptive-k self-disable, the n-gram drafter
+itself, and the ``PagedKVCache.truncate`` rollback primitive — all on
+CPU, with the Pallas ragged kernel exercised in interpret mode."""
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, reduced
+from repro.serving.engine import ServingEngine
+from repro.serving.kvcache import PagedKVCache
+from repro.serving.request import Request
+from repro.serving.sched import NgramDrafter
+
+from test_paged_runtime import (assert_no_leaks,
+                                assert_refcount_invariants, drain)
+
+CFG = reduced(get_config("stablelm_3b")).replace(dtype="float32")
+
+
+def make_req(req_id, prompt_tokens, max_new, hints=None, **kw):
+    return Request(req_id=req_id, tenant="T1",
+                   prompt_len=len(prompt_tokens), max_new_tokens=max_new,
+                   arrival=0.0, prompt_tokens=np.asarray(prompt_tokens),
+                   draft_hints=(np.asarray(hints) if hints is not None
+                                else None), **kw)
+
+
+def spec_engine(spec_k=4, attn_impl="ref", **kw):
+    kw.setdefault("max_slots", 4)
+    kw.setdefault("seq_cap", 96)
+    kw.setdefault("page_size", 8)
+    kw.setdefault("chunk_tokens", 16)
+    return ServingEngine(CFG, seed=0, backend="paged", attn_impl=attn_impl,
+                         spec_k=spec_k, **kw)
+
+
+# ------------------------------------------------------------- the drafter
+def test_ngram_drafter_prompt_lookup():
+    d = NgramDrafter(ngram=2)
+    corpus = [1, 2, 3, 9, 9, 1, 2]
+    # pattern [1, 2] occurred at position 0; the following tokens are
+    # proposed, capped at k
+    assert d.draft(corpus, [1, 2], 3) == [3, 9, 9]
+    assert d.draft(corpus, [1, 2], 1) == [3]
+    # unseen pattern -> no draft (a miss costs nothing)
+    assert d.draft(corpus, [7, 7], 3) == []
+    # k=0 and tiny corpora are no-ops
+    assert d.draft(corpus, [1, 2], 0) == []
+    assert d.draft([1, 2], [1, 2], 3) == []
+
+
+def test_ngram_drafter_prefers_most_recent_occurrence():
+    d = NgramDrafter(ngram=2)
+    #        [5,6]->7 ....... [5,6]->8 (more recent)
+    corpus = [5, 6, 7, 1, 2, 5, 6, 8, 3, 5, 6]
+    assert d.draft(corpus, [5, 6], 2) == [8, 3]
+
+
+def test_ngram_drafter_replay_hint_boundary():
+    """The replay workflow: hints (the previously observed completion)
+    sit right after the prompt in the corpus, so the very first decode
+    step's pattern [prompt[-1], first_output] matches at the boundary and
+    proposes the rest of the completion."""
+    d = NgramDrafter(ngram=2)
+    prompt = [10, 11, 12]
+    hints = [50, 51, 52, 53]       # previously observed completion
+    output = [50]                  # first generated token matched o1
+    corpus = prompt + hints + output
+    pattern = (prompt + output)[-2:]          # [12, 50]
+    assert d.draft(corpus, pattern, 3) == [51, 52, 53]
+
+
+# ------------------------------------------------------------ token parity
+@pytest.mark.parametrize("impl", ["ref", "kernel"])
+def test_spec_token_parity_with_replay_hints(impl):
+    """Accepted speculative output must be token-identical to
+    non-speculative decode — run a trace cold, replay it with exact
+    hints (forcing multi-token accepted bursts), and compare against the
+    dense engine too.  'kernel' drives the ragged Pallas kernel in
+    interpret mode with q_len>1 verify rows."""
+    rng = np.random.default_rng(42)
+    prompts = [rng.integers(0, CFG.vocab_size, pl) for pl in (40, 7, 21)]
+    max_new = [6, 8, 5]
+
+    dense = ServingEngine(CFG, max_slots=4, seq_cap=96, page_size=8, seed=0)
+    reqs_d = [make_req(i, p, mn) for i, (p, mn)
+              in enumerate(zip(prompts, max_new))]
+    for r in reqs_d:
+        assert dense.submit(r)
+    drain(dense)
+
+    cold = spec_engine(spec_k=4, attn_impl=impl)
+    reqs_c = [make_req(i, p, mn) for i, (p, mn)
+              in enumerate(zip(prompts, max_new))]
+    for r in reqs_c:
+        assert cold.submit(r)
+    drain(cold)
+
+    warm = spec_engine(spec_k=4, attn_impl=impl)
+    reqs_w = [make_req(i, p, mn, hints=r.output_tokens) for i, (p, mn, r)
+              in enumerate(zip(prompts, max_new, reqs_c))]
+    for r in reqs_w:
+        assert warm.submit(r)
+    drain(warm)
+
+    for rd, rc, rw in zip(reqs_d, reqs_c, reqs_w):
+        assert rd.output_tokens == rc.output_tokens == rw.output_tokens
+    # the replay run actually speculated (bursts were committed)
+    m = warm.metrics
+    assert m.drafted_tokens_total > 0
+    assert m.accepted_tokens_total > 0
+    assert m.accept_rate() > 0.5
+    assert_no_leaks(warm)
+    assert_no_leaks(cold)
+
+
+class _AdversarialDrafter:
+    """Proposes deterministic WRONG tokens: every draft must be rejected
+    and rolled back, and the output must still be exact."""
+
+    ngram = 2
+
+    def __init__(self, vocab):
+        self.vocab = vocab
+
+    def draft(self, corpus, pattern, k):
+        # off-by-one from whatever greedy decode would produce; the model
+        # can never agree with all-offset tokens AND their own chain
+        return [(int(corpus[-1]) + 7 + j) % self.vocab for j in range(k)]
+
+
+def test_adversarial_drafter_all_rejected_still_exact():
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, CFG.vocab_size, 24)
+
+    base = spec_engine(spec_k=0)
+    rb = make_req(0, prompt, 8)
+    assert base.submit(rb)
+    drain(base)
+
+    eng = spec_engine(spec_k=3)
+    eng.runtime.sched.drafter = _AdversarialDrafter(CFG.vocab_size)
+    r = make_req(0, prompt, 8)
+    assert eng.submit(r)
+    steps = 0
+    while eng.has_work():
+        rep = eng.step()
+        assert_refcount_invariants(eng.kv)
+        eng.finalize_step(rep, float(steps))
+        steps += 1
+        assert steps < 200
+    assert r.output_tokens == rb.output_tokens
+    m = eng.metrics
+    assert m.drafted_tokens_total > 0
+    # a rejected draft still commits its bonus token; nothing is accepted
+    assert m.accepted_tokens_total == 0
+    assert_no_leaks(eng)
+
+
+def test_wrong_hints_never_corrupt_output():
+    """Stale/garbage replay hints cost rejected rows, never wrong
+    tokens."""
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(0, CFG.vocab_size, 24)
+    base = spec_engine(spec_k=0)
+    rb = make_req(0, prompt, 8)
+    assert base.submit(rb)
+    drain(base)
+
+    eng = spec_engine(spec_k=4)
+    # hints = reversed true completion: the boundary bigram never matches
+    # the model chain beyond luck, and any draft must be verified away
+    r = make_req(0, prompt, 8, hints=list(reversed(rb.output_tokens)))
+    assert eng.submit(r)
+    drain(eng)
+    assert r.output_tokens == rb.output_tokens
+    assert_no_leaks(eng)
+
+
+# ------------------------------------------------- budget + starvation
+def test_step_budget_bounds_hold_with_speculation():
+    """Every fused step's rows (decode bases + draft rows + prefill
+    chunks) fit the step token budget, and drafts only ever consume
+    LEFTOVER budget — prefill progress per step matches the
+    non-speculative run exactly (speculation never starves prefill)."""
+    rng = np.random.default_rng(9)
+    long_prompt = rng.integers(0, CFG.vocab_size, 60)
+    short = rng.integers(0, CFG.vocab_size, 8)
+
+    solo = spec_engine(spec_k=0)
+    ref = make_req(0, short, 24)
+    assert solo.submit(ref)
+    drain(solo)
+
+    def run(spec_k):
+        # r1 carries exact replay hints, so with spec on it WANTS k draft
+        # rows every step while r2's long prompt chunks compete for the
+        # same step budget
+        eng = spec_engine(spec_k=spec_k, step_tokens=20, chunk_tokens=16)
+        r1 = make_req(0, short, 24,
+                      hints=ref.output_tokens if spec_k else None)
+        assert eng.submit(r1)
+        while not r1.generated:             # r1 decoding before admission
+            eng.finalize_step(eng.step(), 0.0)
+        r2 = make_req(1, long_prompt, 2)
+        assert eng.submit(r2)
+        budget = eng.runtime.sched.step_token_budget()
+        prefill_per_step = []
+        while eng.has_work():
+            rep = eng.step()
+            assert rep.tokens <= budget
+            # planned rows = decode lanes (committed minus accepted) +
+            # draft rows + prefill chunk rows — the true device batch
+            lanes = rep.decode_tokens - rep.accepted_tokens
+            assert lanes + rep.drafted_tokens + rep.prefill_tokens \
+                <= budget, "planned rows exceeded the step budget"
+            if not r2.done:
+                prefill_per_step.append(rep.prefill_tokens)
+            eng.finalize_step(rep, 0.0)
+        assert_no_leaks(eng)
+        return prefill_per_step
+
+    base = run(0)
+    spec = run(4)
+    assert spec == base, \
+        "speculation changed prefill chunking (starved a prefill chunk)"
+
+
+def test_drafts_clamped_to_remaining_tokens():
+    """A lane one token from completion never drafts (the base commit
+    finishes it), and committed bursts never overshoot max_new_tokens."""
+    rng = np.random.default_rng(11)
+    prompt = rng.integers(0, CFG.vocab_size, 16)
+    cold = spec_engine(spec_k=0)
+    rc = make_req(0, prompt, 5)
+    assert cold.submit(rc)
+    drain(cold)
+
+    eng = spec_engine(spec_k=4)
+    r = make_req(0, prompt, 5, hints=rc.output_tokens)
+    assert eng.submit(r)
+    drain(eng)
+    assert r.output_tokens == rc.output_tokens
+    assert len(r.output_tokens) == 5          # never overshot
+    assert_no_leaks(eng)
+
+
+# ---------------------------------------------------------- adaptive k
+def test_adaptive_k_disables_on_random_traffic():
+    """On unpredictable traffic the drafter almost never matches and the
+    acceptance EMA keeps lanes at q_len=1: drafted rows stay a tiny
+    fraction of decoded tokens (ITL can never be structurally worse)."""
+    rng = np.random.default_rng(13)
+    eng = spec_engine(spec_k=4)
+    reqs = [make_req(i, rng.integers(0, CFG.vocab_size, 16), 16)
+            for i in range(4)]
+    for r in reqs:
+        assert eng.submit(r)
+    drain(eng)
+    m = eng.metrics
+    decoded = sum(len(r.output_tokens) for r in reqs)
+    assert decoded == 64
+    # random 1024-vocab bigrams essentially never repeat inside these
+    # tiny corpora; a handful of accidental matches is fine, a draft
+    # per decoded token is not
+    assert m.drafted_tokens_total <= decoded * 0.2
+    assert_no_leaks(eng)
+
+
+def test_adaptive_k_ema_drives_depth_down_and_probes():
+    from repro.serving.sched import PagedScheduler, SchedConfig, SeqState
+    kv = PagedKVCache(num_pages=8, page_size=4)
+    sched = PagedScheduler(kv, SchedConfig(spec_k=4, spec_probe_every=3))
+    seq = SeqState(make_req(0, [1, 2, 3, 4], 8))
+    seq.req.generated = 1
+    kv.reserve(0, 5)
+    assert sched._adaptive_k(seq) == 4        # optimistic start
+    for _ in range(12):                       # sustained total rejection
+        sched.commit_verified(seq, 1, drafted=4, accepted=0)
+    assert int(round(seq.accept_ema * 4)) == 0
+    ks = [sched._adaptive_k(seq) for _ in range(7)]
+    assert ks.count(1) == 2 and ks.count(0) == 5, \
+        f"probe cadence broken: {ks}"
+    # one accepted burst lifts the EMA (and so k) straight back up
+    sched.commit_verified(seq, 5, drafted=4, accepted=4)
+    assert sched._adaptive_k(seq) >= 1
+
+
+def test_drafts_never_evict_cached_prefix_pages():
+    """Speculation is opportunistic all the way down: a draft page
+    reservation must only draw on truly-free pages — never reclaim
+    refcount-zero cached prefix pages (a draft is worth at most k
+    tokens; a cached prefix page saves a whole prefill)."""
+    from repro.serving.sched import PagedScheduler, SchedConfig, SeqState
+    kv = PagedKVCache(num_pages=4, page_size=4)
+    toks = list(range(300, 316))              # exactly the whole pool
+    kv.allocate(1, prompt_len=16)
+    kv.commit_prefix(1, toks, 16)
+    kv.release(1)                             # all 4 pages park on the LRU
+    assert kv.cached_pages == 4 and not kv.free
+    sched = PagedScheduler(kv, SchedConfig(spec_k=4))
+    seq = SeqState(make_req(2, list(range(4)), 8,
+                            hints=list(range(50, 58))))
+    assert not sched._reserve_draft(seq, 1)
+    assert kv.cached_pages == 4, "a draft reclaimed cached prefix pages"
+    assert kv.prefix_index, "draft pressure emptied the prefix index"
+
+
+# ------------------------------------------- rollback property: churn
+def test_rollback_under_churn_and_preemption_no_leaks():
+    """The rollback property suite: speculative lanes (mixed good and
+    garbage hints) on an overcommitted shared-prefix pool, with
+    preemption churn — refcount invariants hold at EVERY step, shared
+    pages are never rolled back, and the pool drains leak-free."""
+    rng = np.random.default_rng(17)
+    common = rng.integers(0, CFG.vocab_size, 8)       # 2 shared pages
+    eng = ServingEngine(CFG, max_slots=3, seq_cap=32, page_size=4, seed=0,
+                        backend="paged", pool_pages=10, chunk_tokens=8,
+                        attn_impl="ref", spec_k=3)
+    reqs = []
+    for i in range(6):
+        tail = rng.integers(0, CFG.vocab_size, 4)
+        hints = (list(rng.integers(0, CFG.vocab_size, 6))
+                 if i % 2 else None)                  # garbage hints
+        reqs.append(Request(
+            req_id=i, tenant="T1", prompt_len=12, max_new_tokens=6,
+            arrival=float(i), priority=float(rng.integers(0, 3)),
+            prompt_tokens=np.concatenate([common, tail]),
+            draft_hints=hints))
+    for r in reqs[:3]:
+        assert eng.submit(r)
+    steps = 0
+    while eng.has_work():
+        if steps == 4:
+            for r in reqs[3:]:
+                assert eng.submit(r)
+        rep = eng.step()
+        assert_refcount_invariants(eng.kv)
+        eng.finalize_step(rep, float(steps))
+        steps += 1
+        assert steps < 800
+    assert all(r.done for r in reqs)
+    assert_no_leaks(eng)
+
+
+def test_preempted_speculative_lane_regenerates_identical_tokens():
+    """Recompute-style preemption of a lane that had committed
+    speculative bursts must regenerate the identical output."""
+    rng = np.random.default_rng(19)
+    toks = rng.integers(0, CFG.vocab_size, 8)
+
+    solo = ServingEngine(CFG, max_slots=4, seq_cap=32, page_size=4, seed=0,
+                         backend="paged", chunk_tokens=8, attn_impl="ref")
+    ref_req = make_req(9, toks, 8)
+    assert solo.submit(ref_req)
+    drain(solo)
+
+    eng = ServingEngine(CFG, max_slots=4, seq_cap=32, page_size=4, seed=0,
+                        backend="paged", pool_pages=6, chunk_tokens=8,
+                        attn_impl="ref", spec_k=3)
+    hi = make_req(0, rng.integers(0, CFG.vocab_size, 8), 8, priority=2.0)
+    lo = make_req(1, toks, 8, hints=ref_req.output_tokens, priority=0.5)
+    assert eng.submit(hi) and eng.submit(lo)
+    drain(eng)
+    assert any(v == lo.req_id for v, _ in eng.runtime.sched.preempt_log), \
+        "overcommitted pool never preempted the low-priority lane"
+    assert lo.output_tokens == ref_req.output_tokens
+    assert_no_leaks(eng)
+
+
+# ----------------------------------------------- kvcache.truncate unit
+def test_truncate_frees_whole_pages_only():
+    kv = PagedKVCache(num_pages=8, page_size=4, enable_prefix_cache=False)
+    kv.allocate(1, prompt_len=12)             # 3 pages, length 12
+    pages = list(kv.tables[1].pages)
+    kv.truncate(1, 6)                         # keep ceil(6/4)=2 pages
+    assert kv.tables[1].pages == pages[:2]
+    assert kv.tables[1].length == 6
+    assert pages[2] in kv.free
+    kv.truncate(1, 6)                         # idempotent
+    assert kv.tables[1].pages == pages[:2]
+    kv.truncate(1, 0)                         # full rollback
+    assert kv.tables[1].pages == []
+    assert len(kv.free) == 8
+    kv.release(1)
+
+
+def test_truncate_never_marks_tokens_live():
+    kv = PagedKVCache(num_pages=8, page_size=4)
+    kv.allocate(1, prompt_len=4)
+    kv.reserve(1, 12)                         # 3 pages held, 4 live
+    assert kv.tables[1].length == 4 and len(kv.tables[1].pages) == 3
+    kv.truncate(1, 8)                         # drop the 3rd page only
+    assert len(kv.tables[1].pages) == 2
+    assert kv.tables[1].length == 4           # live length untouched
+    with pytest.raises(ValueError):
+        kv.truncate(1, -1)
+
+
+def test_truncate_into_shared_page_raises():
+    """The refcount-safety contract: a page with live sharers must never
+    be rolled back, and the failed call must not mutate anything."""
+    kv = PagedKVCache(num_pages=8, page_size=4)
+    toks = list(range(100, 112))              # 3 pages worth
+    kv.allocate(1, prompt_len=12)
+    kv.commit_prefix(1, toks, 12)
+    matched = kv.match_prefix(2, toks)        # seq 2 shares 2 full pages
+    assert matched == 8
+    shared = list(kv.tables[2].pages)
+    assert all(kv.ref[p] == 2 for p in shared)
+    before = (list(kv.tables[2].pages), dict(kv.ref), list(kv.free))
+    with pytest.raises(ValueError):
+        kv.truncate(2, 4)                     # into a shared page
+    assert (list(kv.tables[2].pages), dict(kv.ref), list(kv.free)) == before
+    # above the shared boundary truncation is fine
+    kv.reserve(2, 16)                         # grow two private pages
+    kv.truncate(2, 8)                         # drops only the private ones
+    assert kv.tables[2].pages == shared
+    assert all(kv.ref[p] == 2 for p in shared)
+    kv.release(1)
+    kv.release(2)
+
+
+def test_truncate_parks_indexed_pages_on_cached_lru():
+    """Truncating a sole-holder page that is prefix-indexed parks it on
+    the cached LRU (KV intact, still matchable) instead of the free
+    list — same contract as release()."""
+    kv = PagedKVCache(num_pages=8, page_size=4)
+    toks = list(range(200, 212))
+    kv.allocate(1, prompt_len=12)
+    kv.commit_prefix(1, toks, 12)             # 3 indexed pages
+    third = kv.tables[1].pages[2]
+    kv.truncate(1, 8)
+    assert third in kv.cached and third not in kv.free
+    kv.release(1)
+
+
+def test_spec_k_on_dense_backend_rejected():
+    with pytest.raises(ValueError):
+        ServingEngine(CFG, backend="dense", spec_k=4)
