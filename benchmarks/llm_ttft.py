@@ -19,11 +19,15 @@ request shares a common system prompt, and the A/B against the
 no-sharing baseline reports the prefix-hit rate plus the TTFT/ITL p99
 improvement (shared-prefix TTFT is O(tail), not O(prompt)).  ``--spec``
 runs the speculative-decode A/B: decode-heavy repetitive/templated
-traffic (draft hints replayed from each template's first completion)
-and a random control trace, spec on vs off, reporting accept rate, ITL
-p99/p50 and throughput deltas — the per-step fixed cost amortised k-ways
-on predictable traffic, with adaptive per-lane k keeping the random
-trace within noise of non-speculative decode.
+traffic (the engine-side response cache self-primes draft hints from
+each template's first completion — no client hints) and a random
+control trace, spec on vs off, reporting accept rate, ITL p99/p50 and
+throughput deltas — the per-step fixed cost amortised k-ways on
+predictable traffic, with adaptive per-lane k keeping the random trace
+within noise of non-speculative decode.  ``--replicas N`` runs the
+cluster-wide KV reuse A/B: N paged replicas behind one dispatcher on a
+shared-prefix-group trace, cache-aware routing (content-hash prefix
+directory, route-to-longest-held-prefix) vs blind least-loaded.
 
 Paper Table 2:  Static MIG 232 ms TTFT p99, 1.00 thr
                 Full system 199 ms TTFT p99, 0.96 thr
@@ -47,10 +51,43 @@ from repro.serving.request import Request
 from repro.sim.params import default_schedule
 
 
+def _denoise_runtime(rt, bucket_cost, shared):
+    """Replace ``rt``'s measured fused-step wall-clock with a per-bucket
+    cost table (see ``run``'s ``denoise`` docs).  ``shared`` freezes each
+    (rows, width, logit-rows) bucket at the min of three back-to-back
+    first-sight executions; otherwise a running min is kept."""
+    orig_run_mixed = rt._run_mixed
+
+    def _denoised(tokens, positions, n_rows, bts, last_rows):
+        logits, dt = orig_run_mixed(tokens, positions, n_rows, bts,
+                                    last_rows)
+        key = (tokens.shape[0], bts.shape[1], last_rows.shape[0])
+        if shared:
+            if key not in bucket_cost:
+                # freeze the bucket at the min of three back-to-back
+                # executions: one unlucky first measurement would
+                # otherwise replay through every later step of this
+                # shape.  Re-execution is safe — the step scatters
+                # the same K/V rows to the same page slots, so the
+                # extra calls are idempotent
+                for _ in range(2):
+                    _, dt2 = orig_run_mixed(tokens, positions, n_rows,
+                                            bts, last_rows)
+                    dt = min(dt, dt2)
+                bucket_cost[key] = dt
+            dt = bucket_cost[key]
+        else:
+            dt = bucket_cost[key] = min(bucket_cost.get(key, dt), dt)
+        return logits, dt
+
+    rt._run_mixed = _denoised
+
+
 def run(duration=1800.0, qps=1.75, seed=0, with_controller=True,
         verbose=True, compute_scale_7b=34.0, auto_calibrate=False,
         backend="dense", shared_prefix=0, prefix_cache=True,
-        spec_k=0, templated=0, max_new=4, denoise=False):
+        spec_k=0, templated=0, max_new=4, denoise=False,
+        response_cache=False):
     """Virtual-time serving loop.  compute_scale_7b maps the reduced
     model's measured prefill compute to the 7B-on-A100 operating point.
 
@@ -63,7 +100,7 @@ def run(duration=1800.0, qps=1.75, seed=0, with_controller=True,
     cfg = reduced(get_config("olmo2_7b"))
     engine = ServingEngine(cfg, max_slots=8, seq_cap=128, seed=seed,
                            backend=backend, prefix_cache=prefix_cache,
-                           spec_k=spec_k)
+                           spec_k=spec_k, response_cache=response_cache)
     rng = np.random.default_rng(seed)
     # --shared-prefix arm: every request opens with the same
     # ``shared_prefix``-token system prompt followed by a random tail, so
@@ -100,34 +137,8 @@ def run(duration=1800.0, qps=1.75, seed=0, with_controller=True,
     # cheaper steps, whereas frozen first-sight costs make arms with
     # identical step-shape traces replay bit-identical virtual time.
     if (denoise or isinstance(denoise, dict)) and backend == "paged":
-        rt = engine.runtime
-        orig_run_mixed = rt._run_mixed
         shared = isinstance(denoise, dict)
-        bucket_cost = denoise if shared else {}
-
-        def _denoised(tokens, positions, n_rows, bts, last_rows):
-            logits, dt = orig_run_mixed(tokens, positions, n_rows, bts,
-                                        last_rows)
-            key = (tokens.shape[0], bts.shape[1], last_rows.shape[0])
-            if shared:
-                if key not in bucket_cost:
-                    # freeze the bucket at the min of three back-to-back
-                    # executions: one unlucky first measurement would
-                    # otherwise replay through every later step of this
-                    # shape.  Re-execution is safe — the step scatters
-                    # the same K/V rows to the same page slots, so the
-                    # extra calls are idempotent
-                    for _ in range(2):
-                        _, dt2 = orig_run_mixed(tokens, positions, n_rows,
-                                                bts, last_rows)
-                        dt = min(dt, dt2)
-                    bucket_cost[key] = dt
-                dt = bucket_cost[key]
-            else:
-                dt = bucket_cost[key] = min(bucket_cost.get(key, dt), dt)
-            return logits, dt
-
-        rt._run_mixed = _denoised
+        _denoise_runtime(engine.runtime, denoise if shared else {}, shared)
 
     def make_prompt(prompt_len):
         if common is None:
@@ -206,6 +217,11 @@ def run(duration=1800.0, qps=1.75, seed=0, with_controller=True,
     # read ONLY the measured trace
     from repro.serving.metrics import TenantMetrics
     engine.metrics = TenantMetrics()
+    if engine.runtime is not None:
+        # the scheduler's response-cache counters are cumulative; zero
+        # them too so response_cache_hit_rate reads only measured traffic
+        engine.runtime.sched.rc_lookups = 0
+        engine.runtime.sched.rc_hits = 0
 
     def t2_active_at(t):
         return any(w.tenant == "T2" and w.start <= t < w.end
@@ -221,7 +237,11 @@ def run(duration=1800.0, qps=1.75, seed=0, with_controller=True,
             else:
                 if templates is not None:
                     tid = int(rng.integers(0, len(templates)))
-                    hints = completions.get(tid)
+                    # with the engine-side response cache the frontend
+                    # sends NO hints: the scheduler primes draft_hints
+                    # itself from the template's recorded completion
+                    hints = (None if response_cache
+                             else completions.get(tid))
                     r = Request(req_id=req_id, tenant="T1",
                                 prompt_len=templates.shape[1],
                                 max_new_tokens=max_new,
@@ -311,6 +331,7 @@ def run(duration=1800.0, qps=1.75, seed=0, with_controller=True,
         "accept_rate": engine.metrics.accept_rate(),
         "drafted_tokens": engine.metrics.drafted_tokens_total,
         "accepted_tokens": engine.metrics.accepted_tokens_total,
+        "response_cache_hit_rate": engine.metrics.response_hit_rate(),
         "compute_scale_7b": compute_scale_7b,
         "actions": controller.audit.counts() if controller else {},
     }
@@ -350,6 +371,182 @@ def run_shared_prefix(duration=600.0, qps=1.75, prefix_len=64, seed=0,
     return out
 
 
+def run_replicas(duration=600.0, qps=2.25, replicas=2, groups=8,
+                 prefix_len=96, tail_len=15, max_new=4, seed=0,
+                 cache_aware=True, compute_scale_7b=34.0,
+                 shared_min=None, pool_pages=48, max_slots=3):
+    """One arm of the cluster-wide KV-reuse A/B: ``replicas`` paged
+    engines behind one dispatcher, shared-prefix-group traffic (each
+    request opens with one of ``groups`` fixed page-aligned prefixes
+    plus a random tail).  ``cache_aware`` picks the dispatch policy:
+    route-to-longest-held-prefix via the content-hash directory, or the
+    blind least-loaded baseline.  The page pool is sized so ONE replica
+    cannot hold every group's prefix — blind dispatch spreads each group
+    over all replicas and thrashes every cached-page LRU, while
+    cache-aware routing partitions groups across replicas so each
+    replica's working set fits.  Virtual time, per-replica availability
+    clocks, no controller/fabric interference — the A/B isolates the
+    routing effect."""
+    from repro.serving.directory import (CacheAwareRouter, PrefixDirectory,
+                                         RouterConfig)
+    from repro.serving.metrics import TenantMetrics
+    cfg = reduced(get_config("olmo2_7b"))
+    engines = [ServingEngine(cfg, max_slots=max_slots, seq_cap=128,
+                             seed=seed, backend="paged",
+                             pool_pages=pool_pages)
+               for _ in range(replicas)]
+    fabric = FabricState()
+    rng = np.random.default_rng(seed)
+    prefixes = rng.integers(0, cfg.vocab_size, (groups, prefix_len))
+    prompt_len = prefix_len + tail_len
+    # warm each replica's jit buckets off-clock, BEFORE attaching the
+    # directory (warm pages stay unpublished — stale-but-safe misses)
+    for eng in engines:
+        eng.submit(Request(req_id=-1, tenant="T1", prompt_len=prompt_len,
+                           max_new_tokens=max_new, arrival=0.0,
+                           prompt_tokens=rng.integers(0, cfg.vocab_size,
+                                                      prompt_len)))
+        while eng.has_work():
+            eng.finalize_step(eng.step(), 0.0)
+        eng.metrics = TenantMetrics()
+        if shared_min is not None:
+            _denoise_runtime(eng.runtime, shared_min, True)
+    directory = PrefixDirectory(page_size=16)
+    for j, eng in enumerate(engines):
+        directory.attach("T1", j, eng.kv)
+    router = CacheAwareRouter(directory, "T1", RouterConfig(),
+                              cache_aware=cache_aware)
+    # prime each group once THROUGH THE ROUTER off-clock (the measured
+    # trace reads the steady state, as in run_spec's template priming).
+    # Both arms get the identical procedure: blind dispatch spreads the
+    # groups least-loaded, cache-aware partitions them — each arm then
+    # measures the regime its policy actually produces
+    for g in range(groups):
+        prompt = np.concatenate([prefixes[g],
+                                 rng.integers(0, cfg.vocab_size, tail_len)])
+        r = Request(req_id=-10 - g, tenant="T1", prompt_len=prompt_len,
+                    max_new_tokens=max_new, arrival=0.0,
+                    prompt_tokens=prompt)
+        loads = [len(e.queue) + len(e.active()) for e in engines]
+        eng = engines[router.route(r, loads)]
+        eng.submit(r)
+        while eng.has_work():
+            eng.finalize_step(eng.step(), 0.0)
+    for eng in engines:
+        eng.metrics = TenantMetrics()
+    router.stats = type(router.stats)()
+
+    now = 0.0
+    avail = [0.0] * replicas
+    next_arrival = rng.exponential(1.0 / qps)
+    req_id = 0
+    completed = 0
+    ttfts = []
+    while now < duration:
+        while next_arrival <= now:
+            prompt = np.concatenate([
+                prefixes[int(rng.integers(groups))],
+                rng.integers(0, cfg.vocab_size, tail_len)])
+            r = Request(req_id=req_id, tenant="T1", prompt_len=prompt_len,
+                        max_new_tokens=max_new, arrival=next_arrival,
+                        slo_ms=200.0, prompt_tokens=prompt)
+            loads = [len(e.queue) + len(e.active()) for e in engines]
+            engines[router.route(r, loads)].submit(r)
+            req_id += 1
+            next_arrival += rng.exponential(1.0 / qps)
+        stepped = False
+        for j, eng in enumerate(engines):
+            if avail[j] > now or not eng.has_work():
+                continue
+            rep = eng.step()
+            if rep.kind == "idle":
+                continue
+            # same cost model as ``run``: scaled compute + the prompt
+            # share's fabric transfer (prefix hits skip both)
+            transfer = rep.prefill_tokens * 1.5e6 / fabric.t1_bandwidth()
+            end = now + rep.compute_s * compute_scale_7b + transfer
+            avail[j] = end
+            eng.finalize_step(rep, end)
+            for pr in rep.prefilled:
+                ttfts.append(pr.ttft)
+            completed += len(rep.completed)
+            stepped = True
+        if stepped:
+            continue
+        horizon = [t for t in avail if t > now]
+        if next_arrival > now:
+            horizon.append(next_arrival)
+        now = min(horizon) if horizon else now + 0.05
+
+    lats = np.array(ttfts)
+    prefill = sum(e.metrics.prefill_tokens_total for e in engines)
+    hits = sum(e.metrics.prefix_hit_tokens_total for e in engines)
+    return {
+        "cache_aware": cache_aware,
+        "ttft_p99_ms": (float(np.quantile(lats, 0.99) * 1e3)
+                        if lats.size else 0.0),
+        "ttft_p50_ms": (float(np.quantile(lats, 0.50) * 1e3)
+                        if lats.size else 0.0),
+        "prefix_hit_rate": hits / max(prefill + hits, 1),
+        "throughput_rps": completed / duration,
+        "routing": router.stats.as_dict(),
+        "directory": directory.stats.as_dict(),
+    }
+
+
+def run_kv_reuse(duration=600.0, qps=2.25, replicas=2, groups=8,
+                 prefix_len=96, tail_len=15, seed=0, pool_pages=48,
+                 max_slots=3, verbose=True):
+    """Cluster-wide KV reuse A/B at R replicas: cache-aware routing vs
+    blind least-loaded dispatch on the same shared-prefix-group trace.
+    Per-bucket step costs are calibrated once and FROZEN across both
+    arms (see ``run``'s denoise docs), so the TTFT comparison reads
+    batch shapes — prefix pages skipped vs re-prefilled — and not host
+    noise."""
+    shared_min: dict = {}
+    cal = run(duration=5.0, qps=1.0, seed=seed, with_controller=False,
+              auto_calibrate=True, backend="paged", denoise=shared_min,
+              verbose=False)
+    kw = dict(duration=duration, qps=qps, replicas=replicas,
+              groups=groups, prefix_len=prefix_len, tail_len=tail_len,
+              seed=seed, compute_scale_7b=cal["compute_scale_7b"],
+              shared_min=shared_min, pool_pages=pool_pages,
+              max_slots=max_slots)
+    blind = run_replicas(cache_aware=False, **kw)
+    aware = run_replicas(cache_aware=True, **kw)
+    out = {
+        "workload": {"duration_s": duration, "qps": qps,
+                     "replicas": replicas, "groups": groups,
+                     "prefix_len": prefix_len},
+        "blind": blind,
+        "aware": aware,
+        "hit_rate_blind": blind["prefix_hit_rate"],
+        "hit_rate_aware": aware["prefix_hit_rate"],
+        "ttft_p99_ratio": (blind["ttft_p99_ms"] /
+                           max(aware["ttft_p99_ms"], 1e-9)),
+        "ttft_p50_ratio": (blind["ttft_p50_ms"] /
+                           max(aware["ttft_p50_ms"], 1e-9)),
+        "throughput_ratio": (aware["throughput_rps"] /
+                             max(blind["throughput_rps"], 1e-9)),
+    }
+    if verbose:
+        print(f"== cluster-wide KV reuse ({replicas} replicas, "
+              f"{groups} prefix groups) ==")
+        print(f"  blind (least-loaded): TTFT p99={blind['ttft_p99_ms']:7.1f}ms "
+              f"p50={blind['ttft_p50_ms']:6.1f}ms "
+              f"hit-rate={blind['prefix_hit_rate']*100:.1f}% "
+              f"thr={blind['throughput_rps']:.3f}rps")
+        print(f"  cache-aware routing : TTFT p99={aware['ttft_p99_ms']:7.1f}ms "
+              f"p50={aware['ttft_p50_ms']:6.1f}ms "
+              f"hit-rate={aware['prefix_hit_rate']*100:.1f}% "
+              f"thr={aware['throughput_rps']:.3f}rps "
+              f"({aware['routing']['routed_cache']} cache-routed)")
+        print(f"  TTFT p99 improvement: {out['ttft_p99_ratio']:.2f}x "
+              f"at x{out['throughput_ratio']:.3f} throughput "
+              f"(>= 1.5x expected at equal throughput)")
+    return out
+
+
 def run_spec(duration=600.0, qps=1.0, seed=0, spec_k=4, max_new=32,
              templates=4, verbose=True):
     """Speculative-decode A/B on the paged backend at the calibrated
@@ -358,10 +555,12 @@ def run_spec(duration=600.0, qps=1.0, seed=0, spec_k=4, max_new=32,
     traffic (``max_new`` tokens per request) in two traces:
 
     * **repetitive/templated**: requests draw from a few fixed prompt
-      templates; each template's completion is primed off-clock and later
-      requests carry it as ``draft_hints`` (response replay), so the
-      n-gram drafter proposes and the fused ragged step verifies
-      multi-token bursts.  The structural win shows in the decode
+      templates; each template's first completion lands in the ENGINE'S
+      response cache (primed off-clock here, so the steady state is
+      measured), and later requests arrive with NO client hints — the
+      scheduler primes ``draft_hints`` itself at submit, so the n-gram
+      drafter proposes and the fused ragged step verifies multi-token
+      bursts without any frontend cooperation.  The structural win shows in the decode
       CADENCE: per-request TPOT p99 (the ITL/TPOT family's per-token
       side) drops by the burst factor, and the emission-gap ITL p50
       collapses to ~0 (burst tails land together).  The emission-gap p99
@@ -393,7 +592,8 @@ def run_spec(duration=600.0, qps=1.0, seed=0, spec_k=4, max_new=32,
                 duration=duration, qps=qps, seed=seed,
                 with_controller=False, compute_scale_7b=scale,
                 backend="paged", spec_k=k, templated=ntempl,
-                max_new=max_new, denoise=shared_min)
+                max_new=max_new, denoise=shared_min,
+                response_cache=bool(ntempl))
     rep_s, rep_n = arms[("repetitive", "spec")], \
         arms[("repetitive", "no_spec")]
     rnd_s, rnd_n = arms[("random", "spec")], arms[("random", "no_spec")]
@@ -407,6 +607,9 @@ def run_spec(duration=600.0, qps=1.0, seed=0, spec_k=4, max_new=32,
         "repetitive": {"spec": rep_s, "no_spec": rep_n},
         "random": {"spec": rnd_s, "no_spec": rnd_n},
         "accept_rate": rep_s["accept_rate"],
+        # self-priming check: every templated request should hit the
+        # engine-side response cache (no client hints are sent)
+        "response_cache_hit_rate": rep_s["response_cache_hit_rate"],
         # the ITL/TPOT family, both sides: per-request decode-cadence p99
         # (TPOT — a speculative burst's size divides it: the structural
         # per-token win) and emission-gap percentiles (a burst's tokens
@@ -488,9 +691,13 @@ def _maybe_dump(out, json_path):
 
 
 def main(verbose=True, backend="dense", shared_prefix=False, spec=False,
-         duration=1800.0, json_path=None):
+         duration=1800.0, json_path=None, replicas=0):
     if verbose:
         print("== LLM serving case study (vLLM-style, OLMo-2-7B) ==")
+    if replicas:
+        return _maybe_dump(run_kv_reuse(duration=duration,
+                                        replicas=replicas,
+                                        verbose=verbose), json_path)
     if spec:
         return _maybe_dump(run_spec(duration=duration, verbose=verbose),
                            json_path)
@@ -528,6 +735,11 @@ if __name__ == "__main__":
                          "repetitive/templated vs random decode-heavy "
                          "traces, spec on vs off, reporting accept rate "
                          "plus ITL p99 and throughput deltas")
+    ap.add_argument("--replicas", type=int, default=0,
+                    help="cluster-wide KV reuse A/B arm: N paged replicas "
+                         "behind one dispatcher, cache-aware routing vs "
+                         "blind least-loaded on the same shared-prefix-"
+                         "group trace (0 = off)")
     ap.add_argument("--duration", type=float, default=1800.0,
                     help="virtual-time seconds per run (CI uses a short "
                          "duration)")
@@ -535,4 +747,5 @@ if __name__ == "__main__":
                     help="write the result dict to this JSON file")
     args = ap.parse_args()
     main(backend=args.backend, shared_prefix=args.shared_prefix,
-         spec=args.spec, duration=args.duration, json_path=args.json)
+         spec=args.spec, duration=args.duration, json_path=args.json,
+         replicas=args.replicas)

@@ -13,6 +13,17 @@ additionally enables speculative multi-token decode lanes (n-gram
 prompt-lookup drafts verified in the fused ragged step, adaptive per-lane
 depth).
 
+Replica dispatch is cache-aware by default: every paged replica
+publishes its prefix cache into a per-tenant content-hash
+``PrefixDirectory`` and requests route to the replica holding the
+longest prefix of their prompt, falling back to least-loaded when the
+directory misses, lags (``--route-staleness``), or the target's queue
+lead exceeds ``--route-imbalance``.  ``--route load`` restores blind
+least-loaded dispatch (the A/B baseline).  A per-tenant
+``ResponseCache`` shared across replicas additionally primes
+``draft_hints`` for repeated prompts (``--no-response-cache`` to
+disable; only drafts anything when ``--spec-k`` > 0).
+
 Runs one continuous-batching engine per tenant-replica on the reduced
 config, all sharing a FabricState (the PS fabric model injects PCIe-class
 interference when --interfere is set), with the multi-tenancy controller
@@ -35,10 +46,16 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
           num_tenants: int = 1, replicas: int = 1, interfere: bool = False,
           with_controller: bool = True, seed: int = 0, verbose: bool = True,
           admit: int = 0, backend: str = "dense", kv_dtype: str = "auto",
-          prefix_cache: bool = True, spec_k: int = 0):
+          prefix_cache: bool = True, spec_k: int = 0, route: str = "cache",
+          route_imbalance: int = 4, route_staleness: int = 256,
+          response_cache: bool = True):
     """Virtual-time multi-tenant serving run; returns per-tenant stats."""
+    from collections import deque
+
     import numpy as np
     from repro.configs.base import get_config, reduced
+    from repro.serving.directory import (CacheAwareRouter, PrefixDirectory,
+                                         ResponseCache, RouterConfig)
     from repro.serving.engine import ServingEngine
     from repro.serving.request import Request
     from repro.serving.actuator import FabricState, ServingActuator
@@ -55,18 +72,49 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
 
     if num_tenants < 1 or replicas < 1:
         raise SystemExit("--tenants and --replicas must be >= 1")
+    if route not in ("cache", "load"):
+        raise SystemExit("--route must be 'cache' or 'load'")
     cfg = reduced(get_config(arch))
+    paged = backend == "paged"
     names = ["T1"] if num_tenants == 1 else [f"L{i}"
                                              for i in range(num_tenants)]
     # spec_k is passed unconditionally: requesting speculation on the
     # dense backend must hit the engine's ValueError, not silently no-op
     eng_kw = dict(max_slots=slots, seq_cap=128, backend=backend,
                   spec_k=spec_k)
-    if backend == "paged":
+    if paged:
         eng_kw.update(kv_dtype=kv_dtype, prefix_cache=prefix_cache)
-    engines = {name: [ServingEngine(cfg, seed=seed + 17 * i + j, **eng_kw)
+    # one response cache per tenant, SHARED across its replicas: a
+    # completion on any replica primes speculation fleet-wide
+    rcaches = {}
+
+    def tenant_kw(name):
+        kw = dict(eng_kw)
+        if paged and response_cache:
+            kw["response_cache"] = rcaches.setdefault(name, ResponseCache())
+        return kw
+
+    engines = {name: [ServingEngine(cfg, seed=seed + 17 * i + j,
+                                    **tenant_kw(name))
                       for j in range(replicas)]
                for i, name in enumerate(names)}
+    # cluster-wide KV reuse: every paged replica publishes its prefix
+    # cache into a per-tenant content-hash directory, and dispatch
+    # routes to the longest held prefix (least-loaded on fallback).
+    # Dense engines never publish, so their lookups all miss and the
+    # router degrades to exactly the old least-loaded dispatch.
+    directory = PrefixDirectory(page_size=16)
+    rcfg = RouterConfig(imbalance_bound=route_imbalance,
+                        staleness_bound=route_staleness)
+
+    def wire_tenant(name):
+        for j, eng in enumerate(engines[name]):
+            if eng.runtime is not None:
+                directory.attach(name, j, eng.kv)
+        return CacheAwareRouter(directory, name, rcfg,
+                                cache_aware=route == "cache")
+
+    routers = {name: wire_tenant(name) for name in names}
     fabric = FabricState()
     fabric.t2_active = interfere
     topo = make_p4d_cluster(2)
@@ -144,13 +192,29 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
     rng = np.random.default_rng(seed)
     reqs = {name: [] for name in names}
     pending = {}
+    # paged traffic draws each prompt as a shared per-tenant template
+    # prefix (page-aligned, so replicas publish identical chain hashes)
+    # plus a random tail — the workload shape cache-aware routing is
+    # for.  Dense traffic keeps synthetic prompts (tokens unused).
+    tmpl_len = (prompt_len * 2 // 3) // 16 * 16 if paged else 0
+
+    def make_prompt(templates):
+        if templates is None:
+            return None
+        head = templates[int(rng.integers(len(templates)))]
+        tail = rng.integers(0, cfg.vocab_size, prompt_len - tmpl_len)
+        return np.concatenate([head, tail]).astype(np.int64)
 
     def gen_traffic(name, start=0.0):
+        templates = (rng.integers(0, cfg.vocab_size, (4, tmpl_len))
+                     if tmpl_len else None)
         arrivals = start + np.cumsum(rng.exponential(1.0 / qps, requests))
         reqs[name] = [Request(req_id=i, tenant=name, prompt_len=prompt_len,
                               max_new_tokens=max_new, arrival=float(t),
-                              slo_ms=200.0) for i, t in enumerate(arrivals)]
-        pending[name] = list(reqs[name])
+                              slo_ms=200.0,
+                              prompt_tokens=make_prompt(templates))
+                      for i, t in enumerate(arrivals)]
+        pending[name] = deque(reqs[name])
 
     for name in names:
         gen_traffic(name)
@@ -168,22 +232,24 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
 
     # ---- §2.3 admission path: K late tenants arrive mid-run ----------
     admission = None
-    admit_events = []
+    admit_events = deque()
     admission_log = []
     if admit > 0:
         admission = AdmissionController(topo, registry, ledger,
                                         AdmissionConfig())
         span = requests / qps
-        admit_events = [(span * 0.3 + j * max(1.0, 1.0 / qps),
-                         TenantSpec(name=f"A{j}", replicas=1, rate=qps,
-                                    slo_s=0.200, priority=1.0))
-                        for j in range(admit)]
+        admit_events = deque(
+            (span * 0.3 + j * max(1.0, 1.0 / qps),
+             TenantSpec(name=f"A{j}", replicas=1, rate=qps,
+                        slo_s=0.200, priority=1.0))
+            for j in range(admit))
 
     def on_admitted(spec, slots_, t):
         name = spec.name
         names.append(name)
         engines[name] = [ServingEngine(cfg, seed=seed + 1000 + len(names),
-                                       **eng_kw)]
+                                       **tenant_kw(name))]
+        routers[name] = wire_tenant(name)
         actuator.engines[name] = engines[name]
         actuator.compute_scales.setdefault(name, 1.0)
         actuator.pauses.setdefault(name, 0.0)
@@ -206,7 +272,7 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
 
     def run_admissions():
         while admit_events and admit_events[0][0] <= now[0]:
-            t, spec = admit_events.pop(0)
+            t, spec = admit_events.popleft()
             verdict, slots_ = admission.decide(spec, now=t)
             admission_log.append((t, spec.name, verdict.value))
             if verdict == AdmissionVerdict.ADMIT:
@@ -222,17 +288,16 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
 
     def submit_due():
         for name in names:
-            while pending[name] and pending[name][0].arrival <= now[0]:
-                r = pending[name].pop(0)
+            q = pending[name]
+            while q and q[0].arrival <= now[0]:
+                r = q.popleft()
                 if r.arrival < actuator.paused_until(name):
                     shed[name] += 1         # load-shed during reconfigs
                     continue
-                # least-loaded replica dispatch
+                # cache-aware replica dispatch (least-loaded fallback)
                 engs = engines[name]
-                j = min(range(len(engs)),
-                        key=lambda k: len(engs[k].queue) +
-                        len(engs[k].active()))
-                engs[j].submit(r)
+                loads = [len(e.queue) + len(e.active()) for e in engs]
+                engs[routers[name].route(r, loads)].submit(r)
 
     def has_pending():
         return bool(admit_events) or any(pending[n] for n in names) or \
@@ -316,6 +381,19 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
                   f"TTFT p50={out[name]['ttft_p50_ms']:.1f}ms "
                   f"p99={out[name]['ttft_p99_ms']:.1f}ms "
                   f"ITL p99={out[name]['itl_p99_ms']:.1f}ms")
+    out["routing"] = {name: routers[name].stats.as_dict() for name in names}
+    if paged:
+        out["directory"] = directory.stats.as_dict()
+        if rcaches:
+            out["response_cache"] = {
+                name: {"hit_rate": rc.hit_rate(), "entries": len(rc)}
+                for name, rc in rcaches.items()}
+        if verbose:
+            routed = sum(r.stats.routed_cache for r in routers.values())
+            total = sum(r.stats.total for r in routers.values())
+            print(f"routing: {routed}/{total} cache-routed "
+                  f"(directory hit rate "
+                  f"{directory.stats.hit_rate():.2f})")
     if admission is not None:
         out["admission"] = {"verdicts": admission.counts(),
                             "log": admission_log,
@@ -358,6 +436,19 @@ def main():
                     help="paged backend: max speculative draft tokens per "
                          "decode lane (n-gram prompt-lookup drafter, "
                          "verified in the fused ragged step; 0 = off)")
+    ap.add_argument("--route", choices=("cache", "load"), default="cache",
+                    help="replica dispatch: route-to-longest-held-prefix "
+                         "via the prefix directory ('cache') or pure "
+                         "least-loaded ('load')")
+    ap.add_argument("--route-imbalance", type=int, default=4,
+                    help="max load lead of the cache-route target over "
+                         "the least-loaded replica before falling back")
+    ap.add_argument("--route-staleness", type=int, default=256,
+                    help="max pending directory events before routing "
+                         "falls back to least-loaded")
+    ap.add_argument("--no-response-cache", action="store_true",
+                    help="disable the per-tenant response cache that "
+                         "self-primes speculative draft hints")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     serve(arch=args.arch, requests=args.requests, qps=args.qps,
@@ -366,7 +457,10 @@ def main():
           replicas=args.replicas, interfere=args.interfere,
           with_controller=not args.no_controller, seed=args.seed,
           admit=args.admit, backend=args.backend, kv_dtype=args.kv_dtype,
-          prefix_cache=not args.no_prefix_cache, spec_k=args.spec_k)
+          prefix_cache=not args.no_prefix_cache, spec_k=args.spec_k,
+          route=args.route, route_imbalance=args.route_imbalance,
+          route_staleness=args.route_staleness,
+          response_cache=not args.no_response_cache)
 
 
 if __name__ == "__main__":

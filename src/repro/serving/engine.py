@@ -85,7 +85,8 @@ class ServingEngine:
                  chunk_tokens: Optional[int] = None,
                  step_tokens: Optional[int] = None, attn_impl: str = "auto",
                  kv_dtype: str = "auto", prefix_cache: bool = True,
-                 spec_k: int = 0, spec_ngram: int = 3):
+                 spec_k: int = 0, spec_ngram: int = 3,
+                 response_cache=None):
         if backend not in ("dense", "paged"):
             raise ValueError(f"unknown backend {backend!r}")
         if kv_dtype != "auto" and backend == "dense":
@@ -96,6 +97,24 @@ class ServingEngine:
             raise ValueError(
                 "speculative decode lanes (spec_k) need the paged "
                 "runtime's ragged verify step; use backend='paged'")
+        if response_cache is not None and response_cache is not False \
+                and backend == "dense":
+            raise ValueError(
+                "the response cache primes speculative draft hints at "
+                "submit, which needs the paged scheduler; use "
+                "backend='paged'")
+        # response_cache: None/False = off, True = a private cache,
+        # or a serving/directory.ResponseCache instance — pass ONE
+        # instance to every replica of a tenant so a completion on any
+        # replica primes speculation fleet-wide.  Identity checks, not
+        # truthiness: an EMPTY cache instance is falsy (len() == 0) but
+        # very much wanted.
+        if response_cache is True:
+            from repro.serving.directory import ResponseCache
+            response_cache = ResponseCache()
+        elif response_cache is False:
+            response_cache = None
+        self.response_cache = response_cache
         self.cfg = cfg
         self.model = Model(cfg)
         self.policy = policy
@@ -116,7 +135,8 @@ class ServingEngine:
                 chunk_tokens=chunk_tokens, step_tokens=step_tokens,
                 policy=policy, attn_impl=attn_impl, kv_dtype=kv_dtype,
                 prefix_cache=prefix_cache, spec_k=spec_k,
-                spec_ngram=spec_ngram, seed=seed)
+                spec_ngram=spec_ngram, response_cache=self.response_cache,
+                seed=seed)
             self.kv = self.runtime.kv
             # the scheduler's waiting deque doubles as the engine queue
             # (same object for the lifetime of the engine, so load-based
@@ -182,6 +202,9 @@ class ServingEngine:
                                      report.prefix_hit_tokens)
         self.metrics.observe_spec(report.drafted_tokens,
                                   report.accepted_tokens)
+        if self.runtime is not None:
+            self.metrics.observe_response_cache(self.runtime.sched.rc_lookups,
+                                                self.runtime.sched.rc_hits)
         return report
 
     def _step_backend(self) -> StepReport:

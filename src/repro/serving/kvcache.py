@@ -67,6 +67,14 @@ class PagedKVCache:
         self.prefix_index: Dict[tuple, int] = {}   # chain key -> page
         self.page_key: Dict[int, tuple] = {}       # page -> chain key
         self.cached: "OrderedDict[int, None]" = OrderedDict()  # LRU, ref==0
+        # optional event sink (duck-typed: ``on_commit(chain_key,
+        # upto_tokens)`` / ``on_evict(chain_key)``) — the cluster-wide
+        # PrefixDirectory subscribes here so the dispatcher learns which
+        # replica holds which page-aligned prefix.  Events fire when an
+        # index entry is born (commit_prefix) or dies (cached-page
+        # eviction); a listener that lags is stale-but-SAFE: routing on
+        # stale holdings only costs a prefix-cache miss, never a token
+        self.listener = None
 
     # -- allocation ---------------------------------------------------------
     def can_admit(self, prompt_len: int, max_new: int) -> bool:
@@ -87,6 +95,8 @@ class PagedKVCache:
             page, _ = self.cached.popitem(last=False)
             key = self.page_key.pop(page)
             del self.prefix_index[key]
+            if self.listener is not None:
+                self.listener.on_evict(key)
         else:
             raise MemoryError("KV page pool exhausted")
         self.ref[page] = 1
@@ -258,6 +268,8 @@ class PagedKVCache:
                 continue
             self.prefix_index[key] = page
             self.page_key[page] = key
+            if self.listener is not None:
+                self.listener.on_commit(key, (p + 1) * self.page_size)
 
     # -- views --------------------------------------------------------------
     def block_table(self, seq_id: int, pages_per_seq: int) -> np.ndarray:

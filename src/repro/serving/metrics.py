@@ -103,6 +103,58 @@ class EMA:
 
 
 @dataclass
+class DirectoryStats:
+    """Cluster prefix-cache directory counters (``serving/directory.py``):
+    publish/retract event totals plus lookup hit rate — a *hit* is a
+    dispatch-time lookup that found at least one replica holding a
+    page-aligned prefix of the request's prompt."""
+    published: int = 0
+    retracted: int = 0
+    lookups: int = 0
+    hits: int = 0
+
+    def hit_rate(self) -> float:
+        if not self.lookups:
+            return 0.0
+        return self.hits / self.lookups
+
+    def as_dict(self) -> Dict[str, float]:
+        return {"published": self.published, "retracted": self.retracted,
+                "lookups": self.lookups, "hits": self.hits,
+                "hit_rate": self.hit_rate()}
+
+
+@dataclass
+class RoutingStats:
+    """Cache-aware dispatch counters: every routing decision is exactly
+    one of these, so routed + fallbacks + blind == requests dispatched
+    (the routed-vs-fallback invariant the tests assert)."""
+    routed_cache: int = 0          # sent to a prefix-holding replica
+    routed_blind: int = 0          # cache_aware=False baseline decisions
+    fallback_miss: int = 0         # no replica holds any prefix
+    fallback_imbalance: int = 0    # holder's load lead exceeded the bound
+    fallback_stale: int = 0        # directory backlog exceeded the bound
+
+    @property
+    def total(self) -> int:
+        return (self.routed_cache + self.routed_blind + self.fallback_miss
+                + self.fallback_imbalance + self.fallback_stale)
+
+    def cache_route_rate(self) -> float:
+        if not self.total:
+            return 0.0
+        return self.routed_cache / self.total
+
+    def as_dict(self) -> Dict[str, float]:
+        return {"routed_cache": self.routed_cache,
+                "routed_blind": self.routed_blind,
+                "fallback_miss": self.fallback_miss,
+                "fallback_imbalance": self.fallback_imbalance,
+                "fallback_stale": self.fallback_stale,
+                "cache_route_rate": self.cache_route_rate()}
+
+
+@dataclass
 class TenantMetrics:
     """Bundle of per-tenant signals the controller samples every delta s."""
     latency: LatencyWindow = field(default_factory=LatencyWindow)
@@ -131,6 +183,12 @@ class TenantMetrics:
     # benchmark arm reports, and the adaptive-k policy's global analogue
     drafted_tokens_total: int = 0
     accepted_tokens_total: int = 0
+    # response cache (paged backend): submits that consulted the
+    # engine's ResponseCache vs those that found a cached completion
+    # and self-primed draft_hints — the templated-traffic lever that
+    # turns speculation on without client cooperation
+    response_cache_lookups: int = 0
+    response_cache_hits: int = 0
 
     def observe_tokens(self, now: float, n: int) -> None:
         self.throughput_window.append((now, n))
@@ -142,6 +200,18 @@ class TenantMetrics:
     def observe_spec(self, drafted: int, accepted: int) -> None:
         self.drafted_tokens_total += drafted
         self.accepted_tokens_total += accepted
+
+    def observe_response_cache(self, lookups: int, hits: int) -> None:
+        """Latest cumulative prime counters (engine-local, so a cache
+        shared across replicas still yields per-engine rates)."""
+        self.response_cache_lookups = lookups
+        self.response_cache_hits = hits
+
+    def response_hit_rate(self) -> float:
+        """Fraction of cache-consulting submits that self-primed."""
+        if not self.response_cache_lookups:
+            return 0.0
+        return self.response_cache_hits / self.response_cache_lookups
 
     def accept_rate(self) -> float:
         """Fraction of speculative draft tokens the model accepted."""

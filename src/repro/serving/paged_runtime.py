@@ -71,7 +71,8 @@ from repro.models.model import _apply_ffn, _logits, embed_tokens
 from repro.serving.engine import StepReport
 from repro.serving.kvcache import PagedKVCache
 from repro.serving.request import Request
-from repro.serving.sched import PagedScheduler, SchedConfig
+from repro.serving.sched import (PagedScheduler, SchedConfig, bucket_rows,
+                                 next_pow2)
 
 
 def paged_unsupported_reason(cfg: ModelConfig) -> Optional[str]:
@@ -92,17 +93,10 @@ def paged_unsupported_reason(cfg: ModelConfig) -> Optional[str]:
     return None
 
 
-def _next_pow2(n: int) -> int:
-    return 1 << max(0, (n - 1).bit_length())
-
-
-def _bucket_rows(n: int) -> int:
-    """Row-count bucket for the flattened mixed batch: powers of two up to
-    16, then 16-token granules — bounded compile variants with <= 2x (and
-    typically ~1.1x) padding waste."""
-    if n <= 16:
-        return _next_pow2(n)
-    return -(-n // 16) * 16
+# row/width bucketing lives in serving/sched.py (the draft planner is
+# bucket-aware: rows riding the padding are funded at zero budget cost)
+_next_pow2 = next_pow2
+_bucket_rows = bucket_rows
 
 
 class PagedRuntime:
@@ -117,7 +111,7 @@ class PagedRuntime:
                  policy: ShardPolicy = NO_POLICY, attn_impl: str = "auto",
                  kv_dtype: str = "auto", prefix_cache: bool = True,
                  spec_k: int = 0, spec_ngram: int = 3,
-                 seed: int = 0):
+                 response_cache=None, seed: int = 0):
         reason = paged_unsupported_reason(cfg)
         if reason is not None:
             raise ValueError(
@@ -148,7 +142,8 @@ class PagedRuntime:
             self.kv, SchedConfig(chunk_tokens=self.chunk,
                                  max_active=max_slots,
                                  step_tokens=step_tokens,
-                                 spec_k=spec_k, spec_ngram=spec_ngram))
+                                 spec_k=spec_k, spec_ngram=spec_ngram),
+            response_cache=response_cache)
         self.pools = self._init_pools()
         # donate the pools so the per-step KV scatter updates in place
         # (without aliasing every step would copy the whole page pool,

@@ -71,6 +71,22 @@ from repro.serving.request import Request
 _INF = float("inf")
 
 
+def next_pow2(n: int) -> int:
+    return 1 << max(0, (n - 1).bit_length())
+
+
+def bucket_rows(n: int) -> int:
+    """Row-count bucket for the flattened mixed batch: powers of two up
+    to 16, then 16-token granules — bounded compile variants with <= 2x
+    (and typically ~1.1x) padding waste.  Lives here (host-side, no jax)
+    because the draft planner is bucket-aware: rows the runtime would
+    pad anyway are compute-free and may carry draft tokens at zero
+    step-budget cost."""
+    if n <= 16:
+        return next_pow2(n)
+    return -(-n // 16) * 16
+
+
 @dataclass
 class SchedConfig:
     chunk_tokens: int = 64        # per-seq prefill chunk cap per step
@@ -90,6 +106,12 @@ class SchedConfig:
     # when the EMA has driven a lane's k to 0, re-probe with a 1-token
     # draft every this-many verify opportunities (distribution shift)
     spec_probe_every: int = 32
+    # bucket-boundary-aware draft funding: the runtime pads the step's
+    # packed rows up to the (rows) compile bucket, so a draft row that
+    # rides existing padding costs NO extra compute — fund those at zero
+    # step-token cost even when the leftover budget is exhausted (the
+    # step's bucket, and therefore its cost, is unchanged by them)
+    spec_free_padding: bool = True
 
 
 class NgramDrafter:
@@ -205,6 +227,7 @@ class MixedPlan:
     preempted: List[SeqState] = field(default_factory=list)
     prefix_hit_tokens: int = 0                # matched while planning
     draft_tokens: int = 0                     # speculative rows this step
+    free_draft_tokens: int = 0                # drafts riding bucket padding
 
     @property
     def total_tokens(self) -> int:
@@ -233,12 +256,20 @@ class PagedScheduler:
     decode-active set, and all page accounting against one PagedKVCache."""
 
     def __init__(self, kv: PagedKVCache, cfg: SchedConfig,
-                 drafter: Optional[NgramDrafter] = None):
+                 drafter: Optional[NgramDrafter] = None,
+                 response_cache=None):
         self.kv = kv
         self.cfg = cfg
         # injectable for tests (oracle / adversarial drafters); the
         # default is the model-free prompt-lookup drafter
         self.drafter = drafter or NgramDrafter(cfg.spec_ngram)
+        # optional serving/directory.ResponseCache (may be shared across
+        # replicas): completed outputs are recorded, and later identical
+        # submits self-prime draft_hints — templated traffic then rides
+        # the speculative verify path with no client-supplied hints
+        self.response_cache = response_cache
+        self.rc_lookups = 0        # engine-local prime counters (the
+        self.rc_hits = 0           # cache object's own are fleet-wide)
         self.waiting: Deque[SeqState] = deque()
         self.prefilling: List[SeqState] = []
         self.active: List[SeqState] = []
@@ -253,6 +284,10 @@ class PagedScheduler:
         total = req.prompt_len + req.max_new_tokens
         if self.kv.pages_needed(total) > self.kv.num_pages:
             return False
+        if self.response_cache is not None and req.draft_hints is None \
+                and req.prompt_tokens is not None:
+            self.rc_lookups += 1
+            self.rc_hits += bool(self.response_cache.prime(req))
         self.waiting.append(SeqState(req))
         return True
 
@@ -324,22 +359,34 @@ class PagedScheduler:
         plan.prefills = [(s, a, c) for (s, a, c) in plan.prefills
                          if s in self.prefilling]
         # speculative drafts LAST: only the budget neither decode lanes
-        # nor prefill chunks claimed may fund draft rows, so speculation
+        # nor prefill chunks claimed may fund draft rows — plus rows the
+        # runtime's bucket padding makes compute-free — so speculation
         # never starves either (under saturation it self-disables)
-        plan.draft_tokens = self._plan_drafts(plan.decodes, budget)
+        base_rows = len(plan.decodes) + sum(c for _, _, c in plan.prefills)
+        plan.draft_tokens, plan.free_draft_tokens = \
+            self._plan_drafts(plan.decodes, budget, base_rows)
         return plan
 
     # ------------------------------------------------------------- drafting
-    def _plan_drafts(self, decodes: List[SeqState], budget: int) -> int:
+    def _plan_drafts(self, decodes: List[SeqState], budget: int,
+                     base_rows: int) -> Tuple[int, int]:
         """Attach a draft (``seq.draft``) to each decode lane, bounded by
         the lane's adaptive k and the LEFTOVER step budget, round-robin so
-        one lane cannot monopolise the speculative share.  Draft page
+        one lane cannot monopolise the speculative share.  A draft row
+        that would not push the step past its current (rows) compile
+        bucket rides the padding the runtime pays for anyway — it is
+        funded at ZERO budget cost (``spec_free_padding``), so even a
+        fully-claimed budget drafts for free up to the bucket boundary.
+        Returns (total draft rows, rows funded by padding).  Draft page
         reservations never evict anyone: on pool pressure the draft is
         trimmed instead (speculation is opportunistic by contract)."""
         for seq in decodes:
             seq.draft = []
-        if self.cfg.spec_k <= 0 or budget <= 0 or not decodes:
-            return 0
+        if self.cfg.spec_k <= 0 or not decodes:
+            return 0, 0
+        free_ok = self.cfg.spec_free_padding
+        if budget <= 0 and not free_ok:
+            return 0, 0
         want: List[Tuple[SeqState, List[int]]] = []
         for seq in decodes:
             k = self._adaptive_k(seq)
@@ -354,22 +401,39 @@ class PagedScheduler:
             if d:
                 want.append((seq, d))
         total = 0
+        free = 0
+        # the step's own token budget already pays for this compile
+        # bucket; drafts may fill it but never grow the device batch
+        # past it (budgeted rows could otherwise open the NEXT bucket
+        # and padding would then "freely" fill that too, blowing the
+        # per-step compute ceiling the budget exists to bound)
+        ceiling = bucket_rows(base_rows + max(budget, 0))
         progressed = True
-        while budget > 0 and progressed:     # round-robin, one row per
+        while progressed:                    # round-robin, one row per
             progressed = False               # lane per pass
             for seq, d in want:
-                if budget <= 0:
+                # padding first: a free ride never crosses the bucket
+                # boundary, so it preserves budget for rows that must
+                rows = base_rows + total
+                if rows + 1 > ceiling:
                     break
+                is_free = free_ok and bucket_rows(rows + 1) == \
+                    bucket_rows(rows)
+                if not is_free and budget <= 0:
+                    continue
                 # each lane extends its own contiguous prefix (a failed
                 # reservation stays failed within this plan — the free
                 # list only shrinks — so the lane just stops growing)
                 depth = len(seq.draft)
                 if depth < len(d) and self._reserve_draft(seq, depth + 1):
                     seq.draft.append(d[depth])
-                    budget -= 1
+                    if is_free:
+                        free += 1
+                    else:
+                        budget -= 1
                     total += 1
                     progressed = True
-        return total
+        return total, free
 
     def _adaptive_k(self, seq: SeqState) -> int:
         """Acceptance-EMA-driven draft depth.  EMA -> 0 turns the lane's
@@ -541,3 +605,8 @@ class PagedScheduler:
             self.kv.release(seq.req.req_id)
         if seq in self.active:
             self.active.remove(seq)
+        if self.response_cache is not None:
+            # record only finished outputs: greedy decode makes the
+            # committed token sequence a pure function of (prompt,
+            # params), so the entry is safe to replay as draft hints
+            self.response_cache.record(seq.req)

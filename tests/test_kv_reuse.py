@@ -1,0 +1,417 @@
+"""Cluster-wide KV reuse: content-hash prefix directory (kvcache chain
+keys <-> dispatcher-side prompt hashes), cache-aware routing (route-to-
+longest-held-prefix, bounded fallbacks, strict total-order tie-breaks,
+token parity under stale directories), the response cache that
+self-primes speculation, and bucket-boundary-aware draft funding — all
+host-side except the engine-level end-to-end checks."""
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, reduced
+from repro.serving.directory import (CacheAwareRouter, PrefixDirectory,
+                                     ResponseCache, RouterConfig,
+                                     chain_key_hash, prefix_hashes,
+                                     prompt_hash)
+from repro.serving.engine import ServingEngine
+from repro.serving.kvcache import PagedKVCache
+from repro.serving.request import Request
+from repro.serving.sched import (PagedScheduler, SchedConfig, SeqState,
+                                 bucket_rows)
+
+from test_paged_runtime import assert_no_leaks, drain
+
+CFG = reduced(get_config("stablelm_3b")).replace(dtype="float32")
+
+
+def make_req(req_id, prompt_tokens, max_new, hints=None, **kw):
+    return Request(req_id=req_id, tenant="T1",
+                   prompt_len=len(prompt_tokens), max_new_tokens=max_new,
+                   arrival=0.0, prompt_tokens=np.asarray(prompt_tokens),
+                   draft_hints=(np.asarray(hints) if hints is not None
+                                else None), **kw)
+
+
+def paged_engine(**kw):
+    kw.setdefault("max_slots", 4)
+    kw.setdefault("seq_cap", 96)
+    kw.setdefault("page_size", 8)
+    kw.setdefault("chunk_tokens", 16)
+    kw.setdefault("attn_impl", "ref")
+    kw.setdefault("seed", 0)
+    return ServingEngine(CFG, backend="paged", **kw)
+
+
+# ------------------------------------------------------- content hashing
+def test_chain_key_hash_matches_prompt_side_hashes():
+    """The dispatcher (prefix_hashes over the prompt) and the kvcache
+    listener (chain_key_hash over the recursive chain key) must derive
+    identical hashes for identical content — that equality is the whole
+    directory contract."""
+    kv = PagedKVCache(num_pages=8, page_size=4)
+    toks = list(range(100, 116))
+    kv.allocate(1, prompt_len=16)
+    kv.commit_prefix(1, toks, 16)
+    assert set(chain_key_hash(k) for k in kv.prefix_index) == \
+        set(prefix_hashes(toks, 4))
+    # page-aligned full pages only: a partial page contributes nothing
+    assert prefix_hashes(toks[:6], 4) == prefix_hashes(toks[:4], 4)
+    assert len(prefix_hashes(toks, 4)) == 4
+    # chained: same last page after a different first page = new hash
+    other = [1] + toks[1:]
+    assert prefix_hashes(other, 4)[-1] != prefix_hashes(toks, 4)[-1]
+    kv.release(1)
+
+
+def test_prompt_hash_content_addressed():
+    a = prompt_hash([1, 2, 3])
+    assert a == prompt_hash(np.asarray([1, 2, 3], np.int64))
+    assert a != prompt_hash([1, 2, 4])
+
+
+# ----------------------------------------------------- directory events
+def test_directory_tracks_commit_and_eviction():
+    """Listener wiring end to end on a real kvcache: commit publishes,
+    cached-LRU eviction retracts, and lookup shrinks accordingly."""
+    d = PrefixDirectory(page_size=4)
+    kv = PagedKVCache(num_pages=4, page_size=4)
+    d.attach("T1", 0, kv)
+    toks = list(range(200, 216))
+    kv.allocate(1, prompt_len=16)
+    kv.commit_prefix(1, toks, 16)
+    assert d.stats.published == 4
+    assert d.lookup("T1", toks + [7]) == {0: 16}   # +1 token lifts the cap
+    assert d.lookup("T1", toks) == {0: 12}         # final-token cap
+    kv.release(1)                                  # park all 4 on the LRU
+    # a new allocation must evict cached pages -> retractions flow back
+    kv.allocate(2, prompt_len=8)
+    assert d.stats.retracted >= 2
+    held = d.lookup("T1", toks + [7])
+    assert held.get(0, 0) < 16, "directory kept holdings past eviction"
+    kv.release(2)
+
+
+def test_defer_events_staleness_and_sync():
+    d = PrefixDirectory(page_size=4, defer_events=True)
+    d.publish("T1", 0, 123)
+    d.publish("T1", 1, 123)
+    assert d.staleness() == 2
+    assert d.holders("T1", 123) == set()           # not yet applied
+    assert d.sync() == 2
+    assert d.staleness() == 0
+    assert d.holders("T1", 123) == {0, 1}
+    d.retract("T1", 0, 123)
+    assert d.staleness() == 1
+    d.sync()
+    assert d.holders("T1", 123) == {1}
+
+
+def test_lookup_longest_contiguous_prefix():
+    """A replica only counts up to the first missing page in ITS chain
+    (exactly what match_prefix would attach), and the final token is
+    always left uncovered."""
+    d = PrefixDirectory(page_size=4)
+    toks = list(range(16))
+    hs = prefix_hashes(toks, 4)
+    for h in hs[:2]:
+        d.publish("T1", 0, h)
+    for h in hs[:3]:
+        d.publish("T1", 1, h)
+    d.publish("T1", 2, hs[2])                      # gap: page 3 only
+    assert d.lookup("T1", toks) == {0: 8, 1: 12}
+    assert d.lookup("T1", toks[:3]) == {}          # sub-page prompt
+    d.stats.lookups = d.stats.hits = 0
+    d.lookup("T1", toks)
+    d.lookup("T1", list(range(900, 916)))          # unknown content
+    assert (d.stats.lookups, d.stats.hits) == (2, 1)
+
+
+# --------------------------------------------------------------- routing
+def _route_req(toks):
+    return make_req(0, toks, 4)
+
+
+def test_router_routes_to_longest_holder():
+    d = PrefixDirectory(page_size=4)
+    toks = list(range(16))
+    hs = prefix_hashes(toks, 4)
+    d.publish("T1", 0, hs[0])
+    for h in hs[:3]:
+        d.publish("T1", 1, h)
+    r = CacheAwareRouter(d, "T1")
+    # replica 1 holds 12 tokens vs replica 0's 4 — even at a (bounded)
+    # load disadvantage the longest holder wins
+    assert r.route(_route_req(toks), [0, 2]) == 1
+    assert r.stats.routed_cache == 1
+
+
+def test_router_fallbacks_and_decision_invariant():
+    d = PrefixDirectory(page_size=4, defer_events=True)
+    toks = list(range(16))
+    hs = prefix_hashes(toks, 4)
+    for h in hs:
+        d.publish("T1", 1, h)
+    d.sync()
+    cfg = RouterConfig(imbalance_bound=4, staleness_bound=0)
+    r = CacheAwareRouter(d, "T1", cfg)
+    # holder too far behind the least-loaded -> imbalance fallback
+    assert r.route(_route_req(toks), [0, 6]) == 0
+    assert r.stats.fallback_imbalance == 1
+    # unknown content -> miss fallback
+    assert r.route(_route_req(list(range(50, 66))), [3, 1]) == 1
+    assert r.stats.fallback_miss == 1
+    # pending backlog beyond the bound -> stale fallback (no lookup)
+    d.publish("T1", 0, hs[0])
+    looked = d.stats.lookups
+    assert r.route(_route_req(toks), [3, 1]) == 1
+    assert r.stats.fallback_stale == 1
+    assert d.stats.lookups == looked, "stale router still hit the directory"
+    d.sync()
+    # blind baseline counts too
+    blind = CacheAwareRouter(d, "T1", cfg, cache_aware=False)
+    assert blind.route(_route_req(toks), [2, 1]) == 1
+    assert blind.stats.routed_blind == 1
+    # every decision is counted exactly once
+    assert r.stats.total == 3
+    assert r.stats.total == (r.stats.routed_cache + r.stats.routed_blind
+                             + r.stats.fallback_miss
+                             + r.stats.fallback_imbalance
+                             + r.stats.fallback_stale)
+
+
+def test_router_strict_total_order_tiebreaks():
+    """Held tokens, then load, then replica index — and identical traces
+    replay identically."""
+    d = PrefixDirectory(page_size=4)
+    toks = list(range(16))
+    for h in prefix_hashes(toks, 4):
+        for j in range(3):
+            d.publish("T1", j, h)
+    r = CacheAwareRouter(d, "T1")
+    # equal holdings, equal loads -> lowest index
+    assert r.route(_route_req(toks), [1, 1, 1]) == 0
+    # equal holdings -> load breaks the tie
+    assert r.route(_route_req(toks), [2, 1, 2]) == 1
+    # least-loaded itself tie-breaks on index
+    blind = CacheAwareRouter(d, "T1", cache_aware=False)
+    assert blind.route(_route_req(toks), [2, 0, 0]) == 1
+
+    def replay():
+        rr = CacheAwareRouter(d, "T1")
+        rng = np.random.default_rng(7)
+        picks = []
+        for _ in range(32):
+            loads = [int(x) for x in rng.integers(0, 4, 3)]
+            known = rng.random() < 0.5
+            req = _route_req(toks if known else
+                             [int(t) for t in rng.integers(100, 900, 16)])
+            picks.append(rr.route(req, loads))
+        return picks, rr.stats
+
+    p1, s1 = replay()
+    p2, s2 = replay()
+    assert p1 == p2 and s1 == s2
+
+
+def test_routing_token_parity_under_stale_directory():
+    """A directory claiming holdings that do not exist routes requests to
+    replicas that merely MISS their prefix cache: emitted tokens must be
+    identical to a single reference engine's, request for request."""
+    rng = np.random.default_rng(23)
+    prompts = [rng.integers(0, CFG.vocab_size, 24) for _ in range(4)]
+
+    ref = paged_engine()
+    refs = [make_req(i, p, 6) for i, p in enumerate(prompts)]
+    for r in refs:
+        assert ref.submit(r)
+    drain(ref)
+
+    engines = [paged_engine(), paged_engine()]
+    d = PrefixDirectory(page_size=8)
+    for j, eng in enumerate(engines):
+        d.attach("T1", j, eng.kv)
+    # poison the directory: replica 0 "holds" every prompt's first page
+    # (it holds nothing) — stale-but-safe means this only costs misses
+    for p in prompts:
+        d.publish("T1", 0, prefix_hashes(p, 8)[0])
+    router = CacheAwareRouter(d, "T1")
+    reqs = [make_req(i, p, 6) for i, p in enumerate(prompts)]
+    for r in reqs:
+        loads = [len(e.queue) + len(e.active()) for e in engines]
+        assert engines[router.route(r, loads)].submit(r)
+    for eng in engines:
+        drain(eng)
+    assert router.stats.routed_cache == len(reqs)   # every route was a lie
+    for got, want in zip(reqs, refs):
+        assert got.output_tokens == want.output_tokens
+    for eng in engines:
+        assert_no_leaks(eng)
+
+
+# -------------------------------------------------------- response cache
+def test_response_cache_key_includes_params():
+    rc = ResponseCache()
+    done = make_req(0, [1, 2, 3, 4], 8)
+    done.output_tokens = [9, 8, 7]
+    rc.record(done)
+    same = make_req(1, [1, 2, 3, 4], 8)
+    assert rc.prime(same)
+    assert list(same.draft_hints) == [9, 8, 7]
+    # same prompt, different generation params -> different key
+    other_params = make_req(2, [1, 2, 3, 4], 4)
+    assert not rc.prime(other_params)
+    assert other_params.draft_hints is None
+    # different tenant -> different key
+    other_tenant = make_req(3, [1, 2, 3, 4], 8)
+    other_tenant.tenant = "T2"
+    assert not rc.prime(other_tenant)
+    assert rc.hit_rate() == pytest.approx(1 / 3)
+
+
+def test_response_cache_never_overwrites_client_hints():
+    rc = ResponseCache()
+    done = make_req(0, [1, 2, 3, 4], 8)
+    done.output_tokens = [9, 8, 7]
+    rc.record(done)
+    client = make_req(1, [1, 2, 3, 4], 8, hints=[5, 5, 5])
+    assert not rc.prime(client)
+    assert list(client.draft_hints) == [5, 5, 5]
+    assert rc.lookups == 0, "a hinted request still consulted the cache"
+
+
+def test_response_cache_lru_eviction():
+    rc = ResponseCache(capacity=2)
+    for i in range(3):
+        done = make_req(i, [i, i + 1, i + 2, i + 3], 8)
+        done.output_tokens = [i]
+        rc.record(done)
+    assert len(rc) == 2 and rc.evictions == 1
+    assert not rc.prime(make_req(9, [0, 1, 2, 3], 8))     # oldest evicted
+    assert rc.prime(make_req(9, [2, 3, 4, 5], 8))
+    # empty outputs and token-less prompts are never recorded
+    rc.record(make_req(5, [7, 7, 7], 8))
+    nul = Request(req_id=6, tenant="T1", prompt_len=4, max_new_tokens=8,
+                  arrival=0.0)
+    nul.output_tokens = [1]
+    rc.record(nul)
+    assert len(rc) == 2
+
+
+def test_response_cache_self_primes_speculation_end_to_end():
+    """The headline loop: identical templated prompts, NO client hints —
+    the first completion is recorded at complete, the second submit is
+    primed at the scheduler, and the drafter replays it through the
+    verify path (accept rate > 0) with token-identical output."""
+    rng = np.random.default_rng(29)
+    prompt = rng.integers(0, CFG.vocab_size, 24)
+    eng = paged_engine(spec_k=4, response_cache=True)
+    cold = make_req(0, prompt, 8)
+    assert eng.submit(cold)
+    drain(eng)
+    assert cold.draft_hints is None                 # nothing to prime from
+    drafted_cold = eng.metrics.drafted_tokens_total
+
+    warm = make_req(1, prompt, 8)
+    assert eng.submit(warm)
+    assert warm.draft_hints is not None, "second submit was not primed"
+    assert list(warm.draft_hints) == cold.output_tokens
+    drain(eng)
+    assert warm.output_tokens == cold.output_tokens
+    m = eng.metrics
+    assert m.drafted_tokens_total > drafted_cold
+    assert m.accepted_tokens_total > 0
+    assert m.response_hit_rate() == pytest.approx(0.5)   # 1 hit / 2 lookups
+    assert_no_leaks(eng)
+
+
+def test_response_cache_on_dense_backend_rejected():
+    with pytest.raises(ValueError):
+        ServingEngine(CFG, backend="dense", response_cache=True)
+
+
+# --------------------------------------- bucket-boundary draft funding
+def _decode_lane(kv, i):
+    """An active decode lane with replay hints whose next draft the
+    n-gram drafter will propose (hint boundary pattern, as in the replay
+    workflow)."""
+    req = make_req(i, [100 + i, 11, 12, 13], 8, hints=[50, 51, 52])
+    req.output_tokens = [50]
+    req.generated = 1
+    kv.allocate(i, prompt_len=4)
+    seq = SeqState(req)
+    seq.prefilled = 4
+    seq.last_token = 50
+    return seq
+
+
+def test_padded_rows_draft_for_free_where_old_planner_declined():
+    """3 decode lanes under step_tokens=3: leftover budget is ZERO, so
+    the pre-padding planner drafted nothing — but the runtime pads 3
+    rows to the 4-row compile bucket anyway, so exactly one draft row
+    rides that padding at zero budget cost."""
+    assert bucket_rows(3) == 4 and bucket_rows(4) == 4
+
+    def plan_with(free_padding):
+        kv = PagedKVCache(num_pages=32, page_size=4)
+        sched = PagedScheduler(kv, SchedConfig(
+            spec_k=2, step_tokens=3, chunk_tokens=4, max_active=4,
+            spec_free_padding=free_padding))
+        for i in range(3):
+            sched.active.append(_decode_lane(kv, i))
+        return sched.plan()
+
+    old = plan_with(False)
+    assert (old.draft_tokens, old.free_draft_tokens) == (0, 0)
+    new = plan_with(True)
+    assert (new.draft_tokens, new.free_draft_tokens) == (1, 1)
+    # the free row filled the padding exactly: same compile bucket
+    assert bucket_rows(new.total_tokens) == bucket_rows(old.total_tokens)
+
+
+def test_free_padding_never_grows_batch_past_budget_bucket():
+    """With leftover budget AND padding available, draft rows (funded or
+    free) fill the compile bucket the step budget already pays for — and
+    stop exactly at its boundary, never opening the next bucket."""
+    kv = PagedKVCache(num_pages=64, page_size=4)
+    sched = PagedScheduler(kv, SchedConfig(
+        spec_k=4, step_tokens=6, chunk_tokens=4, max_active=4))
+    for i in range(3):
+        sched.active.append(_decode_lane(kv, i))
+    plan = sched.plan()
+    # 3 decode lanes + 3 leftover budget -> the step pays for the 8-row
+    # bucket; drafts fill it wall to wall (1 budgeted row to cross 4->8,
+    # the rest ride padding) and go no further despite lanes having
+    # draft material left
+    assert plan.total_tokens == bucket_rows(6) == 8
+    assert plan.draft_tokens == 5 and plan.free_draft_tokens == 4
+    assert bucket_rows(plan.total_tokens) == bucket_rows(6), \
+        "draft rows grew the device batch past the budget's bucket"
+
+
+def test_spec_free_padding_token_parity():
+    """Padding-funded drafts change WHEN tokens commit, never WHICH:
+    a saturated-budget spec run must emit exactly the non-spec tokens."""
+    rng = np.random.default_rng(31)
+    prompts = [rng.integers(0, CFG.vocab_size, 8) for _ in range(3)]
+
+    base = paged_engine(spec_k=0, step_tokens=3)
+    rb = [make_req(i, p, 8) for i, p in enumerate(prompts)]
+    for r in rb:
+        assert base.submit(r)
+    drain(base)
+
+    spec = paged_engine(spec_k=2, step_tokens=3, response_cache=True)
+    # prime the response cache so the spec arm drafts with no client
+    # hints, then replay the same prompts
+    r1 = [make_req(i, p, 8) for i, p in enumerate(prompts)]
+    for r in r1:
+        assert spec.submit(r)
+    drain(spec)
+    r2 = [make_req(10 + i, p, 8) for i, p in enumerate(prompts)]
+    for r in r2:
+        assert spec.submit(r)
+    drain(spec)
+    for got, want in zip(r2, rb):
+        assert got.output_tokens == want.output_tokens
+    assert spec.metrics.drafted_tokens_total > 0
+    assert_no_leaks(spec)
+    assert_no_leaks(base)

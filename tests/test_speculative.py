@@ -11,7 +11,7 @@ from repro.configs.base import get_config, reduced
 from repro.serving.engine import ServingEngine
 from repro.serving.kvcache import PagedKVCache
 from repro.serving.request import Request
-from repro.serving.sched import NgramDrafter
+from repro.serving.sched import NgramDrafter, bucket_rows
 
 from test_paged_runtime import (assert_no_leaks,
                                 assert_refcount_invariants, drain)
@@ -181,10 +181,13 @@ def test_wrong_hints_never_corrupt_output():
 
 # ------------------------------------------------- budget + starvation
 def test_step_budget_bounds_hold_with_speculation():
-    """Every fused step's rows (decode bases + draft rows + prefill
-    chunks) fit the step token budget, and drafts only ever consume
-    LEFTOVER budget — prefill progress per step matches the
-    non-speculative run exactly (speculation never starves prefill)."""
+    """Every fused step's NON-DRAFT rows (decode bases + prefill chunks)
+    fit the step token budget, and drafts only ever consume LEFTOVER
+    budget or ride row-bucket padding for free — so total planned rows
+    stay within the budget's row bucket (the device batch the
+    non-speculative plan would have padded to anyway), and prefill
+    progress per step matches the non-speculative run exactly
+    (speculation never starves prefill)."""
     rng = np.random.default_rng(9)
     long_prompt = rng.integers(0, CFG.vocab_size, 60)
     short = rng.integers(0, CFG.vocab_size, 8)
@@ -210,12 +213,18 @@ def test_step_budget_bounds_hold_with_speculation():
         prefill_per_step = []
         while eng.has_work():
             rep = eng.step()
-            assert rep.tokens <= budget
             # planned rows = decode lanes (committed minus accepted) +
-            # draft rows + prefill chunk rows — the true device batch
+            # draft rows + prefill chunk rows — the true device batch.
+            # Non-draft rows must fit the budget; padding-funded draft
+            # rows may exceed it but never grow the row bucket the
+            # non-draft rows already paid for
             lanes = rep.decode_tokens - rep.accepted_tokens
+            assert lanes + rep.prefill_tokens <= budget, \
+                "non-draft rows exceeded the step budget"
             assert lanes + rep.drafted_tokens + rep.prefill_tokens \
-                <= budget, "planned rows exceeded the step budget"
+                <= bucket_rows(budget), \
+                "draft rows grew the device batch beyond the budget bucket"
+            assert rep.tokens <= bucket_rows(budget)
             if not r2.done:
                 prefill_per_step.append(rep.prefill_tokens)
             eng.finalize_step(rep, 0.0)
