@@ -662,6 +662,124 @@ def run_spec(duration=600.0, qps=1.0, seed=0, spec_k=4, max_new=32,
     return out
 
 
+def run_door(duration=600.0, qps=4.0, seed=0, verbose=True, slots=2,
+             max_new=8, door_queue=16, deadline_s=1.5):
+    """Front-door arm: one dense engine behind a ``serving.gateway``
+    door with --listen-style backpressure (bounded queue, dispatch
+    deadline, Kingman-derived rate limit), run above the engine's
+    comfortable operating point so the door actually queues.
+
+    Reports the paper-relevant split the gateway makes observable:
+    **door-measured** TTFT (prefill minus front-door arrival — what a
+    client experiences, door-queue wait included) vs **engine-measured**
+    TTFT (prefill minus engine submit), side by side, plus the full
+    verdict ledger.  Door p99 >= engine p99 by construction (arrival
+    precedes submit), and the gap IS the queueing delay backpressure
+    policy controls.  ``conservation_ok`` asserts the verdict ledger:
+    offered == completed + rejected + shed + expired after drain.
+    """
+    from repro.core.admission import AdmissionConfig, RateLimiter
+    from repro.core.tenancy import TenantSpec
+    from repro.serving.gateway import DoorConfig, Gateway
+    from repro.serving.metrics import TenantMetrics
+
+    cfg = reduced(get_config("olmo2_7b"))
+    engine = ServingEngine(cfg, max_slots=slots, seq_cap=128, seed=seed,
+                           backend="dense")
+    rng = np.random.default_rng(seed)
+    now = [0.0]
+    # warm + per-token calibration exactly as ``run`` (see there)
+    samples = []
+    for j, pl_ in enumerate((32, 64, 96)):
+        engine.submit(Request(req_id=-10 - j, tenant="T1", prompt_len=pl_,
+                              max_new_tokens=2, arrival=0.0))
+    while engine.has_work():
+        engine.finalize_step(engine.step(), 0.0)
+    for j, pl_ in enumerate((32, 64, 96)):
+        engine.submit(Request(req_id=-20 - j, tenant="T1", prompt_len=pl_,
+                              max_new_tokens=2, arrival=0.0))
+    while engine.has_work():
+        rep = engine.step()
+        if rep.prefill_tokens:
+            samples.append(rep.compute_s / rep.prefill_tokens)
+        engine.finalize_step(rep, 0.0)
+    compute_scale = (0.120 / 64.0) / float(np.mean(samples))
+    engine.metrics = TenantMetrics()     # drop the fabricated t=0 samples
+
+    # QUEUE-with-deadline policy: a transiently-full pool holds the line
+    # (effectively unbounded retries) and the DEADLINE decides expiry —
+    # the 503 path; queue-full and rate-limit arrivals REJECT fast (429)
+    spec = TenantSpec(name="T1", rate=qps, slo_s=0.200)
+    gateway = Gateway(
+        {"T1": [engine]},
+        door_cfgs={"T1": DoorConfig(
+            max_queue=door_queue, deadline_s=deadline_s,
+            max_attempts=1_000_000,
+            rate_limiter=RateLimiter.kingman(spec, AdmissionConfig()))})
+
+    next_arrival = rng.exponential(1.0 / qps)
+    req_id = 0
+    done = 0
+    while now[0] < duration or engine.has_work() \
+            or gateway.queued_total() > 0:
+        while next_arrival <= now[0] and next_arrival < duration:
+            pl_ = int(rng.choice([32, 64, 96]))
+            gateway.offer(Request(req_id=req_id, tenant="T1",
+                                  prompt_len=pl_, max_new_tokens=max_new,
+                                  arrival=next_arrival, slo_ms=200.0),
+                          now[0])
+            req_id += 1
+            next_arrival += rng.exponential(1.0 / qps)
+        gateway.dispatch(now[0])
+        rep = engine.step()
+        if rep.kind == "idle":
+            nxt = [t for t in (next_arrival, now[0] + 0.05)
+                   if t > now[0] and (t < duration or next_arrival <= now[0]
+                                      or gateway.queued_total() > 0)]
+            if not nxt:
+                break
+            now[0] = min(nxt)
+            continue
+        now[0] += rep.compute_s * compute_scale
+        gateway.finalize("T1", engine, rep, now[0])
+        done += len(rep.completed)
+    gateway.dispatch(now[0] + deadline_s + 1.0)   # expire any stragglers
+    door = gateway.door("T1")
+    conservation_ok = True
+    try:
+        gateway.check()
+    except AssertionError:
+        conservation_ok = False
+    out = {
+        "workload": {"duration_s": duration, "qps": qps, "slots": slots,
+                     "door_queue": door_queue, "deadline_s": deadline_s},
+        "door_ttft_p99_ms": engine.metrics.latency.quantile(0.99) * 1e3,
+        "door_ttft_p50_ms": engine.metrics.latency.quantile(0.50) * 1e3,
+        "engine_ttft_p99_ms": engine.metrics.engine_ttft.quantile(0.99) * 1e3,
+        "engine_ttft_p50_ms": engine.metrics.engine_ttft.quantile(0.50) * 1e3,
+        "verdicts": door.counters(),
+        "reject_reasons": dict(door.reject_reasons),
+        "rate_limit_rps": door.cfg.rate_limiter.rate,
+        "throughput_rps": done / duration,
+        "conservation_ok": conservation_ok and door.in_flight == 0,
+        "prometheus": gateway.prometheus(now[0]),
+    }
+    if verbose:
+        v = out["verdicts"]
+        print("== gateway front-door arm (dense backend, "
+              f"{slots} slots at {qps} qps) ==")
+        print(f"  door   TTFT p99={out['door_ttft_p99_ms']:7.1f}ms "
+              f"p50={out['door_ttft_p50_ms']:6.1f}ms   (arrival-relative: "
+              "client view, door wait included)")
+        print(f"  engine TTFT p99={out['engine_ttft_p99_ms']:7.1f}ms "
+              f"p50={out['engine_ttft_p50_ms']:6.1f}ms   (submit-relative)")
+        print(f"  verdicts: offered={v['offered']} completed={v['completed']}"
+              f" rejected={v['rejected']} expired={v['expired']} "
+              f"shed={v['shed']}  conservation="
+              f"{'OK' if out['conservation_ok'] else 'VIOLATED'}")
+    return out
+
+
 def run_backend(backend="dense", verbose=True, seed=0, duration=1800.0):
     static = run(with_controller=False, seed=seed, backend=backend,
                  duration=duration)
@@ -691,9 +809,12 @@ def _maybe_dump(out, json_path):
 
 
 def main(verbose=True, backend="dense", shared_prefix=False, spec=False,
-         duration=1800.0, json_path=None, replicas=0):
+         duration=1800.0, json_path=None, replicas=0, door=False):
     if verbose:
         print("== LLM serving case study (vLLM-style, OLMo-2-7B) ==")
+    if door:
+        return _maybe_dump(run_door(duration=duration, verbose=verbose),
+                           json_path)
     if replicas:
         return _maybe_dump(run_kv_reuse(duration=duration,
                                         replicas=replicas,
@@ -740,6 +861,11 @@ if __name__ == "__main__":
                          "behind one dispatcher, cache-aware routing vs "
                          "blind least-loaded on the same shared-prefix-"
                          "group trace (0 = off)")
+    ap.add_argument("--door", action="store_true",
+                    help="gateway front-door arm: a dense engine behind a "
+                         "bounded backpressure door, reporting door- vs "
+                         "engine-measured TTFT p99 side by side plus the "
+                         "verdict-conservation ledger")
     ap.add_argument("--duration", type=float, default=1800.0,
                     help="virtual-time seconds per run (CI uses a short "
                          "duration)")
@@ -748,4 +874,4 @@ if __name__ == "__main__":
     args = ap.parse_args()
     main(backend=args.backend, shared_prefix=args.shared_prefix,
          spec=args.spec, duration=args.duration, json_path=args.json,
-         replicas=args.replicas)
+         replicas=args.replicas, door=args.door)

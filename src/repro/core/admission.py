@@ -49,6 +49,54 @@ class AdmissionConfig:
 
 
 @dataclass
+class RateLimiter:
+    """Per-tenant token bucket for *request-plane* admission.
+
+    The tenant-plane controller above admits whole workloads; the gateway
+    needs the same Kingman safety argument applied per request.  A bucket
+    built by :meth:`kingman` refills at exactly the arrival rate that
+    keeps the tenant's predicted utilisation rho = lambda E[S] at the
+    configured bound — requests beyond that rate are the ones the G/G/1
+    analysis says would blow up the queue, so the gateway REJECTs them
+    fast (the 429 path) instead of letting them rot in a deadline queue.
+    """
+    rate: float                 # sustained tokens (requests) per second
+    burst: float = 8.0          # bucket depth: tolerated arrival burst
+    tokens: float = field(default=-1.0)
+    _t: float = 0.0             # last refill time
+
+    def __post_init__(self) -> None:
+        if self.tokens < 0:
+            self.tokens = self.burst
+
+    def allow(self, now: float) -> bool:
+        """Consume one token if available (refilling first)."""
+        if now > self._t:
+            self.tokens = min(self.burst,
+                              self.tokens + (now - self._t) * self.rate)
+            self._t = now
+        if self.tokens >= 1.0:
+            self.tokens -= 1.0
+            return True
+        return False
+
+    @classmethod
+    def kingman(cls, spec: "TenantSpec",
+                cfg: AdmissionConfig = AdmissionConfig(), *,
+                n_flows: int = 1, burst: float = 8.0) -> "RateLimiter":
+        """Bucket whose sustained rate holds rho at ``cfg.rho_bound``.
+
+        Uses the same service-time estimate as the tenant-plane
+        controller (E[S] = c0 + size/share under a fair fabric share
+        split ``n_flows`` ways), so the per-request limit and the
+        placement-time safety check agree about what "too fast" means.
+        """
+        share = cfg.fabric_capacity / max(1, n_flows)
+        es = spec.c0_s + spec.mean_size / max(share, 1e-9)
+        return cls(rate=cfg.rho_bound / max(es, 1e-9), burst=burst)
+
+
+@dataclass
 class AdmissionRecord:
     """One line of the admission audit trail."""
     time: float

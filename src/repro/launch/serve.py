@@ -41,6 +41,40 @@ from __future__ import annotations
 import argparse
 
 
+def warm_engine(eng, name: str, prompt_len: int) -> None:
+    """Prime an engine's jit caches WITHOUT polluting observable state.
+
+    The warm request (req_id=-1) runs at virtual time 0, so letting it
+    touch shared state plants three lies: a zero-latency sample in
+    ``TenantMetrics.latency`` (seeding the controller's p99 signal with
+    a bogus 0), its output in the tenant's shared ``ResponseCache``
+    (primeable by real traffic), and its prefix pages in the
+    ``PrefixDirectory`` (cache-aware routing toward KV no request
+    wants).  So: detach the directory listener and the response cache
+    for the drain, then reset the engine's metrics to a clean slate.
+    """
+    from repro.serving.metrics import TenantMetrics
+    from repro.serving.request import Request
+
+    listener, eng.kv.listener = getattr(eng.kv, "listener", None), None
+    sched = eng.runtime.sched if eng.runtime is not None else None
+    rcache = None
+    if sched is not None:
+        rcache, sched.response_cache = sched.response_cache, None
+    try:
+        eng.submit(Request(req_id=-1, tenant=name, prompt_len=prompt_len,
+                           max_new_tokens=2, arrival=0.0))
+        while eng.has_work():
+            eng.finalize_step(eng.step(), 0.0)
+    finally:
+        eng.kv.listener = listener
+        if sched is not None:
+            sched.response_cache = rcache
+            sched.rc_lookups = 0
+            sched.rc_hits = 0
+    eng.metrics = TenantMetrics()
+
+
 def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
           prompt_len: int = 48, max_new: int = 8, slots: int = 4,
           num_tenants: int = 1, replicas: int = 1, interfere: bool = False,
@@ -48,8 +82,20 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
           admit: int = 0, backend: str = "dense", kv_dtype: str = "auto",
           prefix_cache: bool = True, spec_k: int = 0, route: str = "cache",
           route_imbalance: int = 4, route_staleness: int = 256,
-          response_cache: bool = True):
-    """Virtual-time multi-tenant serving run; returns per-tenant stats."""
+          response_cache: bool = True, listen: bool = False,
+          door_queue: int = 64, door_deadline_ms: float = 1000.0):
+    """Virtual-time multi-tenant serving run; returns per-tenant stats.
+
+    ``listen=True`` (the ``--listen`` flag) turns on the gateway's
+    backpressure policy: bounded per-tenant door queues of
+    ``door_queue``, a ``door_deadline_ms`` dispatch deadline (queued
+    requests that outlive it are EXPIRED — the 503 path), and a
+    Kingman-derived per-tenant rate limiter (arrivals past the rate
+    that keeps rho under the admission bound are REJECTED fast — the
+    429 path).  Without it the gateway still fronts every request with
+    an effectively unbounded patient door, so the verdict-conservation
+    ledger holds on both paths.
+    """
     from collections import deque
 
     import numpy as np
@@ -57,10 +103,11 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
     from repro.serving.directory import (CacheAwareRouter, PrefixDirectory,
                                          ResponseCache, RouterConfig)
     from repro.serving.engine import ServingEngine
+    from repro.serving.gateway import DoorConfig, Gateway
     from repro.serving.request import Request
     from repro.serving.actuator import FabricState, ServingActuator
     from repro.core.admission import (AdmissionController, AdmissionConfig,
-                                      AdmissionVerdict)
+                                      AdmissionVerdict, RateLimiter)
     from repro.core.controller import Controller, ControllerConfig
     from repro.core.ledger import DeviceLedger
     from repro.core.policy import PolicyConfig
@@ -167,6 +214,23 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
                                rng=np.random.default_rng(seed + 1))
     windows = {name: LatencyWindow() for name in names}
 
+    # ---- request-plane front door -----------------------------------
+    # The gateway fronts EVERY request (both paths), so the verdict
+    # ledger always balances; --listen additionally arms backpressure:
+    # bounded queues + dispatch deadlines + Kingman-derived rate limits.
+    def door_cfg_for(spec):
+        if not listen:
+            return DoorConfig(max_queue=1_000_000, deadline_s=None)
+        return DoorConfig(
+            max_queue=door_queue, deadline_s=door_deadline_ms / 1e3,
+            rate_limiter=RateLimiter.kingman(spec, AdmissionConfig()))
+
+    door_cfgs = {name: door_cfg_for(registry[name]) for name in names}
+    gateway = Gateway(engines, routers, door_cfgs=door_cfgs,
+                      default_cfg=door_cfg_for(
+                          TenantSpec(name="_default", rate=qps, slo_s=0.200)),
+                      paused_until=actuator.paused_until)
+
     controller = None
     if with_controller:
         controller = Controller(topo, A100_MIG, actuator,
@@ -179,13 +243,11 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
 
     def warm(name):
         for eng in engines[name]:
-            eng.submit(Request(req_id=-1, tenant=name,
-                               prompt_len=prompt_len, max_new_tokens=2,
-                               arrival=0.0))
-            while eng.has_work():
-                eng.finalize_step(eng.step(), 0.0)
+            warm_engine(eng, name, prompt_len)
 
     # warm the jit caches so compile time never enters the virtual clock
+    # (warm_engine keeps the warm request out of metrics, the shared
+    # response cache, and the prefix directory)
     for name in names:
         warm(name)
 
@@ -218,7 +280,6 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
 
     for name in names:
         gen_traffic(name)
-    shed = {name: 0 for name in names}
     preempts = {name: 0 for name in names}
     # per-engine availability clock: engines run in parallel
     avail = {(name, j): 0.0 for name in names for j in range(replicas)}
@@ -255,7 +316,7 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
         actuator.pauses.setdefault(name, 0.0)
         warm(name)
         windows[name] = LatencyWindow()
-        shed[name] = 0
+        gateway.door_cfgs[name] = door_cfg_for(spec)
         preempts[name] = 0
         avail[(name, 0)] = t
         fabric.set_on_root(name, any(
@@ -287,20 +348,19 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
                 on_admitted(spec, slots_, now[0])
 
     def submit_due():
+        # front door first (SHED/REJECT/ACCEPT verdicts), then drain the
+        # door queues into engines via the cache-aware router — a failed
+        # engine submit is retried or turned into a REJECTED verdict,
+        # never dropped on the floor
         for name in names:
             q = pending[name]
             while q and q[0].arrival <= now[0]:
-                r = q.popleft()
-                if r.arrival < actuator.paused_until(name):
-                    shed[name] += 1         # load-shed during reconfigs
-                    continue
-                # cache-aware replica dispatch (least-loaded fallback)
-                engs = engines[name]
-                loads = [len(e.queue) + len(e.active()) for e in engs]
-                engs[routers[name].route(r, loads)].submit(r)
+                gateway.offer(q.popleft(), now[0])
+        gateway.dispatch(now[0])
 
     def has_pending():
         return bool(admit_events) or any(pending[n] for n in names) or \
+            gateway.queued_total() > 0 or \
             any(e.has_work() for n in names for e in engines[n])
 
     while has_pending():
@@ -341,7 +401,9 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
                     + transfer
                 end = now[0] + dur
                 avail[(name, j)] = end
-                eng.finalize_step(rep, end)
+                # gateway finalize = engine timestamps + token-stream
+                # mirroring + terminal COMPLETED verdicts
+                gateway.finalize(name, eng, rep, end)
                 for pr in rep.prefilled:
                     windows[name].observe(end, pr.ttft, slo=0.2)
                 stepped = True
@@ -357,6 +419,14 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
                 horizon.append(actuator.paused_until(name))
         horizon.extend(t for t in avail.values() if t > now[0])
         horizon.extend(t for t, _ in admit_events)
+        # door-queued requests: retry a beat later, and never sleep past
+        # a dispatch deadline (expiry is an event too)
+        for door in gateway.doors.values():
+            if door.queue:
+                horizon.append(now[0] + 0.02)
+                head = door.queue[0]
+                if head.deadline is not None:
+                    horizon.append(max(head.deadline, now[0] + 1e-9))
         if controller:
             horizon.append(next_sample)
         now[0] = min(horizon) if horizon else now[0] + 0.02
@@ -366,10 +436,16 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
         done = [r for r in reqs[name] if r.done]
         ttfts = np.array([r.ttft for r in done]) * 1e3
         itls = [v for r in done for v in r.itls]
+        door = gateway.door(name)
+        # every offered request carries exactly one verdict; the door's
+        # ledger is the authoritative accounting (no silent drops)
         out[name] = {
             "completed": len(done),
-            "offered": requests,
-            "shed": shed[name],
+            "offered": door.offered,
+            "shed": door.shed,
+            "rejected": door.rejected,
+            "expired": door.expired,
+            "reject_reasons": dict(door.reject_reasons),
             "preempted": preempts[name],
             "ttft_p50_ms": float(np.quantile(ttfts, .5)) if len(done) else 0.0,
             "ttft_p99_ms": float(np.quantile(ttfts, .99)) if len(done) else 0.0,
@@ -377,7 +453,9 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
                            if itls else 0.0),
         }
         if verbose:
-            print(f"  {name}: completed {len(done)}/{requests} "
+            print(f"  {name}: completed {len(done)}/{door.offered} "
+                  f"(shed {door.shed} rejected {door.rejected} "
+                  f"expired {door.expired}) "
                   f"TTFT p50={out[name]['ttft_p50_ms']:.1f}ms "
                   f"p99={out[name]['ttft_p99_ms']:.1f}ms "
                   f"ITL p99={out[name]['itl_p99_ms']:.1f}ms")
@@ -405,6 +483,9 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
         out["arbiter_max_units"] = controller.arbiter.max_used()
         if verbose:
             print("controller actions:", out["actions"])
+    out["gateway"] = gateway.counters()
+    out["prometheus"] = gateway.prometheus(now[0])
+    gateway.check()     # offered == completed+rejected+shed+expired+in_flight
     ledger.check()
     return out
 
@@ -449,6 +530,17 @@ def main():
     ap.add_argument("--no-response-cache", action="store_true",
                     help="disable the per-tenant response cache that "
                          "self-primes speculative draft hints")
+    ap.add_argument("--listen", action="store_true",
+                    help="arm the gateway's backpressure policy: bounded "
+                         "per-tenant door queues, dispatch deadlines "
+                         "(EXPIRED past them — the 503 path) and Kingman-"
+                         "derived rate limits (REJECTED fast — the 429 "
+                         "path)")
+    ap.add_argument("--door-queue", type=int, default=64,
+                    help="--listen: bounded door-queue depth per tenant")
+    ap.add_argument("--door-deadline-ms", type=float, default=1000.0,
+                    help="--listen: queued requests not dispatched within "
+                         "this deadline are EXPIRED")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     serve(arch=args.arch, requests=args.requests, qps=args.qps,
@@ -460,7 +552,9 @@ def main():
           prefix_cache=not args.no_prefix_cache, spec_k=args.spec_k,
           route=args.route, route_imbalance=args.route_imbalance,
           route_staleness=args.route_staleness,
-          response_cache=not args.no_response_cache)
+          response_cache=not args.no_response_cache, listen=args.listen,
+          door_queue=args.door_queue,
+          door_deadline_ms=args.door_deadline_ms)
 
 
 if __name__ == "__main__":

@@ -40,7 +40,8 @@ from repro.models.model import Model, decode_step, prefill
 from repro.models.params import P, specs_from_plan
 from repro.serving.kvcache import PagedKVCache
 from repro.serving.metrics import TenantMetrics
-from repro.serving.request import Request
+from repro.serving.request import (ADMITTED, POOL_EXHAUSTED, Request,
+                                   SubmitOutcome)
 
 
 def init_cache_from_plan(plan):
@@ -168,19 +169,22 @@ class ServingEngine:
     def active_slot_budget(self) -> int:
         return max(1, int(np.ceil(self.quota * self.max_slots)))
 
-    def submit(self, req: Request) -> bool:
-        """Returns False if rejected by admission control.  The dense
-        backend rejects whenever the conservative prompt+max_new page
-        reservation does not fit; the paged backend only rejects requests
-        that could NEVER fit and resolves pressure by preemption."""
+    def submit(self, req: Request) -> SubmitOutcome:
+        """Returns a falsy :class:`SubmitOutcome` if rejected by admission
+        control (``outcome.reason`` says why, ``outcome.transient``
+        whether a retry may succeed).  The dense backend rejects whenever
+        the conservative prompt+max_new page reservation does not fit —
+        transient, the pool drains as requests finish; the paged backend
+        only rejects requests that could NEVER fit and resolves pressure
+        by preemption."""
         if self.runtime is not None:
             return self.runtime.submit(req)
         if not self.kv.can_admit(req.prompt_len, req.max_new_tokens):
-            return False
+            return POOL_EXHAUSTED
         self.kv.allocate(req.req_id, req.prompt_len,
                          req.prompt_len + req.max_new_tokens)
         self.queue.append(req)
-        return True
+        return ADMITTED
 
     def active(self) -> List[Request]:
         if self.runtime is not None:
@@ -222,8 +226,16 @@ class ServingEngine:
         """Record timestamps using the harness-provided completion time."""
         for req in report.prefilled:
             req.prefill_done = end_time
+            # door-measured TTFT: from arrival at the front door (includes
+            # any gateway-queue wait) — the SLO the paper's per-tenant
+            # attainment is measured against
             self.metrics.latency.observe(end_time, (end_time - req.arrival),
                                          slo=(req.slo_ms or 0) / 1e3 or None)
+            # engine-measured TTFT: from the moment the gateway handed the
+            # request to this engine (absent a gateway, never observed)
+            if req.submitted >= 0:
+                self.metrics.engine_ttft.observe(
+                    end_time, end_time - req.submitted)
         for req in report.decoded:
             # per-token decode timestamp: the gap to the previous emission
             # (prefill for the first decode) is this token's ITL

@@ -94,8 +94,11 @@ class EMA:
             self._initialised = True
             return self.value
         candidate = self.alpha * x + (1 - self.alpha) * self.value
-        # dead-band: ignore sub-hysteresis wiggles
-        if self.value > 0 and abs(candidate - self.value) < \
+        # dead-band: ignore sub-hysteresis wiggles.  Guarded on
+        # abs(value) so smoothing works for negative-valued signals too
+        # (a ``> 0`` guard silently disabled the dead-band for signals
+        # like headroom deltas or error terms that live below zero)
+        if abs(self.value) > 0 and abs(candidate - self.value) < \
                 self.hysteresis * abs(self.value):
             return self.value
         self.value = candidate
@@ -157,7 +160,15 @@ class RoutingStats:
 @dataclass
 class TenantMetrics:
     """Bundle of per-tenant signals the controller samples every delta s."""
+    # door-relative TTFT: prefill_done - arrival, where arrival is the
+    # *front-door* timestamp — this window includes any gateway-queue
+    # wait, so it is what a client actually experiences
     latency: LatencyWindow = field(default_factory=LatencyWindow)
+    # engine-relative TTFT: prefill_done - submitted, observed only for
+    # requests that carried a gateway submit stamp.  The gap between the
+    # two windows' tails is exactly the door-queue wait — the quantity
+    # the --door benchmark arm reports side by side
+    engine_ttft: LatencyWindow = field(default_factory=LatencyWindow)
     # inter-token latency (decode cadence): one sample per decoded token,
     # measured between consecutive token-emission timestamps — makes
     # TPOT/ITL observable to the controller, not just TTFT

@@ -70,7 +70,7 @@ from repro.models.common import NO_POLICY, ShardPolicy, apply_rope, rms_norm, sh
 from repro.models.model import _apply_ffn, _logits, embed_tokens
 from repro.serving.engine import StepReport
 from repro.serving.kvcache import PagedKVCache
-from repro.serving.request import Request
+from repro.serving.request import EXCEEDS_SEQ_CAP, Request, SubmitOutcome
 from repro.serving.sched import (PagedScheduler, SchedConfig, bucket_rows,
                                  next_pow2)
 
@@ -310,12 +310,13 @@ class PagedRuntime:
         return logits, new_pools
 
     # ------------------------------------------------------------ engine API
-    def submit(self, req: Request) -> bool:
+    def submit(self, req: Request) -> SubmitOutcome:
         """Rejects only requests that can NEVER fit (footprint beyond the
         block-table width or the whole pool); pool pressure is resolved
-        later by SLO-aware preemption instead of at submit."""
+        later by SLO-aware preemption instead of at submit.  Rejections
+        carry their reason — both are structural (non-transient)."""
         if req.prompt_len + req.max_new_tokens > self.seq_cap:
-            return False
+            return EXCEEDS_SEQ_CAP
         if req.prompt_tokens is None:
             # materialise synthetic prompts once so every chunk (and any
             # post-preemption recompute) sees identical tokens

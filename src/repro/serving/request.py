@@ -5,6 +5,29 @@ from dataclasses import dataclass, field
 from typing import List, Optional
 
 
+@dataclass(frozen=True)
+class SubmitOutcome:
+    """Result of an engine/scheduler ``submit``: truthy on admission, and
+    on rejection it carries *why* — the gateway's backpressure policy
+    needs the distinction between a transient shortage (retry later, the
+    pool may drain) and a structural impossibility (reject fast, no
+    amount of waiting helps).  ``bool(outcome)`` preserves the old
+    ``submit() -> bool`` contract for every existing call site."""
+    ok: bool
+    reason: str = ""            # "" | "pool_exhausted" | "never_fits" |
+                                # "exceeds_seq_cap"
+    transient: bool = False     # True: retrying later may succeed
+
+    def __bool__(self) -> bool:
+        return self.ok
+
+
+ADMITTED = SubmitOutcome(True)
+POOL_EXHAUSTED = SubmitOutcome(False, "pool_exhausted", transient=True)
+NEVER_FITS = SubmitOutcome(False, "never_fits")
+EXCEEDS_SEQ_CAP = SubmitOutcome(False, "exceeds_seq_cap")
+
+
 @dataclass
 class Request:
     req_id: int
@@ -28,6 +51,12 @@ class Request:
 
     # --- runtime state ---
     slot: int = -1
+    # time the request was accepted by an ENGINE (set by the gateway on a
+    # successful submit; -1 when the request never passed through a
+    # gateway door).  ``arrival`` is the front-door timestamp, so
+    # door-measured TTFT = prefill_done - arrival (includes door-queue
+    # wait) while engine-measured TTFT = prefill_done - submitted
+    submitted: float = -1.0
     prefill_done: float = -1.0          # time the first token was emitted
     finished: float = -1.0
     generated: int = 0

@@ -66,7 +66,8 @@ from typing import Deque, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.serving.kvcache import PagedKVCache
-from repro.serving.request import Request
+from repro.serving.request import (ADMITTED, NEVER_FITS, Request,
+                                   SubmitOutcome)
 
 _INF = float("inf")
 
@@ -277,19 +278,22 @@ class PagedScheduler:
         self.preempt_log: List[Tuple[int, int]] = []   # (victim, beneficiary)
 
     # ------------------------------------------------------------ lifecycle
-    def submit(self, req: Request) -> bool:
+    def submit(self, req: Request) -> SubmitOutcome:
         """Queue a request.  Only requests that could never fit (their total
         footprint exceeds the whole pool, or the block-table width) are
-        rejected — pool pressure is handled later by preemption, not here."""
+        rejected — pool pressure is handled later by preemption, not here.
+        The rejection is therefore NON-transient (``NEVER_FITS``): no
+        amount of waiting makes the pool bigger, so a gateway should
+        reject-fast instead of requeueing."""
         total = req.prompt_len + req.max_new_tokens
         if self.kv.pages_needed(total) > self.kv.num_pages:
-            return False
+            return NEVER_FITS
         if self.response_cache is not None and req.draft_hints is None \
                 and req.prompt_tokens is not None:
             self.rc_lookups += 1
             self.rc_hits += bool(self.response_cache.prime(req))
         self.waiting.append(SeqState(req))
-        return True
+        return ADMITTED
 
     def set_budget(self, budget: int) -> None:
         self.budget = max(1, budget)

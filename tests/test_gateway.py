@@ -1,0 +1,353 @@
+"""Gateway front door: verdict conservation under churn, the 429/503
+backpressure split, token-stream <-> TenantMetrics ITL parity, the
+Kingman-derived per-request rate limit, and warmup hygiene."""
+from collections import deque
+
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, reduced
+from repro.core.admission import AdmissionConfig, RateLimiter
+from repro.core.kingman import GG1
+from repro.core.tenancy import TenantSpec
+from repro.serving.engine import ServingEngine, StepReport
+from repro.serving.gateway import (DoorConfig, Gateway, TokenStream,
+                                   Verdict)
+from repro.serving.metrics import TenantMetrics
+from repro.serving.request import ADMITTED, POOL_EXHAUSTED, Request
+
+CFG = reduced(get_config("stablelm_3b")).replace(dtype="float32")
+
+
+def make_req(i, tenant="T1", arrival=0.0, prompt_len=8, max_new=3):
+    return Request(req_id=i, tenant=tenant, prompt_len=prompt_len,
+                   max_new_tokens=max_new, arrival=arrival)
+
+
+class StubEngine:
+    """Dense-engine-shaped mini engine: a bounded pool, one prefill or
+    one batched decode per fabricated step.  ``finalize_step`` is the
+    REAL ServingEngine implementation (unbound), so timestamps and
+    metrics follow production bookkeeping exactly."""
+
+    def __init__(self, cap=4):
+        self.cap = cap
+        self.max_slots = cap
+        self.queue = deque()
+        self.running = []
+        self.metrics = TenantMetrics()
+
+    def active(self):
+        return self.running
+
+    def has_work(self):
+        return bool(self.queue or self.running)
+
+    def submit(self, req):
+        if len(self.queue) + len(self.running) >= self.cap:
+            return POOL_EXHAUSTED
+        self.queue.append(req)
+        return ADMITTED
+
+    finalize_step = ServingEngine.finalize_step
+
+    def fabricate_step(self, rng):
+        if self.queue:
+            r = self.queue.popleft()
+            self.running.append(r)
+            r.output_tokens.append(int(rng.integers(1000)))
+            rep = StepReport(kind="prefill", tokens=r.prompt_len,
+                             prefill_tokens=r.prompt_len, prefilled=[r])
+            if len(r.output_tokens) >= r.max_new_tokens:
+                self.running.remove(r)
+                rep.completed.append(r)
+            return rep
+        rep = StepReport(kind="decode")
+        for r in list(self.running):
+            r.output_tokens.append(int(rng.integers(1000)))
+            rep.decoded.append(r)
+            rep.tokens += 1
+            rep.decode_tokens += 1
+            if len(r.output_tokens) >= r.max_new_tokens:
+                self.running.remove(r)
+                rep.completed.append(r)
+        return rep
+
+
+# ---------------------------------------------------------- conservation
+def test_verdict_conservation_under_churn():
+    """Random traffic, pauses, stepping, and a mid-run tenant add: the
+    per-tenant ledger must balance at EVERY virtual-time step, and every
+    offered request must end in exactly one terminal verdict."""
+    rng = np.random.default_rng(7)
+    pauses = {}
+    engines = {"T1": [StubEngine(3), StubEngine(2)], "T2": [StubEngine(2)]}
+    gw = Gateway(engines,
+                 default_cfg=DoorConfig(max_queue=4, deadline_s=2.0,
+                                        max_attempts=2),
+                 paused_until=lambda n: pauses.get(n, 0.0))
+    now, i = 0.0, 0
+    for _ in range(400):
+        now += float(rng.exponential(0.05))
+        op = int(rng.integers(5))
+        if op == 0:
+            for _ in range(int(rng.integers(1, 4))):
+                name = str(rng.choice(sorted(engines)))
+                gw.offer(make_req(i, name, arrival=now,
+                                  max_new=int(rng.integers(1, 5))), now)
+                i += 1
+        elif op == 1:
+            gw.dispatch(now)
+        elif op == 2:
+            name = str(rng.choice(sorted(engines)))
+            for eng in engines[name]:
+                if eng.has_work():
+                    gw.finalize(name, eng, eng.fabricate_step(rng), now)
+        elif op == 3:
+            name = str(rng.choice(sorted(engines)))
+            pauses[name] = now + float(rng.exponential(0.2))
+        elif op == 4 and "T9" not in engines:
+            engines["T9"] = [StubEngine(2)]      # tenant admitted mid-run
+        gw.check()       # the invariant holds at every step, not just at end
+    # drain: everything accepted must resolve to COMPLETED or EXPIRED
+    for _ in range(400):
+        now += 0.1
+        gw.dispatch(now)
+        for name, engs in engines.items():
+            for eng in engs:
+                while eng.has_work():
+                    gw.finalize(name, eng, eng.fabricate_step(rng), now)
+        gw.check()
+        if gw.queued_total() == 0 and \
+                all(not e.has_work() for es in engines.values() for e in es):
+            break
+    assert i > 100                       # the trace actually offered load
+    for door in gw.doors.values():
+        assert door.in_flight == 0
+        assert door.offered == door.completed + door.rejected + \
+            door.shed + door.expired
+        assert all(v in (Verdict.REJECTED, Verdict.SHED, Verdict.EXPIRED,
+                         Verdict.COMPLETED) for v in door._state.values())
+    # the run exercised more than the happy path
+    total = {k: sum(d.counters()[k] for d in gw.doors.values())
+             for k in ("completed", "rejected", "shed", "expired")}
+    assert total["completed"] > 0
+    assert total["rejected"] + total["shed"] + total["expired"] > 0
+
+
+def test_double_terminal_verdict_raises():
+    gw = Gateway({"T1": [StubEngine(2)]})
+    r = make_req(0)
+    gw.offer(r, 0.0)
+    door = gw.door("T1")
+    door._terminal(r, Verdict.COMPLETED)
+    with pytest.raises(AssertionError, match="second terminal"):
+        door._terminal(r, Verdict.EXPIRED)
+
+
+# ------------------------------------------------------ 429 vs 503 split
+def test_queue_full_rejects_fast():
+    """A full bounded door queue is a structural condition: the arrival
+    is REJECTED immediately (429), never queued."""
+    gw = Gateway({"T1": [StubEngine(0)]},      # engine pool never admits
+                 door_cfgs={"T1": DoorConfig(max_queue=2,
+                                             max_attempts=1000)})
+    assert gw.offer(make_req(0), 0.0) is Verdict.ACCEPTED
+    assert gw.offer(make_req(1), 0.0) is Verdict.ACCEPTED
+    assert gw.offer(make_req(2), 0.0) is Verdict.REJECTED
+    door = gw.door("T1")
+    assert door.reject_reasons == {"queue_full": 1}
+    assert len(door.queue) == 2
+    gw.check()
+
+
+def test_deadline_expiry_boundary():
+    """A transient shortage queues with a deadline (503 path): still
+    queued strictly before the deadline, EXPIRED exactly at it."""
+    gw = Gateway({"T1": [StubEngine(0)]},
+                 door_cfgs={"T1": DoorConfig(max_queue=8, deadline_s=1.0,
+                                             max_attempts=1000)})
+    gw.offer(make_req(0, arrival=0.0), 0.0)
+    door = gw.door("T1")
+    gw.dispatch(0.5)                 # pool exhausted: retried, not dropped
+    assert door.expired == 0 and len(door.queue) == 1
+    gw.dispatch(1.0 - 1e-9)          # just under the deadline: still queued
+    assert door.expired == 0
+    gw.dispatch(1.0)                 # exactly at the deadline: expired
+    assert door.expired == 1 and door.in_flight == 0
+    assert door.verdict_of(0) is Verdict.EXPIRED
+    gw.check()
+
+
+def test_structural_rejection_skips_the_queue_wait():
+    """A non-transient engine rejection (request could NEVER fit) must
+    not burn the full retry/deadline budget."""
+    eng = ServingEngine(CFG, max_slots=2, seq_cap=32, backend="paged")
+    gw = Gateway({"T1": [eng]},
+                 door_cfgs={"T1": DoorConfig(max_queue=8, deadline_s=10.0,
+                                             max_attempts=1000)})
+    gw.offer(make_req(0, prompt_len=500, max_new=100), 0.0)
+    gw.dispatch(0.0)
+    door = gw.door("T1")
+    assert door.rejected == 1 and len(door.queue) == 0
+    assert "exceeds_seq_cap" in door.reject_reasons
+    gw.check()
+
+
+def test_transient_rejection_requeues_once_then_gives_up():
+    gw = Gateway({"T1": [StubEngine(0)]},
+                 door_cfgs={"T1": DoorConfig(max_queue=8,
+                                             max_attempts=2)})
+    gw.offer(make_req(0), 0.0)
+    door = gw.door("T1")
+    gw.dispatch(0.0)                         # attempt 1: requeued
+    assert door.rejected == 0 and len(door.queue) == 1
+    gw.dispatch(0.1)                         # attempt 2: gives up
+    assert door.rejected == 1 and len(door.queue) == 0
+    assert door.reject_reasons == {"pool_exhausted": 1}
+    gw.check()
+
+
+# ------------------------------------------------------------ rate limit
+def test_rate_limit_rejects_429():
+    gw = Gateway({"T1": [StubEngine(4)]},
+                 door_cfgs={"T1": DoorConfig(
+                     max_queue=8,
+                     rate_limiter=RateLimiter(rate=1.0, burst=1.0))})
+    assert gw.offer(make_req(0), 0.0) is Verdict.ACCEPTED
+    assert gw.offer(make_req(1), 0.0) is Verdict.REJECTED
+    assert gw.door("T1").reject_reasons == {"rate_limit": 1}
+    # one token/s sustained: refilled a second later
+    assert gw.offer(make_req(2, arrival=1.5), 1.5) is Verdict.ACCEPTED
+    gw.check()
+
+
+def test_kingman_rate_limiter_matches_gg1_bound():
+    """The per-request limiter and the tenant-plane admission check must
+    agree: the limiter's sustained rate is exactly the arrival rate that
+    puts the G/G/1 utilisation at the admission bound."""
+    spec = TenantSpec(name="X", rate=5.0, slo_s=0.2)
+    cfg = AdmissionConfig()
+    lim = RateLimiter.kingman(spec, cfg)
+    es = spec.c0_s + spec.mean_size / cfg.fabric_capacity
+    assert lim.rate == pytest.approx(cfg.rho_bound / es)
+    assert GG1(lim.rate, es).rho == pytest.approx(cfg.rho_bound)
+    assert GG1(lim.rate * 1.1, es).rho > cfg.rho_bound
+    # a fair share split n ways shrinks the safe rate
+    assert RateLimiter.kingman(spec, cfg, n_flows=4).rate < lim.rate
+    # enforcement: a same-instant burst is clipped at the bucket depth
+    lim2 = RateLimiter(rate=2.0, burst=3.0)
+    assert sum(lim2.allow(0.0) for _ in range(10)) == 3
+
+
+# -------------------------------------------------------- stream parity
+@pytest.mark.parametrize("spec_k", [0, 3])
+def test_stream_itl_matches_metrics(spec_k):
+    """The client-visible token stream must measure exactly the ITLs the
+    engine records: same emission timestamps, same gaps — including
+    speculative bursts, where same-step tokens land with zero gap."""
+    eng = ServingEngine(CFG, max_slots=4, seq_cap=64, backend="paged",
+                        spec_k=spec_k)
+    gw = Gateway({"T1": [eng]},
+                 door_cfgs={"T1": DoorConfig(max_queue=64)})
+    rng = np.random.default_rng(0)
+    reqs = [Request(req_id=i, tenant="T1", prompt_len=pl,
+                    max_new_tokens=mn, arrival=0.0,
+                    prompt_tokens=rng.integers(0, CFG.vocab_size, pl))
+            for i, (pl, mn) in enumerate([(40, 4), (7, 8), (21, 2), (3, 6)])]
+    for r in reqs:
+        assert gw.offer(r, 0.0) is Verdict.ACCEPTED
+    gw.dispatch(0.0)
+    t = 0.0
+    while eng.has_work():
+        t += 0.01
+        gw.finalize("T1", eng, eng.step(), t)
+    gw.check()
+    door = gw.door("T1")
+    assert door.completed == len(reqs)
+    all_gaps = []
+    for r in reqs:
+        st = door.streams[r.req_id]
+        assert st.first_time == r.prefill_done
+        assert [ts for _, ts in st.events[1:]] == r.decode_times
+        assert [tok for tok, _ in st.events] == r.output_tokens
+        assert st.gaps == pytest.approx(r.itls)
+        all_gaps.extend(st.gaps)
+    itl_samples = [v for _, v in eng.metrics.itl.samples]
+    assert sorted(all_gaps) == pytest.approx(sorted(itl_samples))
+
+
+def test_stream_rollback_preserves_pre_preemption_gaps():
+    """Preemption rolls the stream back to the first token; already-
+    observed gaps stay recorded (the metrics window keeps its samples
+    too), and the first regenerated gap is measured from the ORIGINAL
+    first emission — mirroring finalize_step's cleared-decode_times
+    fallback to the retained prefill_done."""
+    st = TokenStream(make_req(0))
+    st.first(5, 1.0)
+    st.emit(6, 1.5)
+    st.emit(7, 2.0)
+    assert st.gaps == [0.5, 0.5]
+    st.rollback()
+    assert st.sent == 1
+    st.emit(6, 3.0)                  # first regenerated token
+    assert st.gaps == [0.5, 0.5, 2.0]
+    # a request preempted before its first token has nothing to roll back
+    st2 = TokenStream(make_req(1))
+    st2.rollback()
+    assert st2.sent == 0 and st2.first_time is None
+
+
+# ------------------------------------------------------- warmup hygiene
+def test_warm_engine_leaves_no_trace():
+    """The req_id=-1 warm request must not leave a zero-latency metrics
+    sample, a shared response-cache entry, or published directory pages
+    behind — and the wiring must be restored afterwards."""
+    from repro.launch.serve import warm_engine
+    from repro.serving.directory import PrefixDirectory, ResponseCache
+
+    rc = ResponseCache()
+    eng = ServingEngine(CFG, max_slots=2, seq_cap=64, backend="paged",
+                        response_cache=rc)
+    directory = PrefixDirectory(page_size=16)
+    directory.attach("T1", 0, eng.kv)
+    warm_engine(eng, "T1", prompt_len=48)
+    m = eng.metrics
+    assert m.latency.total == 0 and m.itl.total == 0
+    assert m.engine_ttft.total == 0
+    assert m.prefill_tokens_total == 0 and m.drafted_tokens_total == 0
+    assert m.response_cache_lookups == 0
+    assert eng.runtime.sched.rc_lookups == 0
+    assert eng.runtime.sched.rc_hits == 0
+    assert len(rc) == 0                          # nothing recorded
+    assert directory.stats.published == 0        # nothing published
+    assert eng.kv.listener is not None           # wiring restored
+    assert eng.runtime.sched.response_cache is rc
+
+
+# ------------------------------------------- serve() end-to-end ledger
+def test_serve_counts_rejections_at_pool_exhaustion():
+    """Regression for the silent-drop bug: burst traffic into a 1-slot
+    dense engine exhausts the prompt+max_new page reservation; every
+    failed submit must surface as a REJECTED verdict (after one
+    requeue), and the ledger must balance."""
+    from repro.launch.serve import serve
+
+    out = serve(requests=10, qps=500.0, slots=1, max_new=16,
+                with_controller=False, verbose=False)
+    t = out["T1"]
+    assert t["offered"] == 10
+    assert t["offered"] == t["completed"] + t["shed"] + t["rejected"] \
+        + t["expired"]
+    assert t["rejected"] > 0
+    assert t["reject_reasons"].get("pool_exhausted") == t["rejected"]
+    # the Prometheus export exposes the full ledger per tenant
+    assert 'gateway_offered_total{tenant="T1"} 10' in out["prometheus"]
+    for v in ("completed", "rejected", "shed", "expired"):
+        assert f'gateway_verdict_total{{tenant="T1",verdict="{v}"}}' \
+            in out["prometheus"]
+    for g in ("gateway_queue_depth", "gateway_in_flight",
+              "gateway_active_lanes", "gateway_saturation",
+              "gateway_door_ttft_p99_seconds",
+              "gateway_engine_ttft_p99_seconds"):
+        assert f'{g}{{tenant="T1"}}' in out["prometheus"]

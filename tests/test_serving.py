@@ -120,3 +120,13 @@ def test_ema_hysteresis_deadband():
     e.update(100.0)
     assert e.update(101.0) == 100.0     # within dead-band: ignored
     assert e.update(200.0) == 150.0     # real move passes through
+
+
+def test_ema_deadband_holds_for_negative_signals():
+    """The dead-band guard is on |value|: a signal living below zero
+    (headroom deltas, error terms) gets the same hysteresis as a
+    positive one instead of silently losing it."""
+    e = EMA(alpha=0.5, hysteresis=0.10)
+    e.update(-100.0)
+    assert e.update(-101.0) == -100.0   # sub-hysteresis wiggle: ignored
+    assert e.update(-200.0) == -150.0   # real move passes through
