@@ -69,10 +69,46 @@ def make_params(n_tenants: int, replicas: int, duration: float,
                      tenants=tuple(reg))
 
 
-def controlled_factory(sim):
-    c = Controller(sim.topo, sim.lattice, sim, ControllerConfig())
+def controlled_factory(sim, tracer=None):
+    c = Controller(sim.topo, sim.lattice, sim, ControllerConfig(),
+                   tracer=tracer)
     sim.register_tenants(c)
     return c
+
+
+def pause_correlation(sim, tracer) -> dict:
+    """Correlate controller pause windows with per-tenant tail spikes.
+
+    Every reconfigure/move lands on the tracer's ``controller`` track as
+    a span covering its pause window; each latency tenant's window keeps
+    (completion-time, latency) samples.  A pause's damage shows both
+    inside the window and in the backlog drain right after it, so each
+    window is extended by one pause-length of recovery.  Reports the
+    per-tenant p99 of samples inside vs outside, and their ratio — the
+    "reconfig pauses ARE the tail spikes" attribution E5 previously
+    could only eyeball from the timeline."""
+    windows = [(ev.ts, ev.ts + 2 * ev.dur)
+               for ev in tracer.actions if ev.dur > 0]
+    out = {}
+    for name, lt in sim.lat.items():
+        inside, outside = [], []
+        for t, v in lt.window.samples:
+            hit = any(a <= t <= b for a, b in windows)
+            (inside if hit else outside).append(v)
+        rec = {"pauses": len(windows), "samples_in": len(inside),
+               "samples_out": len(outside)}
+        if inside:
+            rec["p99_in_pause_ms"] = round(
+                float(np.quantile(inside, 0.99)) * 1e3, 3)
+        if outside:
+            rec["p99_outside_ms"] = round(
+                float(np.quantile(outside, 0.99)) * 1e3, 3)
+        if inside and outside:
+            rec["tail_spike_x"] = round(
+                rec["p99_in_pause_ms"] / max(rec["p99_outside_ms"], 1e-9),
+                3)
+        out[name] = rec
+    return out
 
 
 def tenant_rows(res) -> dict:
@@ -148,7 +184,14 @@ def run_cell(n_tenants: int, replicas: int, duration: float,
     p = make_params(n_tenants, replicas, duration, seed)
     topo = make_p4d_fleet(hosts)
     static = ClusterSim(p, topo=topo).run()
-    controlled = ClusterSim(p, controlled_factory, topo=topo).run()
+    # the controlled run carries a tracer: every actuator action lands
+    # on the shared timeline, so reconfig pause windows can be
+    # correlated with per-tenant latency samples after the run
+    from repro.core.obs import Tracer
+    tracer = Tracer()
+    csim = ClusterSim(p, lambda s: controlled_factory(s, tracer),
+                      topo=topo, tracer=tracer)
+    controlled = csim.run()
     improved = sum(
         1 for name in controlled.tenants
         if controlled.tenants[name].miss_rate
@@ -160,7 +203,9 @@ def run_cell(n_tenants: int, replicas: int, duration: float,
                    "aggregate_rps": round(static.aggregate_rps, 3)},
         "controlled": {"per_tenant": tenant_rows(controlled),
                        "aggregate_rps": round(controlled.aggregate_rps, 3),
-                       "actions": controlled.actions},
+                       "actions": controlled.actions,
+                       "pause_correlation": pause_correlation(csim,
+                                                              tracer)},
         "arbiter": {
             "max_units_per_gpu": controlled.arbiter_max_units,
             "budget": controlled.arbiter_budget,

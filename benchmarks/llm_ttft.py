@@ -87,7 +87,7 @@ def run(duration=1800.0, qps=1.75, seed=0, with_controller=True,
         verbose=True, compute_scale_7b=34.0, auto_calibrate=False,
         backend="dense", shared_prefix=0, prefix_cache=True,
         spec_k=0, templated=0, max_new=4, denoise=False,
-        response_cache=False):
+        response_cache=False, tracer=None):
     """Virtual-time serving loop.  compute_scale_7b maps the reduced
     model's measured prefill compute to the 7B-on-A100 operating point.
 
@@ -149,14 +149,16 @@ def run(duration=1800.0, qps=1.75, seed=0, with_controller=True,
     topo = make_p4d_cluster(2)
     now = [0.0]
     actuator = ServingActuator(engine, fabric, topo, lambda: now[0],
-                               rng=np.random.default_rng(seed + 1))
+                               rng=np.random.default_rng(seed + 1),
+                               tracer=tracer)
     ttft_window = LatencyWindow(max_samples=1 << 14, horizon_s=60.0)
 
     controller = None
     if with_controller:
         ccfg = ControllerConfig(policy=PolicyConfig(tau_s=0.200,
                                                     stable_obs=120))
-        controller = Controller(topo, A100_MIG, actuator, ccfg)
+        controller = Controller(topo, A100_MIG, actuator, ccfg,
+                                tracer=tracer)
         controller.register_tenant("T1", "latency", Slot(0, "h0:g0", 0),
                                    A100_MIG["2g.20gb"])
         controller.register_tenant("T2", "background", Slot(0, "h0:g1", 0),
@@ -222,6 +224,11 @@ def run(duration=1800.0, qps=1.75, seed=0, with_controller=True,
         # them too so response_cache_hit_rate reads only measured traffic
         engine.runtime.sched.rc_lookups = 0
         engine.runtime.sched.rc_hits = 0
+    # attach the flight recorder only now: warm/priming/calibration ran
+    # off-clock at t=0 and must stay out of the trace like they stay out
+    # of metrics (engine-only harness: timelines begin lazily at first
+    # step contact, the pre-compute wait labelled sched_queued)
+    engine.tracer = tracer
 
     def t2_active_at(t):
         return any(w.tenant == "T2" and w.start <= t < w.end
@@ -296,8 +303,9 @@ def run(duration=1800.0, qps=1.75, seed=0, with_controller=True,
         # only the prompt share of a (possibly mixed) step pays transfer
         sbytes = rep.prefill_tokens * 1.5e6      # per-token transfer bytes
         transfer = sbytes / fabric.t1_bandwidth()
+        step_start = now[0]
         now[0] += compute + transfer
-        engine.finalize_step(rep, now[0])
+        engine.finalize_step(rep, now[0], step_start)
         for pr in rep.prefilled:
             ttft_window.observe(now[0], pr.ttft, slo=0.200)
         completed += len(rep.completed)
@@ -663,7 +671,7 @@ def run_spec(duration=600.0, qps=1.0, seed=0, spec_k=4, max_new=32,
 
 
 def run_door(duration=600.0, qps=4.0, seed=0, verbose=True, slots=2,
-             max_new=8, door_queue=16, deadline_s=1.5):
+             max_new=8, door_queue=16, deadline_s=1.5, tracer=None):
     """Front-door arm: one dense engine behind a ``serving.gateway``
     door with --listen-style backpressure (bounded queue, dispatch
     deadline, Kingman-derived rate limit), run above the engine's
@@ -715,7 +723,9 @@ def run_door(duration=600.0, qps=4.0, seed=0, verbose=True, slots=2,
         door_cfgs={"T1": DoorConfig(
             max_queue=door_queue, deadline_s=deadline_s,
             max_attempts=1_000_000,
-            rate_limiter=RateLimiter.kingman(spec, AdmissionConfig()))})
+            rate_limiter=RateLimiter.kingman(spec, AdmissionConfig()))},
+        tracer=tracer)
+    engine.tracer = tracer    # after warm: t=0 warm steps stay untraced
 
     next_arrival = rng.exponential(1.0 / qps)
     req_id = 0
@@ -740,8 +750,9 @@ def run_door(duration=600.0, qps=4.0, seed=0, verbose=True, slots=2,
                 break
             now[0] = min(nxt)
             continue
+        step_start = now[0]
         now[0] += rep.compute_s * compute_scale
-        gateway.finalize("T1", engine, rep, now[0])
+        gateway.finalize("T1", engine, rep, now[0], start_time=step_start)
         done += len(rep.completed)
     gateway.dispatch(now[0] + deadline_s + 1.0)   # expire any stragglers
     door = gateway.door("T1")
@@ -780,6 +791,135 @@ def run_door(duration=600.0, qps=4.0, seed=0, verbose=True, slots=2,
     return out
 
 
+def run_trace(duration=240.0, qps=4.0, seed=0, verbose=True,
+              trace_out=None):
+    """Tail-attribution arm: the per-request flight recorder decomposes
+    the two p99 gaps the other arms only measure end-to-end.
+
+    * **door-vs-engine** (gateway arm, dense backend): the recorder's
+      ``door_queued`` segment is *defined* as engine-submit minus
+      front-door arrival, so per request ``door_ttft - door_queued ==
+      engine_ttft`` exactly — the arm recomputes the engine-measured
+      TTFT p99 purely from trace segments and checks it matches the
+      two-window measurement (``two_window_match``).
+    * **dense-vs-paged** (controller + interference): both backends run
+      the same trace with a recorder attached; the TTFT p99 gap is
+      attributed segment by segment (``ttft_tail_ms``: mean first-token
+      window composition of the tail exemplars) — e.g. how much of the
+      dense backend's extra tail is sched_queued (head-of-line blocking
+      chunked prefill removes) vs prefill compute.
+    * **tracing-off parity**: the same paged workload twice — recorder
+      attached vs not — under a SHARED frozen per-bucket step-cost
+      table (see ``run``'s denoise docs; raw per-step wall-clock varies
+      run to run, so frozen costs are what makes "identical" testable).
+      TTFT/ITL p99 and throughput must be bit-identical
+      (``parity_ok``): tracing never perturbs the virtual clock.
+
+    ``trace_out`` dumps the paged arm's full Chrome/Perfetto timeline
+    (request spans + controller actions — CI uploads it).
+    """
+    from repro.serving.trace import FlightRecorder
+
+    rec = FlightRecorder()
+    door = run_door(duration=duration, qps=qps, seed=seed, verbose=False,
+                    tracer=rec)
+    summaries = [s for s in rec.summaries.get("T1", ())
+                 if s.verdict == "completed" and s.ttft is not None]
+    door_ttft = np.array([s.ttft for s in summaries])
+    # the per-request identity: engine TTFT reconstructed from segments
+    eng_ttft = np.array([s.ttft - s.segs.get("door_queued", 0.0)
+                         for s in summaries])
+    door_p99_tr = float(np.quantile(door_ttft, 0.99)) * 1e3
+    eng_p99_tr = float(np.quantile(eng_ttft, 0.99)) * 1e3
+    door_part = {
+        "door_ttft_p99_ms": door["door_ttft_p99_ms"],
+        "engine_ttft_p99_ms": door["engine_ttft_p99_ms"],
+        "p99_gap_ms": door["door_ttft_p99_ms"]
+        - door["engine_ttft_p99_ms"],
+        "door_queued_p99_ms": rec.segment_quantile(
+            "T1", "door_queued", 0.99) * 1e3,
+        "trace_door_ttft_p99_ms": door_p99_tr,
+        "trace_engine_ttft_p99_ms": eng_p99_tr,
+        # segments reproduce BOTH window measurements (same per-request
+        # values, same quantile): the gap is fully attributed
+        "two_window_match": bool(
+            abs(door_p99_tr - door["door_ttft_p99_ms"]) < 1e-6
+            and abs(eng_p99_tr - door["engine_ttft_p99_ms"]) < 1e-6),
+        "verdicts": door["verdicts"],
+        "tail_ms": rec.breakdown().get("T1", {}).get("tail_ms", {}),
+    }
+
+    # tracing-off parity: same paged workload, frozen shared step costs,
+    # recorder on vs off — results must be bit-identical.
+    shared_min: dict = {}
+    cal = run(duration=5.0, qps=1.0, seed=seed, with_controller=False,
+              auto_calibrate=True, backend="paged", denoise=shared_min,
+              verbose=False)
+    pkw = dict(duration=min(duration, 60.0), qps=1.75, seed=seed,
+               with_controller=False, backend="paged",
+               compute_scale_7b=cal["compute_scale_7b"],
+               denoise=shared_min, verbose=False)
+    traced = run(tracer=FlightRecorder(), **pkw)
+    untraced = run(**pkw)
+    parity_keys = ("ttft_p99_ms", "itl_p99_ms", "throughput_rps",
+                   "shed", "miss_rate")
+    parity_ok = bool(all(traced[k] == untraced[k] for k in parity_keys))
+    door_part["parity_ok"] = parity_ok
+
+    ab = {}
+    recs = {}
+    for b in ("dense", "paged"):
+        r = FlightRecorder()
+        res = run(duration=duration, qps=1.75, seed=seed,
+                  with_controller=True, backend=b, auto_calibrate=True,
+                  tracer=r, verbose=False)
+        r.check()
+        bd = r.breakdown().get("T1", {})
+        ab[b] = {"ttft_p99_ms": res["ttft_p99_ms"],
+                 "itl_p99_ms": res["itl_p99_ms"],
+                 "actions": res["actions"],
+                 "breakdown": bd}
+        recs[b] = r
+    segs = sorted(set(ab["dense"]["breakdown"].get("ttft_tail_ms", {}))
+                  | set(ab["paged"]["breakdown"].get("ttft_tail_ms", {})))
+    gap_by_segment = {
+        s: ab["dense"]["breakdown"].get("ttft_tail_ms", {}).get(s, 0.0)
+        - ab["paged"]["breakdown"].get("ttft_tail_ms", {}).get(s, 0.0)
+        for s in segs}
+    out = {
+        "workload": {"duration_s": duration, "qps": qps, "seed": seed},
+        "door": door_part,
+        "dense": ab["dense"],
+        "paged": ab["paged"],
+        "dense_vs_paged_ttft_p99_gap_ms": (ab["dense"]["ttft_p99_ms"]
+                                           - ab["paged"]["ttft_p99_ms"]),
+        "ttft_gap_by_segment_ms": gap_by_segment,
+    }
+    if trace_out:
+        recs["paged"].dump(trace_out)
+        out["trace_out"] = trace_out
+    if verbose:
+        d = door_part
+        print("== tail-attribution trace arm ==")
+        print(f"  door vs engine TTFT p99: {d['door_ttft_p99_ms']:.1f} vs "
+              f"{d['engine_ttft_p99_ms']:.1f} ms (gap "
+              f"{d['p99_gap_ms']:.1f} ms; door_queued segment p99 "
+              f"{d['door_queued_p99_ms']:.1f} ms)  "
+              f"two-window match: {d['two_window_match']}  "
+              f"untraced parity: {d['parity_ok']}")
+        print(f"  dense vs paged TTFT p99: "
+              f"{ab['dense']['ttft_p99_ms']:.1f} vs "
+              f"{ab['paged']['ttft_p99_ms']:.1f} ms — tail gap by "
+              f"segment (ms): "
+              + ", ".join(f"{k}={v:+.1f}"
+                          for k, v in gap_by_segment.items()))
+        for b in ("dense", "paged"):
+            print(f"  [{b}] {recs[b].table()}")
+        if trace_out:
+            print(f"  Perfetto trace written to {trace_out}")
+    return out
+
+
 def run_backend(backend="dense", verbose=True, seed=0, duration=1800.0):
     static = run(with_controller=False, seed=seed, backend=backend,
                  duration=duration)
@@ -809,9 +949,13 @@ def _maybe_dump(out, json_path):
 
 
 def main(verbose=True, backend="dense", shared_prefix=False, spec=False,
-         duration=1800.0, json_path=None, replicas=0, door=False):
+         duration=1800.0, json_path=None, replicas=0, door=False,
+         trace=False, trace_out=None):
     if verbose:
         print("== LLM serving case study (vLLM-style, OLMo-2-7B) ==")
+    if trace:
+        return _maybe_dump(run_trace(duration=duration, verbose=verbose,
+                                     trace_out=trace_out), json_path)
     if door:
         return _maybe_dump(run_door(duration=duration, verbose=verbose),
                            json_path)
@@ -866,6 +1010,15 @@ if __name__ == "__main__":
                          "bounded backpressure door, reporting door- vs "
                          "engine-measured TTFT p99 side by side plus the "
                          "verdict-conservation ledger")
+    ap.add_argument("--trace", action="store_true",
+                    help="tail-attribution arm: per-request flight-"
+                         "recorder traces decompose the door-vs-engine "
+                         "and dense-vs-paged TTFT p99 gaps by named "
+                         "segment, with conservation + untraced-parity "
+                         "checks")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="--trace: write the paged arm's Chrome/Perfetto "
+                         "trace_event JSON here")
     ap.add_argument("--duration", type=float, default=1800.0,
                     help="virtual-time seconds per run (CI uses a short "
                          "duration)")
@@ -874,4 +1027,5 @@ if __name__ == "__main__":
     args = ap.parse_args()
     main(backend=args.backend, shared_prefix=args.shared_prefix,
          spec=args.spec, duration=args.duration, json_path=args.json,
-         replicas=args.replicas, door=args.door)
+         replicas=args.replicas, door=args.door, trace=args.trace,
+         trace_out=args.trace_out)

@@ -113,7 +113,8 @@ class AdmissionController:
                  ledger: DeviceLedger,
                  cfg: AdmissionConfig = AdmissionConfig(), *,
                  lattice: ProfileLattice = A100_MIG,
-                 weights: PlacementWeights = PlacementWeights()):
+                 weights: PlacementWeights = PlacementWeights(),
+                 tracer=None):
         self.topo = topo
         self.registry = registry
         self.ledger = ledger
@@ -122,6 +123,17 @@ class AdmissionController:
         self.weights = weights
         self.queue: List[TenantSpec] = []
         self.records: List[AdmissionRecord] = []
+        # core.obs.Tracer (or None): tenant-plane verdicts land as
+        # instants on the controller track alongside actuator actions
+        self.tracer = tracer
+
+    def _record(self, rec: AdmissionRecord) -> None:
+        self.records.append(rec)
+        if self.tracer is not None:
+            self.tracer.instant(
+                f"admission:{rec.verdict.value}", rec.time,
+                track="controller", lane=rec.tenant,
+                slots=list(rec.slots), reason=rec.reason)
 
     # ------------------------------------------------------------- scoring
     def _snapshot(self, now: float) -> Snapshot:
@@ -233,17 +245,17 @@ class AdmissionController:
         slots = self.safe_slots_for(spec, snap, now)
         if slots is not None:
             self._commit(spec, slots)
-            self.records.append(AdmissionRecord(
+            self._record(AdmissionRecord(
                 now, spec.name, AdmissionVerdict.ADMIT,
                 tuple(s.key for s in slots)))
             return AdmissionVerdict.ADMIT, slots
         if len(self.queue) < self.cfg.max_queue:
             self.queue.append(spec)
-            self.records.append(AdmissionRecord(
+            self._record(AdmissionRecord(
                 now, spec.name, AdmissionVerdict.QUEUE,
                 reason="no safe placement"))
             return AdmissionVerdict.QUEUE, None
-        self.records.append(AdmissionRecord(
+        self._record(AdmissionRecord(
             now, spec.name, AdmissionVerdict.REJECT, reason="queue full"))
         return AdmissionVerdict.REJECT, None
 
@@ -259,7 +271,7 @@ class AdmissionController:
             slots = self.safe_slots_for(spec, snap, now)
             if slots is not None:
                 placed = self._commit(spec, slots)
-                self.records.append(AdmissionRecord(
+                self._record(AdmissionRecord(
                     now, spec.name, AdmissionVerdict.ADMIT,
                     tuple(s.key for s in slots), reason="retry"))
                 admitted.append((placed, slots))

@@ -91,11 +91,16 @@ class TenantState:
 class Controller:
     def __init__(self, topo: ClusterTopology, lattice: ProfileLattice,
                  actuator: Actuator, cfg: ControllerConfig = ControllerConfig(),
-                 primary: Optional[str] = None):
+                 primary: Optional[str] = None, tracer=None):
         self.topo = topo
         self.lattice = lattice
         self.actuator = actuator
         self.cfg = cfg
+        # core.obs.Tracer (or None): every audited Decision also lands as
+        # an instant on the shared "controller" track, so request
+        # timelines can be correlated with the control loop's choices
+        # (the actuator separately traces the actions it executes)
+        self.tracer = tracer
         self._primary = primary            # None: first registered latency
         self.fsms: Dict[str, DecisionFSM] = {}
         self.smoother = SignalSmoother(cfg.ema_alpha, cfg.ema_hysteresis)
@@ -169,6 +174,15 @@ class Controller:
                 replicas=slots)
 
     # ------------------------------------------------------------- helpers
+    def _record(self, decision: Decision) -> Decision:
+        """Audit-log a decision and mirror it onto the trace timeline."""
+        self.audit.record(decision)
+        if self.tracer is not None:
+            self.tracer.instant(
+                f"decision:{decision.action}", decision.time,
+                track="controller", lane=decision.tenant, **decision.args)
+        return decision
+
     def _tau(self, name: str) -> float:
         fsm = self.fsms.get(name)
         return fsm.cfg.tau_s if fsm is not None else self.cfg.policy.tau_s
@@ -303,7 +317,7 @@ class Controller:
             self._last_throttle_time[name] = now
             applied = self.guardrails.throttle_io(self.actuator, bw_off,
                                                   value, now)
-            out.append(self.audit.record(Decision(
+            out.append(self._record(Decision(
                 now, "throttle_io", bw_off, {"bytes_per_s": applied,
                                              "for": name},
                 self._summary(name, snap))))
@@ -350,7 +364,7 @@ class Controller:
                 self.arbiter.move(name, old_device, slot.device,
                                   prim.profile.compute_units, now, replica=0)
                 fsm.action_taken(p99)
-                out.append(self.audit.record(Decision(
+                out.append(self._record(Decision(
                     now, "move", name,
                     {"to": slot.key, "score": ranked[0][1],
                      "from_score": cur_score, "pause_s": pause},
@@ -380,7 +394,7 @@ class Controller:
                     prim.profile = target
                     prim.config.profile = target.name
                     fsm.action_taken(p99)
-                    out.append(self.audit.record(Decision(
+                    out.append(self._record(Decision(
                         now, "reconfigure", name,
                         {"profile": target.name, "pause_s": pause},
                         self._summary(name, snap), before.__dict__,
@@ -399,7 +413,7 @@ class Controller:
                                                         comp_off, new_q)
                 st.config.mps_quota = applied
                 fsm.action_taken(p99)
-                out.append(self.audit.record(Decision(
+                out.append(self._record(Decision(
                     now, "mps", comp_off, {"quota": applied, "for": name},
                     self._summary(name, snap))))
         return out
@@ -412,7 +426,7 @@ class Controller:
         if not prim.config.cpu_pinned_away_from_irq:
             self.actuator.pin_cpu_away_from_irq(name)
             prim.config.cpu_pinned_away_from_irq = True
-            out.append(self.audit.record(Decision(
+            out.append(self._record(Decision(
                 now, "pin_cpu", name, {}, self._summary(name, snap))))
         if self.cfg.enable_guardrails and comp_off is not None:
             st = self.tenants[comp_off]
@@ -422,7 +436,7 @@ class Controller:
                 applied = self.guardrails.set_mps_quota(self.actuator,
                                                         comp_off, new_q)
                 st.config.mps_quota = applied
-                out.append(self.audit.record(Decision(
+                out.append(self._record(Decision(
                     now, "mps", comp_off, {"quota": applied, "for": name},
                     self._summary(name, snap))))
 
@@ -449,7 +463,7 @@ class Controller:
         self.arbiter.set_profile(name, smaller.compute_units, snap.time,
                                  action="relax")
         fsm.action_taken(p99)
-        return self.audit.record(Decision(
+        return self._record(Decision(
             snap.time, "relax", name,
             {"profile": smaller.name, "pause_s": pause},
             self._summary(name, snap), before.__dict__,
@@ -509,7 +523,7 @@ class Controller:
                     good.device = prim.config.device
                     good.slot = prim.config.slot
             prim.config = good.copy()
-        return self.audit.record(Decision(
+        return self._record(Decision(
             snap.time, "rollback", tenant, {"pause_s": pause},
             self._summary(tenant, snap), before.__dict__,
             prim.config.copy().__dict__))

@@ -83,7 +83,8 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
           prefix_cache: bool = True, spec_k: int = 0, route: str = "cache",
           route_imbalance: int = 4, route_staleness: int = 256,
           response_cache: bool = True, listen: bool = False,
-          door_queue: int = 64, door_deadline_ms: float = 1000.0):
+          door_queue: int = 64, door_deadline_ms: float = 1000.0,
+          trace: bool = False, trace_out: str = None):
     """Virtual-time multi-tenant serving run; returns per-tenant stats.
 
     ``listen=True`` (the ``--listen`` flag) turns on the gateway's
@@ -95,6 +96,17 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
     429 path).  Without it the gateway still fronts every request with
     an effectively unbounded patient door, so the verdict-conservation
     ledger holds on both paths.
+
+    ``trace=True`` (or ``trace_out=<path>``) arms the per-request
+    flight recorder: every request accrues a span timeline
+    (door_queued -> sched_queued -> prefill chunks -> decode, with
+    preemption windows and speculative verify events) whose segments
+    sum to its measured E2E, and every controller/actuator action lands
+    on a shared virtual-clock timeline.  ``trace_out`` additionally
+    dumps a Chrome/Perfetto ``trace_event`` JSON.  Disabled tracing is
+    zero-cost (every call site is None-guarded) and tracing never
+    perturbs the virtual clock — token output and timings are identical
+    either way.
     """
     from collections import deque
 
@@ -241,15 +253,31 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
             **placements, "T2": [Slot(0, "h0:g1", 0)],
             "T3": [Slot(0, "h0:g0", 1)]})
 
+    recorder = None
+    if trace or trace_out:
+        from repro.serving.trace import FlightRecorder
+        recorder = FlightRecorder()
+
     def warm(name):
         for eng in engines[name]:
             warm_engine(eng, name, prompt_len)
+        # attach the recorder only AFTER warming: the warm request
+        # (req_id=-1, virtual time 0) must stay out of the trace just
+        # like it stays out of metrics and the caches
+        if recorder is not None:
+            for eng in engines[name]:
+                eng.tracer = recorder
 
     # warm the jit caches so compile time never enters the virtual clock
     # (warm_engine keeps the warm request out of metrics, the shared
     # response cache, and the prefix directory)
     for name in names:
         warm(name)
+    if recorder is not None:
+        gateway.tracer = recorder
+        actuator.tracer = recorder
+        if controller is not None:
+            controller.tracer = recorder
 
     rng = np.random.default_rng(seed)
     reqs = {name: [] for name in names}
@@ -297,7 +325,7 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
     admission_log = []
     if admit > 0:
         admission = AdmissionController(topo, registry, ledger,
-                                        AdmissionConfig())
+                                        AdmissionConfig(), tracer=recorder)
         span = requests / qps
         admit_events = deque(
             (span * 0.3 + j * max(1.0, 1.0 / qps),
@@ -402,8 +430,10 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
                 end = now[0] + dur
                 avail[(name, j)] = end
                 # gateway finalize = engine timestamps + token-stream
-                # mirroring + terminal COMPLETED verdicts
-                gateway.finalize(name, eng, rep, end)
+                # mirroring + terminal COMPLETED verdicts; start_time
+                # lets the trace pin prefill-chunk spans to the step
+                # window on the virtual clock
+                gateway.finalize(name, eng, rep, end, start_time=now[0])
                 for pr in rep.prefilled:
                     windows[name].observe(end, pr.ttft, slo=0.2)
                 stepped = True
@@ -487,6 +517,15 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
     out["prometheus"] = gateway.prometheus(now[0])
     gateway.check()     # offered == completed+rejected+shed+expired+in_flight
     ledger.check()
+    if recorder is not None:
+        recorder.check()    # per-request: segments sum to measured E2E
+        out["trace"] = recorder.breakdown(now[0])
+        if trace_out:
+            recorder.dump(trace_out)
+        if verbose:
+            print(recorder.table())
+            if trace_out:
+                print(f"trace written to {trace_out}")
     return out
 
 
@@ -541,6 +580,13 @@ def main():
     ap.add_argument("--door-deadline-ms", type=float, default=1000.0,
                     help="--listen: queued requests not dispatched within "
                          "this deadline are EXPIRED")
+    ap.add_argument("--trace", action="store_true",
+                    help="arm the per-request flight recorder (span "
+                         "timelines whose segments sum to measured E2E, "
+                         "plus controller actions on a shared timeline)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome/Perfetto trace_event JSON here "
+                         "(implies --trace)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     serve(arch=args.arch, requests=args.requests, qps=args.qps,
@@ -554,7 +600,8 @@ def main():
           route_staleness=args.route_staleness,
           response_cache=not args.no_response_cache, listen=args.listen,
           door_queue=args.door_queue,
-          door_deadline_ms=args.door_deadline_ms)
+          door_deadline_ms=args.door_deadline_ms,
+          trace=args.trace, trace_out=args.trace_out)
 
 
 if __name__ == "__main__":

@@ -76,6 +76,17 @@ class StepReport:
     # decode_tokens already counts every committed token (base + accepted)
     drafted_tokens: int = 0
     accepted_tokens: int = 0
+    # --- flight-recorder detail (serving/trace.py) -----------------------
+    # prefill work per request this step: (req, token_start, chunk_len,
+    # chunk_index) — the dense backend reports its whole-prompt prefill
+    # as chunk 0, the paged runtime one entry per planned chunk
+    chunks: List[tuple] = field(default_factory=list)
+    # per-lane speculative verify outcome: (req, drafted, accepted),
+    # only for lanes that carried a draft this step
+    spec: List[tuple] = field(default_factory=list)
+    # preemption detail: (victim_req_id, beneficiary_req_id) pairs, the
+    # same tuples the scheduler appends to its preempt_log this step
+    preempt_pairs: List[tuple] = field(default_factory=list)
 
 
 class ServingEngine:
@@ -127,6 +138,10 @@ class ServingEngine:
         self.backend = backend
         self.quota = 1.0
         self.metrics = TenantMetrics()
+        # optional serving/trace.FlightRecorder: ``finalize_step`` folds
+        # each step into per-request timelines.  None (the default) is
+        # the zero-cost path — a single guard, no recorder calls.
+        self.tracer = None
         self._rng = np.random.default_rng(seed)
         if backend == "paged":
             from repro.serving.paged_runtime import PagedRuntime
@@ -222,8 +237,14 @@ class ServingEngine:
             return self._do_decode()
         return StepReport(kind="idle")
 
-    def finalize_step(self, report: StepReport, end_time: float) -> None:
-        """Record timestamps using the harness-provided completion time."""
+    def finalize_step(self, report: StepReport, end_time: float,
+                      start_time: Optional[float] = None) -> None:
+        """Record timestamps using the harness-provided completion time.
+
+        ``start_time`` (optional) is the step's virtual start stamp —
+        only the flight recorder consumes it, to open this step's spans
+        at the step boundary instead of each request's previous event;
+        metrics observe ``end_time`` exactly as before."""
         for req in report.prefilled:
             req.prefill_done = end_time
             # door-measured TTFT: from arrival at the front door (includes
@@ -248,6 +269,9 @@ class ServingEngine:
             req.finished = end_time
         if report.tokens:
             self.metrics.observe_tokens(end_time, report.tokens)
+        if self.tracer is not None:
+            self.tracer.on_step(report, start_time, end_time,
+                                engine=self.backend)
 
     # ------------------------------------------------------------ internals
     def _merge_slot_cache(self, cache1, slot: int) -> None:
@@ -300,6 +324,7 @@ class ServingEngine:
         self.last_token[slot] = first_tok
         report = StepReport(kind="prefill", compute_s=dt, tokens=req.prompt_len,
                             prefill_tokens=req.prompt_len, prefilled=[req])
+        report.chunks.append((req, 0, req.prompt_len, 0))
         if req.generated >= req.max_new_tokens:
             self._retire(req, report)
         return report

@@ -202,13 +202,18 @@ class Gateway:
                  routers: Optional[Dict[str, object]] = None, *,
                  door_cfgs: Optional[Dict[str, DoorConfig]] = None,
                  default_cfg: DoorConfig = DoorConfig(),
-                 paused_until: Optional[Callable[[str], float]] = None):
+                 paused_until: Optional[Callable[[str], float]] = None,
+                 tracer: Optional[object] = None):
         self.engines = engines
         self.routers = routers if routers is not None else {}
         self.door_cfgs = door_cfgs or {}
         self.default_cfg = default_cfg
         self.paused_until = paused_until or (lambda name: 0.0)
         self.doors: Dict[str, TenantDoor] = {}
+        # serving.trace.FlightRecorder (or None): door-side span sources —
+        # offer/admit/expire/reject; engine-side spans flow via
+        # finalize_step's own hook
+        self.tracer = tracer
 
     def door(self, name: str) -> TenantDoor:
         d = self.doors.get(name)
@@ -224,23 +229,27 @@ class Gateway:
         the bounded queue for dispatch."""
         door = self.door(req.tenant)
         door.offered += 1
+        verdict = Verdict.ACCEPTED
         if req.arrival < self.paused_until(req.tenant):
             door._terminal(req, Verdict.SHED)
-            return Verdict.SHED
-        lim = door.cfg.rate_limiter
-        if lim is not None and not lim.allow(now):
+            verdict = Verdict.SHED
+        elif (lim := door.cfg.rate_limiter) is not None \
+                and not lim.allow(now):
             door._terminal(req, Verdict.REJECTED, "rate_limit")
-            return Verdict.REJECTED
-        if len(door.queue) >= door.cfg.max_queue:
+            verdict = Verdict.REJECTED
+        elif len(door.queue) >= door.cfg.max_queue:
             door._terminal(req, Verdict.REJECTED, "queue_full")
-            return Verdict.REJECTED
-        door._state[req.req_id] = Verdict.ACCEPTED
-        door.in_flight += 1
-        deadline = None if door.cfg.deadline_s is None \
-            else now + door.cfg.deadline_s
-        door.queue.append(_Entry(req, deadline))
-        door.streams[req.req_id] = TokenStream(req)
-        return Verdict.ACCEPTED
+            verdict = Verdict.REJECTED
+        else:
+            door._state[req.req_id] = Verdict.ACCEPTED
+            door.in_flight += 1
+            deadline = None if door.cfg.deadline_s is None \
+                else now + door.cfg.deadline_s
+            door.queue.append(_Entry(req, deadline))
+            door.streams[req.req_id] = TokenStream(req)
+        if self.tracer is not None:
+            self.tracer.on_offer(req, now, verdict.value)
+        return verdict
 
     # ------------------------------------------------------------- dispatch
     def _route(self, name: str, req: Request) -> int:
@@ -268,6 +277,8 @@ class Gateway:
                     door.queue.popleft()
                     door.streams.pop(entry.req.req_id, None)
                     door._terminal(entry.req, Verdict.EXPIRED)
+                    if self.tracer is not None:
+                        self.tracer.on_terminal(entry.req, now, "expired")
                     continue
                 if entry.last_attempt >= now:
                     break                   # already tried this instant
@@ -275,12 +286,14 @@ class Gateway:
                     break                   # replicas not wired yet
                 entry.attempts += 1
                 entry.last_attempt = now
-                outcome = self.engines[name][self._route(name, entry.req)] \
-                    .submit(entry.req)
+                idx = self._route(name, entry.req)
+                outcome = self.engines[name][idx].submit(entry.req)
                 if outcome:
                     entry.req.submitted = now
                     door.queue.popleft()
                     landed += 1
+                    if self.tracer is not None:
+                        self.tracer.on_admit(entry.req, now, engine=idx)
                     continue
                 if not outcome.transient \
                         or entry.attempts >= door.cfg.max_attempts:
@@ -288,18 +301,24 @@ class Gateway:
                     door.streams.pop(entry.req.req_id, None)
                     door._terminal(entry.req, Verdict.REJECTED,
                                    outcome.reason)
+                    if self.tracer is not None:
+                        self.tracer.on_terminal(entry.req, now, "rejected",
+                                                reason=outcome.reason)
                     continue
                 break       # transient shortage: hold the line, retry later
         return landed
 
     # ------------------------------------------------------------- finalize
     def finalize(self, name: str, eng: ServingEngine, report: StepReport,
-                 end_time: float) -> None:
+                 end_time: float,
+                 start_time: Optional[float] = None) -> None:
         """Timestamp an engine step *and* mirror it into door state:
         engine metrics first (the authoritative clocks), then streams
         (first token / per-token emissions / preemption rollbacks) and
-        terminal COMPLETED verdicts."""
-        eng.finalize_step(report, end_time)
+        terminal COMPLETED verdicts.  ``start_time`` (the step's launch
+        instant on the virtual clock) flows to the engine's trace hook so
+        prefill-chunk spans cover the step window rather than a point."""
+        eng.finalize_step(report, end_time, start_time)
         door = self.doors.get(name)
         if door is None:
             return
@@ -416,4 +435,37 @@ class Gateway:
              [({"tenant": n},
                self._pool_p99([e.metrics.engine_ttft for e in engs[n]], now))
               for n in names])
+
+        # cumulative histograms: unlike the windowed p99 gauges above,
+        # bucket counts are never trimmed, so they aggregate correctly
+        # across replicas and scrape intervals (rate() / histogram_quantile)
+        def emit_hist(metric: str, help_: str, attr: str) -> None:
+            lines.append(f"# HELP {metric} {help_}")
+            lines.append(f"# TYPE {metric} histogram")
+            for n in names:
+                windows = [getattr(e.metrics, attr) for e in engs[n]]
+                acc: List[List[float]] = []
+                total_sum = 0.0
+                for w in windows:
+                    h = w.hist()
+                    if not acc:
+                        acc = [[le, float(c)] for le, c in h]
+                    else:
+                        for i, (_, c) in enumerate(h):
+                            acc[i][1] += c
+                    total_sum += w.sum
+                count = acc[-1][1] if acc else 0.0
+                for le, c in acc:
+                    tag = "+Inf" if le == float("inf") else f"{le:g}"
+                    lines.append(
+                        f'{metric}_bucket{{tenant="{n}",le="{tag}"}} {c:g}')
+                lines.append(f'{metric}_sum{{tenant="{n}"}} {total_sum:g}')
+                lines.append(f'{metric}_count{{tenant="{n}"}} {count:g}')
+
+        emit_hist("gateway_door_ttft_seconds",
+                  "TTFT from front-door arrival to first token.", "latency")
+        emit_hist("gateway_engine_ttft_seconds",
+                  "TTFT from engine submit to first token.", "engine_ttft")
+        emit_hist("gateway_itl_seconds",
+                  "Inter-token latency between streamed emissions.", "itl")
         return "\n".join(lines) + "\n"

@@ -2,11 +2,19 @@
 hysteresis — the controller's primary signal source (paper §2.1)."""
 from __future__ import annotations
 
+import bisect
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, Dict, Optional, Tuple
+from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
+
+# Prometheus-style cumulative histogram boundaries (seconds).  Chosen to
+# straddle the repo's operating points: sub-ms ITL gaps up through
+# multi-second door waits under a reconfigure pause.
+DEFAULT_BUCKETS: Tuple[float, ...] = (
+    0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.2, 0.4, 0.8,
+    1.6, 3.2, 6.4)
 
 
 class LatencyWindow:
@@ -17,15 +25,25 @@ class LatencyWindow:
     steps out of order — those samples are insort-ed so the
     recent-horizon lookup stays a valid bisect over the time array (the
     controller samples every second — this is the simulator's hot path).
+
+    Alongside the bounded sample window the class keeps *cumulative*
+    histogram bucket counts (never trimmed): windowed p99 gauges cannot
+    be aggregated across replicas or scrape intervals, but cumulative
+    ``le``-bucket counters sum correctly — the ``gateway_*_bucket``
+    series ``Gateway.prometheus()`` exports.
     """
 
-    def __init__(self, max_samples: int = 4096, horizon_s: float = 60.0):
+    def __init__(self, max_samples: int = 4096, horizon_s: float = 60.0,
+                 buckets: Tuple[float, ...] = DEFAULT_BUCKETS):
         self.max_samples = max_samples
         self.horizon_s = horizon_s
         self._times: list = []
         self._vals: list = []
         self.total = 0
         self.misses = 0
+        self.buckets = tuple(buckets)
+        self.bucket_counts = [0] * (len(self.buckets) + 1)  # +Inf last
+        self.sum = 0.0
 
     @property
     def samples(self):
@@ -34,7 +52,6 @@ class LatencyWindow:
     def observe(self, now: float, latency: float,
                 slo: Optional[float] = None) -> None:
         if self._times and now < self._times[-1]:
-            import bisect
             i = bisect.bisect_right(self._times, now)
             self._times.insert(i, now)
             self._vals.insert(i, latency)
@@ -42,18 +59,33 @@ class LatencyWindow:
             self._times.append(now)
             self._vals.append(latency)
         if len(self._times) > 2 * self.max_samples:
+            # trim from the head of the time-sorted arrays: the dropped
+            # samples are exactly the oldest ones, so a sample inside
+            # horizon_s can only fall out after every older sample did
+            # (tests/test_serving.py asserts this trim-vs-horizon order)
             self._times = self._times[-self.max_samples:]
             self._vals = self._vals[-self.max_samples:]
         self.total += 1
+        self.sum += latency
+        self.bucket_counts[bisect.bisect_left(self.buckets, latency)] += 1
         if slo is not None and latency > slo:
             self.misses += 1
+
+    def hist(self) -> List[Tuple[float, int]]:
+        """Cumulative (le, count) pairs, ``+Inf`` last (== ``total``)."""
+        out: List[Tuple[float, int]] = []
+        acc = 0
+        for le, n in zip(self.buckets, self.bucket_counts):
+            acc += n
+            out.append((le, acc))
+        out.append((float("inf"), self.total))
+        return out
 
     def _recent(self, now: Optional[float] = None) -> np.ndarray:
         if not self._times:
             return np.zeros(0)
         if now is None:
             return np.asarray(self._vals)
-        import bisect
         lo = bisect.bisect_left(self._times, now - self.horizon_s)
         return np.asarray(self._vals[lo:])
 
@@ -173,8 +205,16 @@ class TenantMetrics:
     # measured between consecutive token-emission timestamps — makes
     # TPOT/ITL observable to the controller, not just TTFT
     itl: LatencyWindow = field(default_factory=LatencyWindow)
+    # token-throughput samples inside the retention horizon, plus their
+    # running sum: ``throughput()`` runs every controller tick for every
+    # tenant, so it must not rescan the whole window each call.  Samples
+    # older than ``throughput_horizon_s`` are lazily expired from the
+    # left (the deque is time-ordered — ``observe_tokens`` stamps come
+    # from the monotone per-engine step clock).
     throughput_window: Deque[Tuple[float, int]] = field(
-        default_factory=lambda: deque(maxlen=4096))
+        default_factory=deque)
+    throughput_horizon_s: float = 10.0
+    _thr_sum: int = 0
     # KV page-pool gauges (latest sample): ``kv_used_pages`` counts pages
     # holding live KV, ``kv_reserved_pages`` counts pages off the free list
     # (live + reserved-but-unwritten) — under the dense backend's
@@ -203,6 +243,14 @@ class TenantMetrics:
 
     def observe_tokens(self, now: float, n: int) -> None:
         self.throughput_window.append((now, n))
+        self._thr_sum += n
+        self._expire_tokens(now - self.throughput_horizon_s)
+
+    def _expire_tokens(self, lo: float) -> None:
+        w = self.throughput_window
+        while w and w[0][0] < lo:
+            _, n = w.popleft()
+            self._thr_sum -= n
 
     def observe_prefill(self, computed: int, prefix_hits: int) -> None:
         self.prefill_tokens_total += computed
@@ -256,7 +304,24 @@ class TenantMetrics:
     def itl_p99(self, now: Optional[float] = None) -> float:
         return self.itl.quantile(0.99, now)
 
-    def throughput(self, now: float, horizon_s: float = 10.0) -> float:
+    def throughput(self, now: float,
+                   horizon_s: Optional[float] = None) -> float:
+        """Tokens/s over the trailing horizon.  The default horizon is
+        the retention horizon — an O(1) read of the running sum (after
+        lazily expiring stale samples).  A narrower ``horizon_s`` scans
+        only the tail of the already-bounded window; a wider one is
+        capped at the retention horizon (older samples are gone —
+        raise ``throughput_horizon_s`` up front if you need them)."""
+        if horizon_s is None or horizon_s >= self.throughput_horizon_s:
+            h = self.throughput_horizon_s
+            self._expire_tokens(now - h)
+            return self._thr_sum / (horizon_s or h)
+        self._expire_tokens(now - self.throughput_horizon_s)
         lo = now - horizon_s
-        tot = sum(n for t, n in self.throughput_window if t >= lo)
+        w = self.throughput_window
+        tot = 0
+        for t, n in reversed(w):
+            if t < lo:
+                break
+            tot += n
         return tot / horizon_s

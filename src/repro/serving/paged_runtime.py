@@ -356,9 +356,14 @@ class PagedRuntime:
         return logits, time.perf_counter() - t0
 
     def step(self) -> StepReport:
+        log_mark = len(self.sched.preempt_log)
         plan = self.sched.plan()
         report = StepReport(kind="idle")
         report.preempted = [s.req for s in plan.preempted]
+        # every preemption happens inside plan(): the log's new tail is
+        # exactly this step's (victim, beneficiary) pairs — the flight
+        # recorder attaches the beneficiary to the victim's timeline
+        report.preempt_pairs = list(self.sched.preempt_log[log_mark:])
         report.prefix_hit_tokens = plan.prefix_hit_tokens
         if plan.empty:
             return report
@@ -437,6 +442,7 @@ class PagedRuntime:
                 m = min(a + 1, s.req.max_new_tokens - s.req.generated)
                 committed = g[:m]
                 if d:
+                    report.spec.append((s.req, len(d), m - 1))
                     self.sched.commit_verified(s, m, drafted=len(d),
                                                accepted=m - 1)
                 else:
@@ -458,6 +464,7 @@ class PagedRuntime:
                     report.completed.append(s.req)
             else:
                 _, s, start, clen, li = lane
+                report.chunks.append((s.req, start, clen, s.chunks_done))
                 self.sched.finish_chunk(s, clen)
                 report.prefill_tokens += clen
                 report.tokens += clen

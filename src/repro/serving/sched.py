@@ -168,6 +168,8 @@ class SeqState:
     preemptions: int = 0
     last_token: int = 0           # feedback token for the next decode step
     prefix_hit: int = 0           # prompt tokens served from the prefix cache
+    chunks_done: int = 0          # prefill chunks executed (trace span index;
+    #                               resets with prefilled on preemption)
     # --- speculative decode lane state ---
     draft: List[int] = field(default_factory=list)   # this step's proposal
     accept_ema: float = 1.0       # acceptance-rate EMA (optimistic start)
@@ -495,6 +497,7 @@ class PagedScheduler:
         sharing this prompt skip their prefill."""
         self.kv.extend(seq.req.req_id, seq.prefilled + n_tokens)
         seq.prefilled += n_tokens
+        seq.chunks_done += 1
         self.kv.commit_prefix(seq.req.req_id, seq.req.prompt_tokens,
                               seq.prefilled)
         if seq.prefilled >= seq.req.prompt_len:
@@ -593,6 +596,7 @@ class PagedScheduler:
         r = victim.req
         victim.prefilled = 0
         victim.prefix_hit = 0
+        victim.chunks_done = 0
         victim.draft = []        # stale proposals die with the eviction
         victim.preemptions += 1
         r.generated = 0

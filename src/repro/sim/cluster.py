@@ -149,12 +149,16 @@ class ClusterSim:
 
     def __init__(self, params: SimParams, controller_factory=None,
                  topo: Optional[ClusterTopology] = None,
-                 lattice: ProfileLattice = A100_MIG):
+                 lattice: ProfileLattice = A100_MIG,
+                 tracer=None):
         self.p = params
         self.rng = np.random.default_rng(params.seed)
         self.topo = topo or make_p4d_cluster(2)
         self.lattice = lattice
         self.now = 0.0
+        # core.obs.Tracer (or None): the sim implements the same
+        # one-trace-event-per-actuator-method contract as ServingActuator
+        self.tracer = tracer
         self._eseq = itertools.count()
         self.events: List[_Event] = []
         # --- tenant model (registry-driven) ---
@@ -232,6 +236,11 @@ class ClusterSim:
                     self._initial_profile(spec))
 
     # ---------------------------------------------------------- Actuator
+    def _trace(self, name: str, tenant: str, dur: float = 0.0,
+               **args) -> None:
+        if self.tracer is not None:
+            self.tracer.action(name, self.now, tenant, dur=dur, **args)
+
     def reconfigure(self, tenant: str, profile: SliceProfile) -> float:
         lt = self.lat[tenant]
         pause = max(self.p.mig_reconfig_min_s,
@@ -242,6 +251,8 @@ class ClusterSim:
         self._pause(tenant, pause)
         self.reconfig_times.append(pause)
         self.timeline.append((self.now, f"mig:{tenant}:{profile.name}"))
+        self._trace("reconfigure", tenant, dur=pause, profile=profile.name,
+                    units=profile.compute_units)
         return pause
 
     def move(self, tenant: str, slot: Slot) -> float:
@@ -252,6 +263,7 @@ class ClusterSim:
         lt.replicas[0].slot = slot
         self._pause(tenant, self.p.move_pause_s)
         self.timeline.append((self.now, f"move:{tenant}:{slot.key}"))
+        self._trace("move", tenant, dur=self.p.move_pause_s, slot=slot.key)
         return self.p.move_pause_s
 
     def set_io_throttle(self, tenant: str, bytes_per_s: Optional[float]) -> None:
@@ -260,23 +272,28 @@ class ClusterSim:
             bg.io_throttle = bytes_per_s
             self.timeline.append(
                 (self.now, f"throttle:{tenant}:{bytes_per_s or 'off'}"))
+        self._trace("set_io_throttle", tenant, bytes_per_s=bytes_per_s)
 
     def set_mps_quota(self, tenant: str, frac: float) -> None:
         bg = self.bg.get(tenant)
         if bg is not None:
             bg.mps_quota = frac
             self.timeline.append((self.now, f"mps:{tenant}:{frac:.2f}"))
+        self._trace("set_mps_quota", tenant, frac=frac)
 
     def pin_cpu_away_from_irq(self, tenant: str) -> None:
         self.lat[tenant].pinned = True
+        self._trace("pin_cpu_away_from_irq", tenant)
 
     def free_slots(self) -> List[Slot]:
+        self._trace("query_free_slots", "")
         return self.ledger.free_slots()
 
     def headroom_units(self, device: str) -> int:
         """Free compute units on a device (budget per A100 minus all
         occupants, the asking tenant's own slice included —
         greedy_upgrade asks for the *extra*), read from the ledger."""
+        self._trace("query_headroom_units", "", device=device)
         return self.ledger.headroom_units(device)
 
     # -------------------------------------------------------- fabric state

@@ -13,7 +13,7 @@ from repro.core.tenancy import TenantSpec
 from repro.serving.engine import ServingEngine, StepReport
 from repro.serving.gateway import (DoorConfig, Gateway, TokenStream,
                                    Verdict)
-from repro.serving.metrics import TenantMetrics
+from repro.serving.metrics import DEFAULT_BUCKETS, TenantMetrics
 from repro.serving.request import ADMITTED, POOL_EXHAUSTED, Request
 
 CFG = reduced(get_config("stablelm_3b")).replace(dtype="float32")
@@ -29,6 +29,8 @@ class StubEngine:
     one batched decode per fabricated step.  ``finalize_step`` is the
     REAL ServingEngine implementation (unbound), so timestamps and
     metrics follow production bookkeeping exactly."""
+
+    tracer = None
 
     def __init__(self, cap=4):
         self.cap = cap
@@ -351,3 +353,38 @@ def test_serve_counts_rejections_at_pool_exhaustion():
               "gateway_door_ttft_p99_seconds",
               "gateway_engine_ttft_p99_seconds"):
         assert f'{g}{{tenant="T1"}}' in out["prometheus"]
+    # cumulative le-bucket histograms ride along the windowed gauges
+    for m in ("gateway_door_ttft_seconds", "gateway_engine_ttft_seconds",
+              "gateway_itl_seconds"):
+        assert f'# TYPE {m} histogram' in out["prometheus"]
+        assert f'{m}_bucket{{tenant="T1",le="+Inf"}}' in out["prometheus"]
+        assert f'{m}_sum{{tenant="T1"}}' in out["prometheus"]
+        assert f'{m}_count{{tenant="T1"}}' in out["prometheus"]
+
+
+def test_prometheus_histograms_aggregate_across_replicas():
+    """Unlike the windowed p99 gauges, the ``le`` buckets are cumulative
+    counters: per-tenant export sums them element-wise across replica
+    engines, stays monotone in ``le``, and ``_count`` equals the
+    all-time total — the property that makes them aggregable across
+    scrapes where a windowed quantile is not."""
+    import re
+
+    e1, e2 = StubEngine(2), StubEngine(2)
+    gw = Gateway({"T1": [e1, e2]})
+    e1.metrics.latency.observe(0.0, 0.003)   # -> le 0.005
+    e1.metrics.latency.observe(1.0, 0.05)    # -> le 0.05 (edge-inclusive)
+    e2.metrics.latency.observe(0.5, 0.3)     # -> le 0.4, other replica
+    text = gw.prometheus()
+    rows = dict(re.findall(
+        r'gateway_door_ttft_seconds_bucket\{tenant="T1",le="([^"]+)"\}'
+        r' (\S+)', text))
+    assert rows["0.0025"] == "0"
+    assert rows["0.005"] == "1"
+    assert rows["0.05"] == "2"
+    assert rows["0.4"] == "3"
+    assert rows["+Inf"] == "3"
+    vals = [float(rows[f"{le:g}"]) for le in DEFAULT_BUCKETS]
+    assert vals == sorted(vals)
+    assert 'gateway_door_ttft_seconds_count{tenant="T1"} 3' in text
+    assert 'gateway_door_ttft_seconds_sum{tenant="T1"} 0.353' in text

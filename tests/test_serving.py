@@ -8,7 +8,7 @@ from hypothesis import given, settings, strategies as st
 from repro.configs.base import get_config, reduced
 from repro.serving.engine import ServingEngine
 from repro.serving.kvcache import PagedKVCache
-from repro.serving.metrics import EMA, LatencyWindow
+from repro.serving.metrics import EMA, LatencyWindow, TenantMetrics
 from repro.serving.request import Request
 
 
@@ -113,6 +113,78 @@ def test_latency_window_quantiles():
     assert w.quantile(0.5) == pytest.approx(0.0505, rel=0.05)
     assert w.miss_rate(0.05) == pytest.approx(0.5, abs=0.03)
     assert w.p999() <= 0.1
+
+
+@given(st.lists(st.tuples(st.floats(0.0, 100.0, allow_nan=False),
+                          st.floats(1e-4, 8.0, allow_nan=False)),
+                min_size=1, max_size=120,
+                unique_by=lambda p: p[0]))
+@settings(max_examples=40, deadline=None)
+def test_latency_window_trim_vs_horizon(samples):
+    """Property: out-of-order observes + the 2x-capacity trim interact
+    safely — retained samples are always the time-sorted TAIL of
+    everything observed (drops are strictly oldest-first, so a sample
+    inside the horizon can only fall out after every older sample did),
+    quantiles read exactly the in-horizon retained samples, and the
+    cumulative histogram side never trims."""
+    w = LatencyWindow(max_samples=8, horizon_s=10.0)
+    expected = []
+    for now, lat in samples:
+        w.observe(float(now), float(lat))
+        expected.append((float(now), float(lat)))
+        expected.sort(key=lambda p: p[0])
+        if len(expected) > 2 * w.max_samples:
+            expected = expected[-w.max_samples:]
+        assert w.samples == expected
+    # quantile over a horizon anchored at the newest stamp reads the
+    # in-horizon retained samples, nothing more, nothing less
+    newest = max(t for t, _ in expected)
+    in_h = [v for t, v in expected if t >= newest - w.horizon_s]
+    assert w.quantile(0.5, newest) == \
+        pytest.approx(float(np.quantile(in_h, 0.5)))
+    # cumulative histogram counters are trim-immune
+    assert w.total == len(samples)
+    hist = w.hist()
+    assert hist[-1] == (float("inf"), w.total)
+    counts = [c for _, c in hist]
+    assert counts == sorted(counts)             # cumulative: monotone
+    assert w.sum == pytest.approx(sum(v for _, v in samples))
+
+
+def test_latency_window_hist_le_buckets():
+    """Prometheus ``le`` semantics: a sample equal to a bucket edge
+    counts in that bucket; overflow lands only in +Inf."""
+    w = LatencyWindow()
+    for v in (0.001, 0.0011, 5.0, 99.0):
+        w.observe(0.0, v)
+    h = dict(w.hist())
+    assert h[0.001] == 1        # == edge: inclusive
+    assert h[0.0025] == 2
+    assert h[3.2] == 2
+    assert h[6.4] == 3
+    assert h[float("inf")] == 4 == w.total
+
+
+def test_throughput_running_sum_matches_brute_force_scan():
+    """The O(1) running-sum throughput must equal the O(n) window scan
+    it replaced, at every tick, including after lazy expiry."""
+    m = TenantMetrics()
+    rng = np.random.default_rng(3)
+    t, log = 0.0, []
+    for _ in range(300):
+        t += float(rng.exponential(0.4))
+        n = int(rng.integers(1, 50))
+        m.observe_tokens(t, n)
+        log.append((t, n))
+        h = m.throughput_horizon_s
+        assert m.throughput(t) == pytest.approx(
+            sum(k for tt, k in log if tt >= t - h) / h)
+    # a narrower horizon still scans only the retained tail
+    assert m.throughput(t, horizon_s=2.0) == pytest.approx(
+        sum(k for tt, k in log if tt >= t - 2.0) / 2.0)
+    # lazy expiry keeps the window bounded by the horizon
+    assert all(tt >= t - m.throughput_horizon_s
+               for tt, _ in m.throughput_window)
 
 
 def test_ema_hysteresis_deadband():

@@ -1,0 +1,488 @@
+"""Per-request flight recorder: segment conservation under churn (the
+gateway-ledger discipline applied to time), preemption/reconfig overlap
+retention, real paged-engine preemption tracing, Chrome export schema,
+tracing-off token/timing parity, and the one-trace-event-per-actuator-
+method lint over both Actuator implementations."""
+import json
+from collections import deque
+
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, reduced
+from repro.core.obs import Tracer
+from repro.serving.engine import ServingEngine, StepReport
+from repro.serving.gateway import DoorConfig, Gateway, Verdict
+from repro.serving.metrics import TenantMetrics
+from repro.serving.request import ADMITTED, POOL_EXHAUSTED, Request
+from repro.serving.trace import FlightRecorder
+
+CFG = reduced(get_config("stablelm_3b")).replace(dtype="float32")
+
+
+def make_req(i, tenant="T1", arrival=0.0, prompt_len=16, max_new=3):
+    return Request(req_id=i, tenant=tenant, prompt_len=prompt_len,
+                   max_new_tokens=max_new, arrival=arrival)
+
+
+class ChurnEngine:
+    """test_gateway's StubEngine extended with the paged runtime's churn
+    behaviours — chunked prefill, restart-style preemption, speculative
+    verify/rollback — all fabricated, all on virtual stamps.
+    ``finalize_step`` is the REAL ServingEngine implementation, so the
+    recorder sees production StepReports through the production hook."""
+
+    backend = "stub"
+    tracer = None
+
+    def __init__(self, cap=4, chunk=8):
+        self.cap = cap
+        self.max_slots = cap
+        self.chunk = chunk
+        self.queue = deque()
+        self.prefilling = []          # [req, tokens_done, next_chunk_idx]
+        self.running = []
+        self.metrics = TenantMetrics()
+
+    def active(self):
+        return self.running + [p[0] for p in self.prefilling]
+
+    def has_work(self):
+        return bool(self.queue or self.prefilling or self.running)
+
+    def submit(self, req):
+        if len(self.queue) + len(self.active()) >= self.cap:
+            return POOL_EXHAUSTED
+        self.queue.append(req)
+        return ADMITTED
+
+    finalize_step = ServingEngine.finalize_step
+
+    def fabricate_step(self, rng):
+        rep = StepReport(kind="mixed")
+        # restart-style preemption: victim loses its tokens, requeues
+        if self.running and rng.random() < 0.15:
+            victim = self.running.pop(int(rng.integers(len(self.running))))
+            victim.output_tokens.clear()
+            victim.decode_times.clear()
+            self.queue.appendleft(victim)
+            rep.preempted.append(victim)
+            rep.preempt_pairs.append((victim.req_id, -1))
+        # advance one chunked prefill
+        if self.prefilling:
+            slot = self.prefilling.pop(0)
+            req, done, idx = slot
+            clen = min(self.chunk, req.prompt_len - done)
+            rep.chunks.append((req, done, clen, idx))
+            rep.tokens += clen
+            rep.prefill_tokens += clen
+            done += clen
+            if done >= req.prompt_len:
+                req.output_tokens.append(int(rng.integers(1000)))
+                rep.prefilled.append(req)
+                rep.tokens += 1
+                rep.decode_tokens += 1
+                if len(req.output_tokens) >= req.max_new_tokens:
+                    rep.completed.append(req)
+                else:
+                    self.running.append(req)
+            else:
+                self.prefilling.append([req, done, idx + 1])
+        elif self.queue:
+            self.prefilling.append([self.queue.popleft(), 0, 0])
+        # batched decode, sometimes with a speculative burst
+        for r in list(self.running):
+            n = 1
+            if rng.random() < 0.3:
+                drafted = int(rng.integers(1, 4))
+                accepted = int(rng.integers(0, drafted + 1))
+                rep.spec.append((r, drafted, accepted))
+                n = min(1 + accepted,
+                        r.max_new_tokens - len(r.output_tokens))
+            for _ in range(n):
+                r.output_tokens.append(int(rng.integers(1000)))
+                rep.decoded.append(r)
+            rep.tokens += n
+            rep.decode_tokens += n
+            if len(r.output_tokens) >= r.max_new_tokens:
+                self.running.remove(r)
+                rep.completed.append(r)
+        return rep
+
+
+# ---------------------------------------------------------- conservation
+def test_segment_conservation_under_churn():
+    """300+ virtual-time steps of random traffic, chunked prefill,
+    preemption, speculation, pauses and controller actions: every
+    offered request must end with a timeline whose segments tile
+    [arrival, terminal] and sum to the measured latency — checked at
+    EVERY step, not just at the end (mirrors the gateway ledger test).
+    Every preemption and every controller action overlapping a request
+    must be visible in the trace."""
+    rng = np.random.default_rng(7)
+    rec = FlightRecorder(keep_slowest=4, window_s=5.0)
+    pauses = {}
+    engines = {"T1": [ChurnEngine(3), ChurnEngine(2)],
+               "T2": [ChurnEngine(2)]}
+    for engs in engines.values():
+        for e in engs:
+            e.tracer = rec
+    gw = Gateway(engines,
+                 default_cfg=DoorConfig(max_queue=4, deadline_s=2.0,
+                                        max_attempts=2),
+                 paused_until=lambda n: pauses.get(n, 0.0),
+                 tracer=rec)
+    now, i = 0.0, 0
+    preempted_ids = set()
+    spec_steps = 0
+    for _ in range(400):
+        prev = now
+        now += float(rng.exponential(0.05))
+        op = int(rng.integers(6))
+        if op == 0:
+            for _ in range(int(rng.integers(1, 4))):
+                name = str(rng.choice(sorted(engines)))
+                gw.offer(make_req(i, name, arrival=now,
+                                  max_new=int(rng.integers(1, 5))), now)
+                i += 1
+        elif op == 1:
+            gw.dispatch(now)
+        elif op == 2:
+            name = str(rng.choice(sorted(engines)))
+            for eng in engines[name]:
+                if eng.has_work():
+                    rep = eng.fabricate_step(rng)
+                    preempted_ids.update(
+                        (name, r.req_id) for r in rep.preempted)
+                    if rep.spec:
+                        spec_steps += 1
+                    gw.finalize(name, eng, rep, now, start_time=prev)
+        elif op == 3:
+            name = str(rng.choice(sorted(engines)))
+            pauses[name] = now + float(rng.exponential(0.2))
+        elif op == 4:
+            rec.action("reconfigure", now,
+                       str(rng.choice(sorted(engines))),
+                       dur=float(rng.exponential(0.5)))
+        else:
+            rec.action("set_mps_quota", now,
+                       str(rng.choice(sorted(engines))), frac=0.7)
+        gw.check()
+        rec.check()        # conservation holds at every step
+    # drain: every accepted request resolves, every timeline conserves
+    for _ in range(400):
+        now += 0.1
+        gw.dispatch(now)
+        for name, engs in engines.items():
+            for eng in engs:
+                while eng.has_work():
+                    gw.finalize(name, eng, eng.fabricate_step(rng), now,
+                                start_time=now - 0.1)
+        gw.check()
+        rec.check()
+        if gw.queued_total() == 0 and \
+                all(not e.has_work() for es in engines.values()
+                    for e in es):
+            break
+    assert i > 100
+    # one conserved timeline per offered request, rejected ones included
+    assert rec.finished == i
+    summaries = {(t, s.req_id): s for t, dq in rec.summaries.items()
+                 for s in dq}
+    assert len(summaries) == i
+    verdicts = {v for s in summaries.values() for v in [s.verdict]}
+    assert "completed" in verdicts and len(verdicts) > 1
+    # the churn actually exercised preemption + speculation
+    assert preempted_ids and spec_steps > 0
+    for key in preempted_ids:
+        assert summaries[key].preemptions >= 1
+    assert any("preempted" in summaries[key].segs for key in preempted_ids)
+    # every request overlapping a controller action keeps its full trace
+    exemplar_ids = {(tl.tenant, tl.req_id) for tl in rec.action_exemplars}
+    overlapping = {key for key, s in summaries.items()
+                   if rec.actions_overlapping(s.arrival, s.end)}
+    assert overlapping and overlapping <= exemplar_ids
+    # retained tail exemplars are the slowest of their (tenant, window)
+    for (tenant, _), bucket in rec._tail.items():
+        assert len(bucket) <= rec.keep_slowest
+
+
+def test_known_timeline_segments_and_events():
+    """A hand-stamped request: door wait, two prefill chunks, decode
+    with a speculative burst — exact segment durations, the TTFT view,
+    and the instant events, all from production StepReport shapes."""
+    rec = FlightRecorder()
+    r = make_req(0, prompt_len=16, max_new=3)
+    rec.on_offer(r, 0.0, Verdict.ACCEPTED)
+    rec.on_admit(r, 0.5, engine=1)
+    rec.on_step(StepReport(kind="prefill", chunks=[(r, 0, 8, 0)]),
+                1.0, 1.5)
+    rec.on_step(StepReport(kind="mixed", chunks=[(r, 8, 8, 1)],
+                           prefilled=[r]), 1.5, 2.0)
+    rec.on_step(StepReport(kind="decode", decoded=[r, r],
+                           spec=[(r, 2, 1)], completed=[r]), 2.5, 3.0)
+    (tl,) = rec.retained()
+    tl.check()
+    assert [s.name for s in tl.segments] == [
+        "door_queued", "sched_queued", "prefill_chunk", "prefill_chunk",
+        "decode"]
+    sums = tl.seg_sums()
+    assert sums["door_queued"] == pytest.approx(0.5)
+    assert sums["sched_queued"] == pytest.approx(0.5)
+    assert sums["prefill_chunk"] == pytest.approx(1.0)
+    assert sums["decode"] == pytest.approx(1.0)
+    assert sum(sums.values()) == pytest.approx(tl.e2e) == pytest.approx(3.0)
+    # TTFT view clips at the first-token stamp
+    assert tl.first_token_t == 2.0
+    assert "decode" not in tl.seg_sums(until=tl.first_token_t)
+    names = [ev.name for ev in tl.instants]
+    for n in ("offered", "admitted", "first_token", "spec_verify",
+              "spec_rollback", "verdict"):
+        assert n in names
+    (summ,) = rec.summaries["T1"]
+    assert summ.ttft == pytest.approx(2.0)
+    assert summ.verdict == "completed"
+
+
+def test_rejected_requests_conserve_too():
+    """Terminal verdicts away from the engine (door shed, dispatch-time
+    rejection, queue expiry) still produce conserved timelines."""
+    rec = FlightRecorder()
+    shed = make_req(0, arrival=1.0)
+    rec.on_offer(shed, 1.0, Verdict.SHED)
+    exp = make_req(1, arrival=2.0)
+    rec.on_offer(exp, 2.0, Verdict.ACCEPTED)
+    rec.on_terminal(exp, 4.5, "expired")
+    rej = make_req(2, arrival=3.0)
+    rec.on_offer(rej, 3.0, Verdict.ACCEPTED)
+    rec.on_admit(rej, 3.5)
+    rec.on_terminal(rej, 3.5, "rejected", reason="pool_exhausted")
+    rec.check()
+    assert rec.finished == 3
+    by_id = {s.req_id: s for s in rec.summaries["T1"]}
+    assert by_id[0].e2e == 0.0 and by_id[0].verdict == "shed"
+    assert by_id[1].segs == {"door_queued": pytest.approx(2.5)}
+    assert by_id[1].verdict == "expired"
+    assert by_id[2].segs == {"door_queued": pytest.approx(0.5)}
+    # a second terminal for the same request is a ledger violation
+    with pytest.raises(AssertionError, match="already finished"):
+        rec.on_terminal(shed, 5.0, "expired")
+
+
+def test_out_of_order_stamp_is_rejected():
+    rec = FlightRecorder()
+    r = make_req(0)
+    rec.on_offer(r, 1.0, Verdict.ACCEPTED)
+    rec.on_admit(r, 2.0)
+    with pytest.raises(AssertionError, match="out of order"):
+        rec.on_admit(r, 1.5)
+
+
+# ----------------------------------------------------- real paged engine
+def _overcommitted_engine(**kw):
+    # pool of 6 pages x 4 tokens; two 16-token sequences need 8 pages
+    return ServingEngine(CFG, max_slots=4, seq_cap=32, page_size=4,
+                         seed=0, backend="paged", pool_pages=6,
+                         chunk_tokens=8, attn_impl="ref", **kw)
+
+
+def _drive(eng, reqs, tracer=None, dt=0.01, max_steps=800):
+    eng.tracer = tracer
+    for r in reqs:
+        assert eng.submit(r)
+    t, steps = 0.0, 0
+    while eng.has_work():
+        rep = eng.step()
+        eng.finalize_step(rep, t + dt, t)
+        t += dt
+        steps += 1
+        assert steps < max_steps
+    return t
+
+
+def test_real_paged_preemption_is_traced():
+    """SLO-aware preemption on an overcommitted page pool: the victim's
+    eviction lands in its timeline (preempted event + restart chunks)
+    and the timeline still conserves through the recompute."""
+    rng = np.random.default_rng(11)
+    rec = FlightRecorder()
+    hi = Request(req_id=0, tenant="T1", prompt_len=8, max_new_tokens=8,
+                 arrival=0.0, slo_ms=50.0, priority=2.0,
+                 prompt_tokens=rng.integers(0, CFG.vocab_size, 8))
+    lo = Request(req_id=1, tenant="T1", prompt_len=8, max_new_tokens=8,
+                 arrival=0.0, priority=0.5,
+                 prompt_tokens=rng.integers(0, CFG.vocab_size, 8))
+    _drive(_overcommitted_engine(), [hi, lo], tracer=rec)
+    rec.check()
+    assert rec.finished == 2
+    by_id = {s.req_id: s for s in rec.summaries["T1"]}
+    assert by_id[lo.req_id].preemptions >= 1
+    assert by_id[hi.req_id].preemptions == 0
+    tls = {tl.req_id: tl for tl in rec.retained()}
+    ev_names = [ev.name for ev in tls[lo.req_id].instants]
+    assert "preempted" in ev_names
+    # the restart's prefill chunks are flagged
+    restarts = [s for s in tls[lo.req_id].segments
+                if s.name == "prefill_chunk" and s.args.get("restart")]
+    assert restarts
+    # engine-only harness: the timeline lazily begins at arrival (a
+    # wait before the first chunk, if any, is labelled sched_queued)
+    for tl in tls.values():
+        assert tl.segments[0].t0 == tl.arrival
+        assert {s.name for s in tl.segments} <= {
+            "sched_queued", "prefill_chunk", "preempted", "decode"}
+
+
+def test_tracing_off_is_token_and_timing_identical():
+    """Attaching a recorder must not perturb anything: same tokens,
+    same per-token virtual timestamps, same finish stamps."""
+    def go(tracer):
+        rng = np.random.default_rng(13)
+        reqs = [Request(req_id=j, tenant="T1", prompt_len=8,
+                        max_new_tokens=6, arrival=0.0,
+                        priority=float(1 + (j % 2)),
+                        prompt_tokens=rng.integers(0, CFG.vocab_size, 8))
+                for j in range(3)]
+        _drive(_overcommitted_engine(), reqs, tracer=tracer)
+        return [(list(r.output_tokens), list(r.decode_times),
+                 r.prefill_done, r.finished) for r in reqs]
+
+    assert go(None) == go(FlightRecorder())
+
+
+# --------------------------------------------------- retention discipline
+def test_retention_keeps_slowest_k_and_action_overlaps():
+    rec = FlightRecorder(keep_slowest=2, window_s=100.0)
+    # 6 requests in one window with e2e = 1..6 virtual seconds
+    for j in range(6):
+        r = make_req(j, arrival=0.0)
+        rec.on_offer(r, 0.0, Verdict.ACCEPTED)
+        rec.on_terminal(r, float(j + 1), "expired")
+    kept = {tl.req_id for tl in rec.retained()}
+    assert kept == {4, 5}                     # slowest two only
+    assert len(rec.summaries["T1"]) == 6      # summaries keep everything
+    # a FAST request overlapping a controller action is retained anyway
+    rec.action("reconfigure", 10.0, "T1", dur=5.0)
+    r = make_req(9, arrival=12.0)
+    rec.on_offer(r, 12.0, Verdict.ACCEPTED)
+    rec.on_terminal(r, 12.1, "expired")
+    assert 9 in {tl.req_id for tl in rec.retained()}
+    assert 9 in {tl.req_id for tl in rec.action_exemplars}
+
+
+# ------------------------------------------------------------- chrome json
+def test_chrome_export_schema():
+    rec = FlightRecorder()
+    r = make_req(0, prompt_len=16, max_new=2)
+    rec.on_offer(r, 0.0, Verdict.ACCEPTED)
+    rec.on_admit(r, 0.5)
+    rec.on_step(StepReport(kind="prefill", chunks=[(r, 0, 16, 0)],
+                           prefilled=[r]), 1.0, 2.0)
+    rec.on_step(StepReport(kind="decode", decoded=[r], completed=[r]),
+                2.0, 3.0)
+    rec.action("reconfigure", 1.2, "T1", dur=0.4, profile="2g.20gb")
+    data = rec.chrome_trace()
+    json.dumps(data)                           # serialisable as-is
+    assert data["displayTimeUnit"] == "ms"
+    evs = data["traceEvents"]
+    assert {e["ph"] for e in evs} <= {"X", "i", "M"}
+    for e in evs:
+        if e["ph"] == "X":
+            assert e["dur"] >= 0
+        elif e["ph"] == "i":
+            assert e["s"] == "t"
+    # seconds -> microseconds
+    first = next(e for e in evs if e["name"] == "first_token")
+    assert first["ts"] == pytest.approx(2.0e6)
+    # tracks are processes (named via metadata), lanes are threads
+    procs = {e["args"]["name"] for e in evs
+             if e["ph"] == "M" and e["name"] == "process_name"}
+    assert {"T1", "controller"} <= procs
+    spans = [e for e in evs if e["ph"] == "X"]
+    reconf = next(e for e in spans if e["name"] == "reconfigure")
+    assert reconf["dur"] == pytest.approx(0.4e6)
+    assert reconf["args"]["tenant"] == "T1"
+
+
+# ------------------------------------------------------------ actuator lint
+def _protocol_methods():
+    from repro.core.controller import Actuator
+    return sorted(n for n, v in vars(Actuator).items()
+                  if not n.startswith("_") and callable(v))
+
+
+class _QuotaEngine:
+    def __init__(self):
+        self.quota = 1.0
+
+    def set_quota(self, q):
+        self.quota = q
+
+
+def _lint_actuator(act, tracer, first, second):
+    """Call every Actuator protocol method once; each must emit exactly
+    one trace event, and action events must carry their pause window."""
+    from repro.core.profiles import A100_MIG
+
+    # scout a move target through the ledger directly (no trace events)
+    cur = act.ledger.slots_of(second)[0]
+    target = next(s for s in act.ledger.free_slots()
+                  if s.device != cur.device
+                  and act.ledger.headroom_units(s.device) >= 2)
+    calls = {
+        "reconfigure": lambda: act.reconfigure(first, A100_MIG["3g.40gb"]),
+        "move": lambda: act.move(second, target),
+        "set_io_throttle": lambda: act.set_io_throttle("ETL", 3e8),
+        "set_mps_quota": lambda: act.set_mps_quota(first, 0.7),
+        "pin_cpu_away_from_irq":
+            lambda: act.pin_cpu_away_from_irq(first),
+        "free_slots": lambda: act.free_slots(),
+        "headroom_units": lambda: act.headroom_units(cur.device),
+    }
+    methods = _protocol_methods()
+    # lint: a protocol method added without trace coverage fails here
+    assert set(calls) == set(methods)
+    for name in methods:
+        before = len(tracer.events)
+        calls[name]()
+        assert len(tracer.events) == before + 1, \
+            f"{type(act).__name__}.{name} emitted " \
+            f"{len(tracer.events) - before} trace events, expected 1"
+        ev = tracer.events[-1]
+        assert tracer.actions and tracer.actions[-1] is ev
+        if name in ("reconfigure", "move"):
+            assert ev.ph == "X" and ev.dur > 0    # pause window recorded
+        else:
+            assert ev.ph == "i"
+
+
+def test_every_actuator_method_emits_exactly_one_event():
+    from repro.core.ledger import DeviceLedger
+    from repro.core.profiles import A100_MIG
+    from repro.core.tenancy import TenantRegistry
+    from repro.core.topology import make_p4d_cluster
+    from repro.serving.actuator import FabricState, ServingActuator
+    from repro.sim.cluster import ClusterSim
+    from repro.sim.params import SimParams
+
+    reg = TenantRegistry.slo_fleet(2, 2)
+    specs = tuple(reg)
+    p = SimParams(duration_s=60.0, schedule=(), tenants=specs)
+
+    sim_tracer = Tracer()
+    sim = ClusterSim(p, tracer=sim_tracer)
+    first, second = list(sim.lat)[:2]
+    _lint_actuator(sim, sim_tracer, first, second)
+
+    act_tracer = Tracer()
+    topo = make_p4d_cluster(2)
+    reg2 = TenantRegistry(specs)
+    ledger = DeviceLedger.from_registry(
+        topo, reg2, A100_MIG, home_devices=p.home_devices,
+        ambient_units=p.ambient_units)
+    engines = {s.name: [_QuotaEngine(), _QuotaEngine()]
+               for s in reg2.latency()}
+    act = ServingActuator(engines, FabricState(), topo, lambda: 5.0,
+                          ledger=ledger, rng=np.random.default_rng(0),
+                          tracer=act_tracer)
+    _lint_actuator(act, act_tracer, first, second)
