@@ -920,6 +920,78 @@ def run_trace(duration=240.0, qps=4.0, seed=0, verbose=True,
     return out
 
 
+def run_chaos(requests=48, qps=300.0, replicas=2, seed=0, verbose=True):
+    """Failure-domain A/B: the SAME seeded fault schedule (a replica
+    crash during the arrival burst plus a stuck decode lane on the
+    survivor) replayed through the full serving stack twice — recovery
+    machinery ON (redrive + watchdog requeue) vs OFF (drained work is
+    shed).  Both arms run ``launch.serve``'s production path: gateway
+    ledger, cache-aware routing, paged replicas, flight recorder hooks.
+    The verdict ledger must conserve in BOTH arms — recovery changes
+    which verdict each request gets, never whether it gets one."""
+    from repro.core.faults import Fault, FaultInjector
+    from repro.launch.serve import serve
+
+    def schedule():
+        # a fresh injector per arm: delivery is stateful, and the A/B
+        # needs both arms to consume the identical schedule
+        return FaultInjector([
+            Fault(time=0.03, kind="replica_crash", tenant="T1", replica=1),
+            Fault(time=0.06, kind="lane_stuck", tenant="T1", replica=0),
+        ])
+
+    kw = dict(requests=requests, qps=qps, replicas=replicas, seed=seed,
+              backend="paged", with_controller=False, verbose=False,
+              watchdog_timeout_s=0.3)
+    on = serve(faults=schedule(), recover=True, **kw)
+    off = serve(faults=schedule(), recover=False, **kw)
+
+    def arm(res):
+        d = dict(res["T1"])
+        offered = max(d["offered"], 1)
+        return {
+            "verdicts": {k: d[k] for k in ("offered", "completed", "shed",
+                                           "rejected", "expired",
+                                           "redriven", "preempted")},
+            "completion_rate": d["completed"] / offered,
+            "conservation_ok": (d["offered"] == d["completed"] + d["shed"]
+                                + d["rejected"] + d["expired"]),
+            "ttft_p99_ms": d["ttft_p99_ms"],
+            "faults": {k: res["faults"][k]
+                       for k in ("log", "redriven", "watchdog_fired")},
+        }
+
+    a_on, a_off = arm(on), arm(off)
+    out = {
+        "workload": {"requests": requests, "qps": qps,
+                     "replicas": replicas, "seed": seed},
+        "schedule": [(f.time, f.kind, f.tenant, f.replica)
+                     for f in schedule().schedule],
+        "recovery_on": a_on,
+        "recovery_off": a_off,
+        "completion_rate_on": a_on["completion_rate"],
+        "completion_rate_off": a_off["completion_rate"],
+        "redriven_on": a_on["verdicts"]["redriven"],
+        "shed_off": a_off["verdicts"]["shed"],
+        "conservation_ok": (a_on["conservation_ok"]
+                            and a_off["conservation_ok"]),
+    }
+    if verbose:
+        print(f"== chaos A/B ({replicas} paged replicas, crash + stuck "
+              f"lane, same schedule) ==")
+        for label, a in (("recovery on ", a_on), ("recovery off", a_off)):
+            v = a["verdicts"]
+            print(f"  {label}: completed {v['completed']}/{v['offered']} "
+                  f"({a['completion_rate']*100:5.1f}%) shed={v['shed']} "
+                  f"redriven={v['redriven']} "
+                  f"watchdog={a['faults']['watchdog_fired']} "
+                  f"TTFT p99={a['ttft_p99_ms']:.1f}ms")
+        print(f"  conservation: "
+              f"{'OK' if out['conservation_ok'] else 'VIOLATED'} "
+              f"(both arms; recovery moves verdicts, never loses one)")
+    return out
+
+
 def run_backend(backend="dense", verbose=True, seed=0, duration=1800.0):
     static = run(with_controller=False, seed=seed, backend=backend,
                  duration=duration)
@@ -950,9 +1022,12 @@ def _maybe_dump(out, json_path):
 
 def main(verbose=True, backend="dense", shared_prefix=False, spec=False,
          duration=1800.0, json_path=None, replicas=0, door=False,
-         trace=False, trace_out=None):
+         trace=False, trace_out=None, chaos=False, chaos_requests=48):
     if verbose:
         print("== LLM serving case study (vLLM-style, OLMo-2-7B) ==")
+    if chaos:
+        return _maybe_dump(run_chaos(requests=chaos_requests,
+                                     verbose=verbose), json_path)
     if trace:
         return _maybe_dump(run_trace(duration=duration, verbose=verbose,
                                      trace_out=trace_out), json_path)
@@ -1016,6 +1091,14 @@ if __name__ == "__main__":
                          "and dense-vs-paged TTFT p99 gaps by named "
                          "segment, with conservation + untraced-parity "
                          "checks")
+    ap.add_argument("--chaos", action="store_true",
+                    help="failure-domain A/B arm: the same seeded fault "
+                         "schedule (replica crash + stuck lane) through "
+                         "the full serving stack with recovery on vs "
+                         "off, reporting completion rates and the "
+                         "conservation verdict")
+    ap.add_argument("--chaos-requests", type=int, default=48,
+                    help="--chaos: requests per arm")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="--trace: write the paged arm's Chrome/Perfetto "
                          "trace_event JSON here")
@@ -1028,4 +1111,5 @@ if __name__ == "__main__":
     main(backend=args.backend, shared_prefix=args.shared_prefix,
          spec=args.spec, duration=args.duration, json_path=args.json,
          replicas=args.replicas, door=args.door, trace=args.trace,
-         trace_out=args.trace_out)
+         trace_out=args.trace_out, chaos=args.chaos,
+         chaos_requests=args.chaos_requests)

@@ -130,6 +130,13 @@ class Controller:
         p = self.primary
         return self.fsms.get(p) if p else None
 
+    def fsm_for(self, tenant: str) -> Optional[DecisionFSM]:
+        """One tenant's dwell/cooldown FSM (None if unregistered).  The
+        RetryingActuator binds this so its retry cycles respect the same
+        hold-still windows the control law does (a cooling-down lane is
+        never thrashed by actuator retries)."""
+        return self.fsms.get(tenant)
+
     def latency_tenants(self) -> List[str]:
         return [n for n, st in self.tenants.items() if st.role == "latency"]
 

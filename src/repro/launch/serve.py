@@ -84,7 +84,10 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
           route_imbalance: int = 4, route_staleness: int = 256,
           response_cache: bool = True, listen: bool = False,
           door_queue: int = 64, door_deadline_ms: float = 1000.0,
-          trace: bool = False, trace_out: str = None):
+          trace: bool = False, trace_out: str = None,
+          chaos: bool = False, chaos_seed: int = None,
+          recover: bool = True, faults=None,
+          watchdog_timeout_s: float = 1.5):
     """Virtual-time multi-tenant serving run; returns per-tenant stats.
 
     ``listen=True`` (the ``--listen`` flag) turns on the gateway's
@@ -107,6 +110,22 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
     zero-cost (every call site is None-guarded) and tracing never
     perturbs the virtual clock — token output and timings are identical
     either way.
+
+    ``chaos=True`` (or an explicit ``faults=FaultInjector(...)``) arms
+    deterministic fault injection: a seeded virtual-clock schedule of
+    replica crashes, actuator-call failures, stuck decode lanes and
+    fabric degradation windows (``core/faults.py``).  With
+    ``recover=True`` (default) a crashed replica's in-flight requests
+    are drained and *redriven* onto survivors through the gateway (the
+    prefix directory retracts the dead holder, the router stops routing
+    to it, the device ledger releases its slots), actuator calls go
+    through a bounded-retry wrapper with rollback-to-last-good, and a
+    watchdog requeues hung lanes through the scheduler's refcount-safe
+    preemption path.  ``recover=False`` keeps the same fault schedule
+    but sheds the dead replica's requests — the A/B baseline the
+    ``llm_ttft --chaos`` benchmark measures against.  Either way every
+    request still gets exactly one terminal verdict and the gateway's
+    conservation ledger holds.
     """
     from collections import deque
 
@@ -121,6 +140,8 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
     from repro.core.admission import (AdmissionController, AdmissionConfig,
                                       AdmissionVerdict, RateLimiter)
     from repro.core.controller import Controller, ControllerConfig
+    from repro.core.faults import (FaultInjector, RetryingActuator,
+                                   StuckLaneWatchdog)
     from repro.core.ledger import DeviceLedger
     from repro.core.policy import PolicyConfig
     from repro.core.profiles import A100_MIG
@@ -137,6 +158,16 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
     paged = backend == "paged"
     names = ["T1"] if num_tenants == 1 else [f"L{i}"
                                              for i in range(num_tenants)]
+    # ---- failure domains: deterministic fault schedule ---------------
+    injector = faults
+    if injector is None and chaos:
+        injector = FaultInjector.plan(
+            chaos_seed if chaos_seed is not None else seed + 7,
+            duration_s=max(1.0, requests / qps),
+            tenants=list(names), replicas=replicas,
+            # a crash needs a survivor to redrive onto
+            crashes=1 if replicas > 1 else 0,
+            actuator_failures=2, stuck_lanes=1, fabric_windows=1)
     # spec_k is passed unconditionally: requesting speculation on the
     # dense backend must hit the engine's ValueError, not silently no-op
     eng_kw = dict(max_slots=slots, seq_cap=128, backend=backend,
@@ -224,6 +255,19 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
     actuator = ServingActuator(engines, fabric, topo, lambda: now[0],
                                ledger=ledger,
                                rng=np.random.default_rng(seed + 1))
+    # under chaos the controller actuates through the bounded-retry
+    # wrapper: injected call failures back off in virtual time (charged
+    # to the returned pause), exhaustion rolls back to last-known-good,
+    # and retry cycles respect the controller's dwell/cooldown FSM
+    # (``controller`` binds later; the lambda resolves at call time)
+    retrying = None
+    if injector is not None:
+        retrying = RetryingActuator(
+            actuator, lambda: now[0], faults=injector,
+            fsm_for=lambda t: (controller.fsm_for(t)
+                               if controller is not None else None))
+    watchdog = (StuckLaneWatchdog(timeout_s=watchdog_timeout_s)
+                if injector is not None else None)
     windows = {name: LatencyWindow() for name in names}
 
     # ---- request-plane front door -----------------------------------
@@ -245,7 +289,9 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
 
     controller = None
     if with_controller:
-        controller = Controller(topo, A100_MIG, actuator,
+        controller = Controller(topo, A100_MIG,
+                                retrying if retrying is not None
+                                else actuator,
                                 ControllerConfig(policy=PolicyConfig(
                                     tau_s=0.200, persistence=2,
                                     dwell_obs=20, cooldown_obs=10)))
@@ -276,6 +322,8 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
     if recorder is not None:
         gateway.tracer = recorder
         actuator.tracer = recorder
+        if retrying is not None:
+            retrying.tracer = recorder
         if controller is not None:
             controller.tracer = recorder
 
@@ -375,6 +423,108 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
                 admission_log.append((now[0], spec.name, "admit"))
                 on_admitted(spec, slots_, now[0])
 
+    # ---- failure-domain recovery handlers ----------------------------
+    def crash_replica(name, j):
+        """Replica death: mask it everywhere a request could still reach
+        it, release every resource it held, then redrive (or, recovery
+        off, shed) its in-flight requests.  Order matters: masking first
+        so nothing routes to the corpse, drain releases the pages, the
+        verdict/redrive decision comes last."""
+        if name not in engines or j >= len(engines[name]):
+            return
+        live = gateway.live_replicas(name)
+        if j not in live:
+            return                       # already dead
+        if len(live) <= 1:
+            # never kill the last live replica: redriven work (and all
+            # future arrivals) would have nowhere to land — log the
+            # skip so replay identity still covers it
+            injector.log.append(
+                (now[0], "crash_skipped_last_replica", f"{name}/{j}"))
+            return
+        eng = engines[name][j]
+        gateway.mark_dead(name, j)
+        routers[name].mark_dead(j)
+        directory.retract_replica(name, j)
+        drained = eng.drain_requests()
+        ledger.release(name, replica=j)
+        if watchdog is not None:
+            for r in drained:
+                watchdog.forget((name, j, r.req_id))
+        if recover:
+            n = gateway.redrive(name, drained, now[0], from_engine=j)
+            verb = "redrove"
+        else:
+            n = gateway.abandon(name, drained, now[0])
+            verb = "shed"
+        avail[(name, j)] = now[0]        # dead engines never step again
+        if verbose:
+            print(f"  t={now[0]:6.1f}s CRASH {name}/r{j}: {verb} {n} "
+                  f"in-flight request(s) "
+                  f"({len(live) - 1} live replica(s) remain)")
+
+    def stick_lane(name, j):
+        """Hang one active decode lane (lowest req_id, deterministic) on
+        the target replica; the watchdog detects the stalled progress
+        and requeues it through the refcount-safe preemption path."""
+        if name not in engines or j >= len(engines[name]):
+            return
+        if j not in gateway.live_replicas(name):
+            return
+        eng = engines[name][j]
+        if eng.runtime is None:
+            return
+        sched = eng.runtime.sched
+        lanes = [s.req.req_id for s in sched.active
+                 if s.req.req_id not in sched.stuck]
+        if not lanes:
+            injector.log.append(
+                (now[0], "stuck_skipped_no_lane", f"{name}/{j}"))
+            return
+        sched.mark_stuck(min(lanes))
+
+    def apply_faults():
+        for f in injector.due(now[0]):
+            if recorder is not None:
+                recorder.on_fault(now[0], f.kind, tenant=f.tenant,
+                                  replica=f.replica, method=f.method)
+            if f.kind == "replica_crash":
+                crash_replica(f.tenant, f.replica)
+            elif f.kind == "lane_stuck":
+                stick_lane(f.tenant, f.replica)
+            # actuator_fail / fabric_degrade armed inside the injector
+
+    def run_watchdog():
+        # feed every live lane's token progress, drop lanes that left
+        # the active set (completed / preempted / drained), then requeue
+        # whatever made no progress for the whole timeout
+        live_keys = set()
+        for name in names:
+            for j in gateway.live_replicas(name):
+                eng = engines[name][j]
+                if eng.runtime is None:
+                    continue
+                for s in eng.runtime.sched.active:
+                    key = (name, j, s.req.req_id)
+                    live_keys.add(key)
+                    watchdog.observe(key, s.req.generated, now[0])
+        watchdog.prune(live_keys)
+        for name, j, rid in watchdog.stale(now[0]):
+            sched = engines[name][j].runtime.sched
+            seq = sched.find(rid)
+            if seq is None or seq in sched.waiting:
+                continue
+            if recorder is not None:
+                recorder.on_preempt(seq.req, now[0],
+                                    engine=f"{name}/r{j}")
+            sched.preempt(seq)
+            preempts[name] += 1
+            injector.log.append(
+                (now[0], "watchdog_requeue", f"{name}/{j}/{rid}"))
+            if verbose:
+                print(f"  t={now[0]:6.1f}s WATCHDOG {name}/r{j}: "
+                      f"requeued stuck lane req {rid}")
+
     def submit_due():
         # front door first (SHED/REJECT/ACCEPT verdicts), then drain the
         # door queues into engines via the cache-aware router — a failed
@@ -394,6 +544,8 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
     while has_pending():
         if admission is not None:
             run_admissions()
+        if injector is not None:
+            apply_faults()
         submit_due()
         if controller and now[0] >= next_sample:
             tenants = {}
@@ -427,6 +579,9 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
                             / fabric.bandwidth(name))
                 dur = rep.compute_s * actuator.compute_scale_of(name) \
                     + transfer
+                if injector is not None:
+                    # transient fabric degradation inflates the step
+                    dur *= injector.fabric_factor(now[0])
                 end = now[0] + dur
                 avail[(name, j)] = end
                 # gateway finalize = engine timestamps + token-stream
@@ -437,6 +592,8 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
                 for pr in rep.prefilled:
                     windows[name].observe(end, pr.ttft, slo=0.2)
                 stepped = True
+        if watchdog is not None:
+            run_watchdog()
         if stepped:
             continue
         # nothing runnable now: hop to the next event
@@ -476,6 +633,7 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
             "rejected": door.rejected,
             "expired": door.expired,
             "reject_reasons": dict(door.reject_reasons),
+            "redriven": door.redriven,
             "preempted": preempts[name],
             "ttft_p50_ms": float(np.quantile(ttfts, .5)) if len(done) else 0.0,
             "ttft_p99_ms": float(np.quantile(ttfts, .99)) if len(done) else 0.0,
@@ -513,6 +671,23 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
         out["arbiter_max_units"] = controller.arbiter.max_used()
         if verbose:
             print("controller actions:", out["actions"])
+    if injector is not None:
+        out["faults"] = {
+            "log": list(injector.log),
+            "pending": injector.pending(),
+            "recover": recover,
+            "redriven": {name: gateway.door(name).redriven
+                         for name in names},
+            "watchdog_fired": watchdog.fired,
+        }
+        if retrying is not None:
+            out["faults"]["actuator"] = dict(retrying.stats)
+            out["faults"]["actuator_time_lost_s"] = retrying.time_lost_s
+        if verbose and injector.log:
+            print(f"faults: {len(injector.log)} event(s), "
+                  f"redriven={out['faults']['redriven']}, "
+                  f"watchdog_fired={watchdog.fired}, "
+                  f"actuator={out['faults'].get('actuator')}")
     out["gateway"] = gateway.counters()
     out["prometheus"] = gateway.prometheus(now[0])
     gateway.check()     # offered == completed+rejected+shed+expired+in_flight
@@ -587,6 +762,18 @@ def main():
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="write a Chrome/Perfetto trace_event JSON here "
                          "(implies --trace)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="arm deterministic fault injection: a seeded "
+                         "schedule of replica crashes, actuator failures, "
+                         "stuck lanes and fabric degradation "
+                         "(core/faults.py)")
+    ap.add_argument("--chaos-seed", type=int, default=None,
+                    help="fault-schedule seed (default: --seed + 7); the "
+                         "same seed replays the same faults bit-identically")
+    ap.add_argument("--no-recover", action="store_true",
+                    help="keep the fault schedule but disable recovery: "
+                         "crashed replicas shed their in-flight requests "
+                         "instead of redriving them (A/B baseline)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     serve(arch=args.arch, requests=args.requests, qps=args.qps,
@@ -601,7 +788,9 @@ def main():
           response_cache=not args.no_response_cache, listen=args.listen,
           door_queue=args.door_queue,
           door_deadline_ms=args.door_deadline_ms,
-          trace=args.trace, trace_out=args.trace_out)
+          trace=args.trace, trace_out=args.trace_out,
+          chaos=args.chaos, chaos_seed=args.chaos_seed,
+          recover=not args.no_recover)
 
 
 if __name__ == "__main__":

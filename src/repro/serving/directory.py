@@ -166,6 +166,29 @@ class PrefixDirectory:
                     del self._holders[key]
             self.stats.retracted += 1
 
+    def retract_replica(self, tenant: str, replica: int) -> int:
+        """Replica death: drop every holding of ``replica`` under
+        ``tenant`` immediately.  Applied authoritatively — it bypasses
+        ``defer_events`` and also purges the dead replica's *pending*
+        events, so a queued publish cannot resurrect a dead holder at
+        the next :meth:`sync`.  Returns the chains retracted."""
+        n = 0
+        for key in list(self._holders):
+            if key[0] != tenant:
+                continue
+            rs = self._holders[key]
+            if replica in rs:
+                rs.discard(replica)
+                self.stats.retracted += 1
+                n += 1
+                if not rs:
+                    del self._holders[key]
+        if self._pending:
+            self._pending = deque(
+                ev for ev in self._pending
+                if not (ev[1] == tenant and ev[2] == replica))
+        return n
+
     def staleness(self) -> int:
         """Pending (unapplied) events — 0 unless ``defer_events``."""
         return len(self._pending)
@@ -235,12 +258,23 @@ class CacheAwareRouter:
         self.cfg = cfg or RouterConfig()
         self.cache_aware = cache_aware
         self.stats = RoutingStats()
+        self._dead: Set[int] = set()
+
+    def mark_dead(self, replica: int) -> None:
+        """Replica death: never route here again (the gateway also
+        masks dead replicas with infinite load, which this guards even
+        for held-prefix candidates)."""
+        self._dead.add(replica)
 
     def route(self, req: Request, loads: Sequence[int]) -> int:
         """Replica index for ``req``.  Strict total orders:
         least-loaded = min (load, index); cache route = min
         (-held tokens, load, index) over the holding replicas."""
-        least = min(range(len(loads)), key=lambda j: (loads[j], j))
+        live = [j for j in range(len(loads))
+                if j not in self._dead and loads[j] != float("inf")]
+        if not live:            # defensive: the gateway gates this case
+            live = list(range(len(loads)))
+        least = min(live, key=lambda j: (loads[j], j))
         if not self.cache_aware:
             self.stats.routed_blind += 1
             return least
@@ -248,7 +282,7 @@ class CacheAwareRouter:
             self.stats.fallback_stale += 1
             return least
         held = self.directory.lookup(self.tenant, req.prompt_tokens)
-        held = {j: t for j, t in held.items() if j < len(loads)}
+        held = {j: t for j, t in held.items() if j in live}
         if not held:
             self.stats.fallback_miss += 1
             return least
@@ -280,6 +314,7 @@ class ResponseCache:
         self.hits = 0
         self.inserts = 0
         self.evictions = 0
+        self.partial_skips = 0
 
     @staticmethod
     def _key(req: Request) -> tuple:
@@ -291,8 +326,18 @@ class ResponseCache:
 
     def record(self, req: Request) -> None:
         """Remember a finished request's committed output (idempotent —
-        greedy decode makes re-records identical)."""
+        greedy decode makes re-records identical).
+
+        Terminal-verdict guard: only a *completed* generation records.
+        Expired, preempted, or crash-drained partials carry real-looking
+        ``output_tokens`` shorter than the request asked for; caching
+        one would prime later identical requests with a truncated
+        completion (rejected draft rows — wasted verify compute) and,
+        worse, present the partial as a cached response."""
         if req.prompt_tokens is None or not req.output_tokens:
+            return
+        if req.generated < req.max_new_tokens and not req.done:
+            self.partial_skips += 1
             return
         key = self._key(req)
         self._store.pop(key, None)

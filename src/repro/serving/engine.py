@@ -211,6 +211,31 @@ class ServingEngine:
             return self.runtime.has_work()
         return bool(self.queue) or any(s is not None for s in self.slots)
 
+    def drain_requests(self) -> List[Request]:
+        """Replica death: release every KV page and return the resident
+        requests (queued, prefilling and decoding alike) so the dispatcher
+        can redrive them onto surviving replicas.  Requests come back
+        rolled to a restartable state (outputs cleared, original
+        ``prefill_done`` stamp kept so TTFT is not double-counted)."""
+        if self.runtime is not None:
+            drained = self.runtime.drain_for_redrive()
+            self.kv.release_all()        # safety net: no page outlives death
+            return drained
+        drained = list(self.queue)
+        self.queue.clear()
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            self.slots[i] = None
+            drained.append(req)
+        for req in drained:
+            req.generated = 0
+            req.slot = -1
+            req.output_tokens.clear()
+            req.decode_times.clear()
+        self.kv.release_all()
+        return drained
+
     # ----------------------------------------------------------------- step
     def step(self) -> StepReport:
         """One unit of work.  Compute time measured with a real clock."""

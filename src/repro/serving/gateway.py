@@ -13,7 +13,10 @@ one** terminal verdict:
         ├────► SHED        (tenant paused by the controller at arrival)
         │
         └──► ACCEPTED ──► EXPIRED    (queued past its dispatch deadline)
-                     └──► COMPLETED  (final token delivered)
+                     ├──► COMPLETED  (final token delivered)
+                     └──► (redriven) (replica died: re-enqueued, still
+                                      ACCEPTED — not a verdict, and it
+                                      keeps its full requeue credit)
 
 and the per-tenant ledger maintains the conservation invariant
 
@@ -123,7 +126,11 @@ class TokenStream:
 class _Entry:
     req: Request
     deadline: Optional[float]
-    attempts: int = 0
+    attempts: int = 0                    # pool-exhaustion submit tries
+    # recovery bookkeeping, deliberately NOT ``attempts``: a request
+    # redriven after a replica death keeps its full pool-exhaustion
+    # requeue credit — backpressure and recovery must not alias
+    redrives: int = 0
     last_attempt: float = float("-inf")
 
 
@@ -143,6 +150,10 @@ class TenantDoor:
         self.expired = 0
         self.completed = 0
         self.in_flight = 0
+        # non-terminal transition counter: requests re-enqueued after a
+        # replica death (they stay ACCEPTED/in-flight, so conservation
+        # is untouched — this only counts the recovery traffic)
+        self.redriven = 0
         self.reject_reasons: Dict[str, int] = {}
 
     # ------------------------------------------------------------- verdicts
@@ -187,7 +198,7 @@ class TenantDoor:
         return {"offered": self.offered, "completed": self.completed,
                 "rejected": self.rejected, "shed": self.shed,
                 "expired": self.expired, "in_flight": self.in_flight,
-                "queued": len(self.queue)}
+                "redriven": self.redriven, "queued": len(self.queue)}
 
 
 class Gateway:
@@ -210,6 +221,9 @@ class Gateway:
         self.default_cfg = default_cfg
         self.paused_until = paused_until or (lambda name: 0.0)
         self.doors: Dict[str, TenantDoor] = {}
+        # replicas declared dead by the recovery path: masked out of
+        # routing (infinite load) and never submitted to again
+        self._dead: Dict[str, set] = {}
         # serving.trace.FlightRecorder (or None): door-side span sources —
         # offer/admit/expire/reject; engine-side spans flow via
         # finalize_step's own hook
@@ -251,10 +265,66 @@ class Gateway:
             self.tracer.on_offer(req, now, verdict.value)
         return verdict
 
+    # ------------------------------------------------------------ recovery
+    def mark_dead(self, name: str, idx: int) -> None:
+        """Stop routing/submitting tenant ``name`` to replica ``idx``."""
+        self._dead.setdefault(name, set()).add(idx)
+
+    def live_replicas(self, name: str) -> List[int]:
+        dead = self._dead.get(name, ())
+        return [j for j in range(len(self.engines.get(name, [])))
+                if j not in dead]
+
+    def redrive(self, name: str, reqs: List[Request], now: float, *,
+                from_engine: int = -1) -> int:
+        """Re-enqueue a dead replica's in-flight requests for dispatch
+        to a survivor.  The requests stay ACCEPTED — no verdict is
+        spent, so conservation holds by construction — and each fresh
+        entry carries a **full** pool-exhaustion requeue credit
+        (``attempts=0``): recovery must never eat into backpressure's
+        budget.  Partially-streamed requests roll their stream back
+        exactly like a preemption (regeneration re-emits from the
+        original first-token clock).  Returns the number redriven."""
+        door = self.door(name)
+        n = 0
+        for req in reversed(reqs):     # appendleft: preserve FIFO order
+            if door._state.get(req.req_id) is not Verdict.ACCEPTED:
+                continue               # already terminal: nothing to save
+            st = door.streams.get(req.req_id)
+            if st is not None:
+                st.rollback()
+            deadline = None if door.cfg.deadline_s is None \
+                else now + door.cfg.deadline_s
+            door.queue.appendleft(_Entry(req, deadline, redrives=1))
+            door.redriven += 1
+            n += 1
+            if self.tracer is not None:
+                self.tracer.on_redrive(req, now, from_engine=from_engine)
+        return n
+
+    def abandon(self, name: str, reqs: List[Request], now: float, *,
+                reason: str = "replica_crash") -> int:
+        """Recovery-off path: a dead replica's in-flight requests are
+        SHED (their single terminal verdict) instead of redriven."""
+        door = self.door(name)
+        n = 0
+        for req in reqs:
+            if door._state.get(req.req_id) is not Verdict.ACCEPTED:
+                continue
+            door.streams.pop(req.req_id, None)
+            door._terminal(req, Verdict.SHED)
+            n += 1
+            if self.tracer is not None:
+                self.tracer.on_terminal(req, now, "shed", reason=reason)
+        return n
+
     # ------------------------------------------------------------- dispatch
     def _route(self, name: str, req: Request) -> int:
         engs = self.engines[name]
-        loads = [len(e.queue) + len(e.active()) for e in engs]
+        dead = self._dead.get(name, ())
+        loads = [float("inf") if j in dead
+                 else len(e.queue) + len(e.active())
+                 for j, e in enumerate(engs)]
         router = self.routers.get(name)
         if router is not None:
             return router.route(req, loads)
@@ -284,6 +354,8 @@ class Gateway:
                     break                   # already tried this instant
                 if name not in self.engines or not self.engines[name]:
                     break                   # replicas not wired yet
+                if not self.live_replicas(name):
+                    break                   # every replica is dead
                 entry.attempts += 1
                 entry.last_attempt = now
                 idx = self._route(name, entry.req)

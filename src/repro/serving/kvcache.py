@@ -163,6 +163,16 @@ class PagedKVCache:
         for page in entry.pages:
             self._drop_page_ref(page)
 
+    def release_all(self) -> int:
+        """Release every live sequence at once (replica teardown / drain
+        safety net).  Returns the number of sequences released.  After
+        this, ``reserved_pages == 0``: every page is either free or
+        parked on the cached prefix LRU."""
+        seqs = list(self.tables)
+        for seq_id in seqs:
+            self.release(seq_id)
+        return len(seqs)
+
     def _drop_page_ref(self, page: int) -> None:
         """One sequence stops referencing ``page``: decrement, and on
         refcount zero return it to the free list (or park an indexed

@@ -337,6 +337,12 @@ class PagedRuntime:
     def set_budget(self, n: int) -> None:
         self.sched.set_budget(n)
 
+    def drain_for_redrive(self) -> List[Request]:
+        """Replica death: release every page and hand back the resident
+        requests for the dispatcher to redrive (see
+        ``PagedScheduler.drain_for_redrive``)."""
+        return self.sched.drain_for_redrive()
+
     # ------------------------------------------------------------ fused step
     def _run_mixed(self, tokens, positions, n_rows, bts, last_rows):
         """Execute the fused forward for this (rows, width, logit-rows)

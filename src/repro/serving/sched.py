@@ -278,6 +278,11 @@ class PagedScheduler:
         self.active: List[SeqState] = []
         self.budget = cfg.max_active
         self.preempt_log: List[Tuple[int, int]] = []   # (victim, beneficiary)
+        # req_ids of hung lanes (fault injection / a real stuck
+        # collective): they keep their slot and pages but are excluded
+        # from step plans, so they emit no tokens until the stuck-lane
+        # watchdog preempts them through the normal refcount-safe path
+        self.stuck: set = set()
 
     # ------------------------------------------------------------ lifecycle
     def submit(self, req: Request) -> SubmitOutcome:
@@ -336,6 +341,8 @@ class PagedScheduler:
                 seq = candidates[idx]
                 idx += 1
                 if seq not in self.prefilling:   # evicted while planning
+                    continue
+                if seq.req.req_id in self.stuck:  # hung mid-prefill
                     continue
             elif self.waiting and (len(self.active) + len(self.prefilling)
                                    < self.budget):
@@ -514,6 +521,8 @@ class PagedScheduler:
         for seq in sorted(self.active, key=_urgency_key, reverse=True):
             if seq not in self.active:      # evicted by an earlier reserve
                 continue
+            if seq.req.req_id in self.stuck:
+                continue                    # hung lane: holds pages, no rows
             done = False
             while not done:
                 try:
@@ -605,7 +614,49 @@ class PagedScheduler:
         r.decode_times.clear()
         self.preempt_log.append(
             (r.req_id, beneficiary.req.req_id if beneficiary else -1))
+        # a requeued lane is a FRESH lane: the hang was a property of the
+        # stuck execution, not of the request, so recovery-by-preemption
+        # converges instead of re-sticking forever
+        self.stuck.discard(r.req_id)
         self.waiting.appendleft(victim)
+
+    # ------------------------------------------------------ fault recovery
+    def find(self, req_id: int) -> Optional[SeqState]:
+        for pool in (self.active, self.prefilling, self.waiting):
+            for seq in pool:
+                if seq.req.req_id == req_id:
+                    return seq
+        return None
+
+    def mark_stuck(self, req_id: int) -> None:
+        self.stuck.add(req_id)
+
+    def drain_for_redrive(self) -> List[Request]:
+        """Replica death: release every resident page and hand back every
+        resident request (in-service first, then queued) for the gateway
+        to redrive to a survivor.  Request state resets exactly like
+        :meth:`preempt` — outputs cleared for a full greedy regeneration,
+        ``prefill_done`` kept so the original first emission remains the
+        TTFT sample — but the lane objects are NOT requeued here: the
+        survivor's ``submit`` builds fresh ones.  Afterwards this
+        scheduler holds nothing (``kv.reserved_pages == 0``)."""
+        seqs = list(self.prefilling) + list(self.active) \
+            + list(self.waiting)
+        self.prefilling.clear()
+        self.active.clear()
+        self.waiting.clear()
+        self.stuck.clear()
+        out: List[Request] = []
+        for seq in seqs:
+            r = seq.req
+            if r.req_id in self.kv.tables:
+                self.kv.release(r.req_id)
+            r.generated = 0
+            r.slot = -1
+            r.output_tokens.clear()
+            r.decode_times.clear()
+            out.append(r)
+        return out
 
     # ------------------------------------------------------------- retire
     def complete(self, seq: SeqState) -> None:
@@ -613,6 +664,7 @@ class PagedScheduler:
             self.kv.release(seq.req.req_id)
         if seq in self.active:
             self.active.remove(seq)
+        self.stuck.discard(seq.req.req_id)
         if self.response_cache is not None:
             # record only finished outputs: greedy decode makes the
             # committed token sequence a pure function of (prompt,

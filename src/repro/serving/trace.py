@@ -33,6 +33,9 @@ attribution gap.  Segment semantics:
 * ``decode``        — decode cadence: every inter-token span, wait and
   compute folded together (matches ``TenantMetrics.itl`` samples).
   Speculative verify/rollback ride as instant events on the segment.
+* ``handoff``       — replica death to re-dispatch on a survivor: the
+  request's ONE timeline carries across engines (span links across
+  replicas), from the crash instant to the redriven submit landing.
 
 The :class:`FlightRecorder` keeps *summaries* (segment sums) for every
 request but full timelines only for the slowest-K per tenant per time
@@ -275,8 +278,33 @@ class FlightRecorder(Tracer):
         segment closes here, which is exactly ``submitted - arrival`` —
         the gap between the door- and engine-measured TTFT windows."""
         tl = self._timeline(req, wait="door_queued")
-        tl.mark(now, "sched_queued")
+        # handoff admits clamp to the cursor: a redriven request's last
+        # step on the dead replica may have ENDED past the global clock
+        # (engines run in parallel virtual time), leaving the handoff
+        # segment zero-length.  Everything else keeps strict ordering.
+        t = max(now, tl.cursor) if tl.wait == "handoff" else now
+        tl.mark(t, "sched_queued")
         tl.event("admitted", now, engine=engine)
+
+    def on_redrive(self, req, now: float, from_engine: int = -1) -> None:
+        """Replica death: the request's timeline survives the engine it
+        was running on.  The current wait closes at the crash instant
+        and an explicit ``handoff`` segment opens; the re-dispatch's
+        ``on_admit`` closes it (span links across replicas — the ONE
+        timeline carries across engines, it never restarts)."""
+        tl = self._timeline(req)
+        t = max(now, tl.cursor)
+        tl.mark(t, "handoff")
+        tl.event("handoff", t, from_engine=from_engine)
+
+    def on_fault(self, now: float, kind: str, tenant: str = "",
+                 **args) -> None:
+        """Fault deliveries and recovery actions land as instants on the
+        shared controller track, so request timelines can be correlated
+        with the chaos schedule the same way they are with controller
+        decisions."""
+        self.instant(f"fault:{kind}", now, track="controller",
+                     lane="faults", tenant=tenant, **args)
 
     def on_terminal(self, req, now: float, verdict: str,
                     reason: str = "") -> None:
@@ -289,6 +317,18 @@ class FlightRecorder(Tracer):
         if reason:
             tl.event("reject", now, reason=reason)
         self._finish(tl, max(now, tl.cursor), verdict)
+
+    def on_preempt(self, req, now: float, beneficiary: int = -1,
+                   engine: str = "") -> None:
+        """One preemption: close the victim's current phase and open the
+        ``preempted`` wait.  Called from :meth:`on_step` for plan-time
+        SLO preemptions and directly by the harness when the stuck-lane
+        watchdog requeues a hung lane between steps."""
+        tl = self._timeline(req)
+        t = max(now, tl.cursor)
+        tl.mark(t, "preempted")
+        tl.preemptions += 1
+        tl.event("preempted", t, beneficiary=beneficiary, engine=engine)
 
     # ------------------------------------------------------------- steps
     def on_step(self, report, start: Optional[float], end: float,
@@ -303,13 +343,9 @@ class FlightRecorder(Tracer):
         # current phase closes and the preempted wait opens
         bene = {v: b for v, b in getattr(report, "preempt_pairs", [])}
         for req in report.preempted:
-            tl = self._timeline(req)
-            t = start if start is not None else max(tl.cursor, end)
-            tl.mark(max(t, tl.cursor), "preempted")
-            tl.preemptions += 1
-            tl.event("preempted", max(t, tl.cursor),
-                     beneficiary=bene.get(req.req_id, -1),
-                     engine=engine)
+            self.on_preempt(req, start if start is not None else end,
+                            beneficiary=bene.get(req.req_id, -1),
+                            engine=engine)
         for req, tok_start, clen, idx in getattr(report, "chunks", []):
             tl = self._timeline(req)
             tl.span("prefill_chunk", end, t0=start, i=idx,

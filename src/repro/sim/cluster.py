@@ -32,6 +32,7 @@ from typing import Deque, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core import psmodel
+from repro.core.faults import ActuatorFault
 from repro.core.ledger import DeviceLedger
 from repro.core.profiles import A100_MIG, ProfileLattice, SliceProfile
 from repro.core.signals import Snapshot, SystemSignals, TenantSignals
@@ -150,7 +151,7 @@ class ClusterSim:
     def __init__(self, params: SimParams, controller_factory=None,
                  topo: Optional[ClusterTopology] = None,
                  lattice: ProfileLattice = A100_MIG,
-                 tracer=None):
+                 tracer=None, faults=None):
         self.p = params
         self.rng = np.random.default_rng(params.seed)
         self.topo = topo or make_p4d_cluster(2)
@@ -159,6 +160,10 @@ class ClusterSim:
         # core.obs.Tracer (or None): the sim implements the same
         # one-trace-event-per-actuator-method contract as ServingActuator
         self.tracer = tracer
+        # core.faults.FaultInjector (or None): armed actuator failures
+        # make the sim's Actuator methods raise ActuatorFault before any
+        # state changes — wrap the sim in a RetryingActuator to recover
+        self.faults = faults
         self._eseq = itertools.count()
         self.events: List[_Event] = []
         # --- tenant model (registry-driven) ---
@@ -241,7 +246,16 @@ class ClusterSim:
         if self.tracer is not None:
             self.tracer.action(name, self.now, tenant, dur=dur, **args)
 
+    def _maybe_fault(self, method: str) -> None:
+        """Injected actuator failure: raise BEFORE any state changes so
+        a failed call is a clean no-op the retry wrapper can repeat."""
+        if self.faults is not None and \
+                self.faults.actuator_fault(method, self.now) is not None:
+            raise ActuatorFault(
+                f"injected {method} failure at t={self.now:.3f}")
+
     def reconfigure(self, tenant: str, profile: SliceProfile) -> float:
+        self._maybe_fault("reconfigure")
         lt = self.lat[tenant]
         pause = max(self.p.mig_reconfig_min_s,
                     self.rng.normal(self.p.mig_reconfig_mean_s,
@@ -258,6 +272,7 @@ class ClusterSim:
     def move(self, tenant: str, slot: Slot) -> float:
         """Relocate the tenant's primary replica (the controller's
         placement lever steers one replica per decision)."""
+        self._maybe_fault("move")
         lt = self.lat[tenant]
         self.ledger.move(tenant, 0, slot)
         lt.replicas[0].slot = slot
@@ -267,6 +282,7 @@ class ClusterSim:
         return self.p.move_pause_s
 
     def set_io_throttle(self, tenant: str, bytes_per_s: Optional[float]) -> None:
+        self._maybe_fault("set_io_throttle")
         bg = self.bg.get(tenant)
         if bg is not None:
             bg.io_throttle = bytes_per_s
@@ -275,6 +291,7 @@ class ClusterSim:
         self._trace("set_io_throttle", tenant, bytes_per_s=bytes_per_s)
 
     def set_mps_quota(self, tenant: str, frac: float) -> None:
+        self._maybe_fault("set_mps_quota")
         bg = self.bg.get(tenant)
         if bg is not None:
             bg.mps_quota = frac
@@ -282,10 +299,12 @@ class ClusterSim:
         self._trace("set_mps_quota", tenant, frac=frac)
 
     def pin_cpu_away_from_irq(self, tenant: str) -> None:
+        self._maybe_fault("pin_cpu_away_from_irq")
         self.lat[tenant].pinned = True
         self._trace("pin_cpu_away_from_irq", tenant)
 
     def free_slots(self) -> List[Slot]:
+        self._maybe_fault("free_slots")
         self._trace("query_free_slots", "")
         return self.ledger.free_slots()
 
@@ -293,6 +312,7 @@ class ClusterSim:
         """Free compute units on a device (budget per A100 minus all
         occupants, the asking tenant's own slice included —
         greedy_upgrade asks for the *extra*), read from the ledger."""
+        self._maybe_fault("headroom_units")
         self._trace("query_headroom_units", "", device=device)
         return self.ledger.headroom_units(device)
 

@@ -1,0 +1,520 @@
+"""Failure-domain robustness: the deterministic fault injector, replica-
+death redrive through the gateway, the stuck-lane watchdog, and the
+bounded-retry actuator wrapper.
+
+The centerpiece drives a real 2-replica paged cluster through a seeded
+chaos schedule for 450 virtual-time steps with the gateway's verdict
+ledger and the flight recorder's segment-conservation invariant checked
+at EVERY step, then asserts the recovery contract: zero page leaks at
+drain, exactly one terminal verdict per redriven request, an explicit
+``handoff`` segment carrying each redriven timeline across engines, and
+token parity with a fault-free run of the same workload.
+"""
+from collections import deque
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs.base import get_config, reduced
+from repro.core.faults import (ActuatorFault, Fault, FaultInjector,
+                               RetryConfig, RetryingActuator,
+                               StuckLaneWatchdog)
+from repro.serving.directory import ResponseCache
+from repro.serving.engine import ServingEngine
+from repro.serving.gateway import DoorConfig, Gateway, Verdict
+from repro.serving.request import Request
+from repro.serving.trace import FlightRecorder
+
+CFG = reduced(get_config("stablelm_3b")).replace(dtype="float32")
+
+# crash replica 1 while it holds in-flight work, then hang a lane on
+# replica 0 (the survivor carrying the redriven load)
+CHAOS = (Fault(time=0.07, kind="replica_crash", tenant="T1", replica=1),
+         Fault(time=0.10, kind="lane_stuck", tenant="T1", replica=0))
+
+
+def mk_engine():
+    # identical seed per replica: identical params, so greedy token
+    # output is a pure function of the prompt regardless of which
+    # replica (or how many restarts) served the request
+    return ServingEngine(CFG, max_slots=4, seq_cap=32, page_size=4,
+                         seed=0, backend="paged", pool_pages=24,
+                         chunk_tokens=8, attn_impl="ref")
+
+
+def drive_cluster(schedule, recover=True, steps=450, dt=0.01,
+                  watchdog_timeout=0.05, n_req=20):
+    """A miniature launch/serve loop: 2 paged replicas behind the
+    gateway, fixed virtual step grid, the full recovery machinery —
+    with ``gw.check()`` and ``rec.check()`` after every step."""
+    rng = np.random.default_rng(3)
+    engines = {"T1": [mk_engine(), mk_engine()]}
+    rec = FlightRecorder()
+    for e in engines["T1"]:
+        e.tracer = rec
+    gw = Gateway(engines,
+                 door_cfgs={"T1": DoorConfig(max_queue=256,
+                                             max_attempts=1000)},
+                 tracer=rec)
+    inj = FaultInjector(schedule)
+    wd = StuckLaneWatchdog(timeout_s=watchdog_timeout)
+    reqs = [Request(req_id=i, tenant="T1", prompt_len=12,
+                    max_new_tokens=5, arrival=i * 0.004,
+                    prompt_tokens=rng.integers(0, CFG.vocab_size, 12))
+            for i in range(n_req)]
+    pending = deque(reqs)
+    redriven_ids, shed_ids = set(), set()
+    t = 0.0
+    for _ in range(steps):
+        while pending and pending[0].arrival <= t:
+            gw.offer(pending.popleft(), t)
+        gw.dispatch(t)
+        # faults after dispatch: a redriven entry waits at least one
+        # step for redispatch, so its handoff segment has real width
+        for f in inj.due(t):
+            if f.kind == "replica_crash":
+                live = gw.live_replicas("T1")
+                if f.replica not in live or len(live) <= 1:
+                    continue
+                eng = engines["T1"][f.replica]
+                gw.mark_dead("T1", f.replica)
+                drained = eng.drain_requests()
+                for r in drained:
+                    wd.forget(("T1", f.replica, r.req_id))
+                rec.on_fault(t, f.kind, tenant="T1", replica=f.replica)
+                if recover:
+                    gw.redrive("T1", drained, t, from_engine=f.replica)
+                    redriven_ids.update(r.req_id for r in drained)
+                else:
+                    gw.abandon("T1", drained, t)
+                    shed_ids.update(r.req_id for r in drained)
+            elif f.kind == "lane_stuck":
+                sched = engines["T1"][f.replica].runtime.sched
+                lanes = [s.req.req_id for s in sched.active
+                         if s.req.req_id not in sched.stuck]
+                if lanes:
+                    sched.mark_stuck(min(lanes))
+                    rec.on_fault(t, f.kind, tenant="T1",
+                                 replica=f.replica)
+        for j in gw.live_replicas("T1"):
+            eng = engines["T1"][j]
+            if eng.has_work():
+                gw.finalize("T1", eng, eng.step(), t + dt, start_time=t)
+        live_keys = set()
+        for j in gw.live_replicas("T1"):
+            for s in engines["T1"][j].runtime.sched.active:
+                key = ("T1", j, s.req.req_id)
+                live_keys.add(key)
+                wd.observe(key, s.req.generated, t + dt)
+        wd.prune(live_keys)
+        for _, j, rid in wd.stale(t + dt):
+            sched = engines["T1"][j].runtime.sched
+            seq = sched.find(rid)
+            if seq is not None and seq not in sched.waiting:
+                rec.on_preempt(seq.req, t + dt, engine=f"r{j}")
+                sched.preempt(seq)
+        gw.check()          # conservation holds at every step
+        rec.check()         # segment tiling holds at every step
+        t += dt
+    assert not pending and gw.queued_total() == 0
+    assert all(not e.has_work() for e in engines["T1"])
+    return dict(gw=gw, rec=rec, engines=engines, reqs=reqs, inj=inj,
+                wd=wd, redriven=redriven_ids, shed=shed_ids)
+
+
+_RUNS = {}
+
+
+def run_cached(key):
+    if key not in _RUNS:
+        if key == "baseline":
+            _RUNS[key] = drive_cluster(())
+        elif key == "no_recover":
+            _RUNS[key] = drive_cluster(CHAOS[:1], recover=False)
+        else:
+            _RUNS[key] = drive_cluster(CHAOS)
+    return _RUNS[key]
+
+
+# ------------------------------------------------------- chaos property
+def test_chaos_recovery_conserves_everything():
+    """450 checked steps of crash + stuck-lane chaos with recovery on:
+    every offered request completes with exactly one terminal verdict,
+    no replica (dead ones included) leaks a single KV page, and the
+    fault schedule actually bit (work was redriven, the watchdog
+    fired)."""
+    run = run_cached("chaos")
+    door = run["gw"].door("T1")
+    assert door.offered == len(run["reqs"])
+    assert door.completed == door.offered          # recovery saves all
+    assert door.in_flight == 0
+    assert door.shed == door.rejected == door.expired == 0
+    assert door.redriven == len(run["redriven"]) >= 1
+    assert run["wd"].fired >= 1
+    # zero page leaks everywhere — the crashed replica included
+    for eng in run["engines"]["T1"]:
+        assert eng.kv.reserved_pages == 0
+        assert not eng.runtime.sched.stuck
+    # exactly one terminal verdict per redriven request
+    for rid in run["redriven"]:
+        assert door.verdict_of(rid) is Verdict.COMPLETED
+    kinds = {k for _, k, _ in run["inj"].log}
+    assert {"replica_crash", "lane_stuck"} <= kinds
+
+
+def test_redriven_timeline_carries_handoff_segment():
+    """A redriven request keeps ONE conserved timeline across engines:
+    the crash opens an explicit ``handoff`` segment, the survivor's
+    admit closes it, and the request is admitted twice but finished
+    once."""
+    run = run_cached("chaos")
+    summaries = {s.req_id: s for s in run["rec"].summaries["T1"]}
+    assert len(summaries) == len(run["reqs"])      # one timeline each
+    for rid in run["redriven"]:
+        s = summaries[rid]
+        assert s.verdict == "completed"
+        assert s.segs.get("handoff", 0.0) > 0.0
+    # untouched requests never grew a handoff segment
+    for rid in set(summaries) - run["redriven"]:
+        assert "handoff" not in summaries[rid].segs
+
+
+def test_chaos_tokens_match_fault_free_run():
+    """Greedy decode + full-restart recovery: the chaos run's committed
+    tokens are identical to the fault-free run's, for untouched AND
+    redriven requests alike (regeneration replays the same argmax
+    path)."""
+    chaos = run_cached("chaos")
+    base = run_cached("baseline")
+    assert base["gw"].door("T1").completed == len(base["reqs"])
+    base_toks = {r.req_id: list(r.output_tokens) for r in base["reqs"]}
+    for r in chaos["reqs"]:
+        assert len(r.output_tokens) == r.max_new_tokens
+        assert list(r.output_tokens) == base_toks[r.req_id], \
+            f"req {r.req_id} diverged (redriven={r.req_id in chaos['redriven']})"
+
+
+def test_recovery_off_sheds_with_one_verdict_each():
+    """Same crash, recovery disabled: the dead replica's in-flight
+    requests are SHED — still exactly one terminal verdict each, the
+    ledger still balances, pages still come back."""
+    run = run_cached("no_recover")
+    door = run["gw"].door("T1")
+    assert len(run["shed"]) >= 1
+    assert door.shed == len(run["shed"])
+    assert door.redriven == 0
+    assert door.completed == door.offered - door.shed
+    assert door.in_flight == 0
+    for rid in run["shed"]:
+        assert door.verdict_of(rid) is Verdict.SHED
+    for eng in run["engines"]["T1"]:
+        assert eng.kv.reserved_pages == 0
+    # recovery on vs off: the whole point, measured
+    assert run_cached("chaos")["gw"].door("T1").completed > door.completed
+
+
+def test_chaos_run_is_deterministic():
+    """Same schedule, same seed, fixed virtual grid: a second run is
+    bit-identical — fault log, gateway counters, committed tokens."""
+    a = run_cached("chaos")
+    b = drive_cluster(CHAOS)
+    assert a["inj"].replay_key() == b["inj"].replay_key()
+    assert a["gw"].door("T1").counters() == b["gw"].door("T1").counters()
+    assert a["redriven"] == b["redriven"]
+    toks = lambda run: {r.req_id: list(r.output_tokens)
+                        for r in run["reqs"]}
+    assert toks(a) == toks(b)
+
+
+# ------------------------------------------------ injector determinism
+@settings(max_examples=15, deadline=None)
+@given(st.integers(min_value=0, max_value=10**6), st.data())
+def test_fault_schedule_replays_bit_identically(seed, data):
+    mk = lambda: FaultInjector.plan(
+        seed, 20.0, tenants=["A", "B"], replicas=3, crashes=2,
+        actuator_failures=2, stuck_lanes=2, fabric_windows=1)
+    a, b = mk(), mk()
+    assert a.schedule == b.schedule
+    times = sorted(data.draw(st.lists(
+        st.floats(min_value=0.0, max_value=25.0, allow_nan=False,
+                  allow_infinity=False),
+        min_size=1, max_size=12)))
+    for t in times:
+        assert a.due(t) == b.due(t)
+        assert a.actuator_fault("reconfigure", t) == \
+            b.actuator_fault("reconfigure", t)
+        assert a.fabric_factor(t) == b.fabric_factor(t)
+    assert a.replay_key() == b.replay_key()
+    assert a.pending() == b.pending()
+
+
+def test_plan_is_a_pure_function_of_seed():
+    a = FaultInjector.plan(5, 10.0, tenants=["X"], replicas=2)
+    b = FaultInjector.plan(5, 10.0, tenants=["X"], replicas=2)
+    c = FaultInjector.plan(6, 10.0, tenants=["X"], replicas=2)
+    assert a.schedule == b.schedule
+    assert a.schedule != c.schedule
+    assert all(0.0 <= f.time <= 10.0 for f in a.schedule)
+
+
+# ---------------------------------------------------- watchdog mechanics
+def test_watchdog_fires_only_on_true_stalls():
+    wd = StuckLaneWatchdog(timeout_s=1.0)
+    wd.observe("a", 0, 0.0)
+    wd.observe("b", 0, 0.0)
+    assert wd.stale(0.9) == []
+    wd.observe("b", 1, 0.5)              # b made progress, a did not
+    assert wd.stale(1.0) == ["a"]
+    assert wd.fired == 1
+    assert wd.stale(1.2) == []           # a was consumed, b still fresh
+    assert wd.stale(1.5) == ["b"]
+    # pruned lanes (completed/drained) can never be reported stale
+    wd.observe("c", 0, 2.0)
+    wd.prune([])
+    assert wd.stale(10.0) == []
+
+
+# ------------------------------------------- retrying actuator contract
+class _ScriptedActuator:
+    """Protocol-complete inner actuator that records every landed call
+    and can be scripted to fail."""
+
+    def __init__(self):
+        self.calls = []
+        self.quota = {}
+        self.fail_next = 0
+
+    def _maybe_fail(self):
+        if self.fail_next > 0:
+            self.fail_next -= 1
+            raise ActuatorFault("scripted failure")
+
+    def reconfigure(self, tenant, profile):
+        self._maybe_fail()
+        self.calls.append(("reconfigure", tenant, profile))
+        return 1.0
+
+    def move(self, tenant, slot):
+        self._maybe_fail()
+        self.calls.append(("move", tenant, slot))
+        return 0.5
+
+    def set_io_throttle(self, tenant, bytes_per_s):
+        self._maybe_fail()
+        self.calls.append(("set_io_throttle", tenant, bytes_per_s))
+
+    def set_mps_quota(self, tenant, frac):
+        self._maybe_fail()
+        self.calls.append(("set_mps_quota", tenant, frac))
+        self.quota[tenant] = frac
+
+    def pin_cpu_away_from_irq(self, tenant):
+        self._maybe_fail()
+        self.calls.append(("pin_cpu_away_from_irq", tenant))
+
+    def free_slots(self):
+        self._maybe_fail()
+        self.calls.append(("free_slots",))
+        return ["slot"]
+
+    def headroom_units(self, device):
+        self._maybe_fail()
+        self.calls.append(("headroom_units", device))
+        return 3
+
+
+def _protocol_methods():
+    from repro.core.controller import Actuator
+    return sorted(n for n, v in vars(Actuator).items()
+                  if not n.startswith("_") and callable(v))
+
+
+def test_retrying_actuator_covers_every_protocol_method():
+    """Lint over ``vars(Actuator)``: a method added to the protocol
+    without RetryingActuator coverage (and a delegation check here)
+    fails this test."""
+    methods = _protocol_methods()
+    for m in methods:
+        assert callable(getattr(RetryingActuator, m, None)), \
+            f"RetryingActuator does not implement protocol method {m!r}"
+    inner = _ScriptedActuator()
+    ra = RetryingActuator(inner, clock=lambda: 0.0)
+    args = {"reconfigure": ("T1", "2g.20gb"), "move": ("T1", "slot"),
+            "set_io_throttle": ("ETL", 3e8),
+            "set_mps_quota": ("T1", 0.7),
+            "pin_cpu_away_from_irq": ("T1",), "free_slots": (),
+            "headroom_units": ("h0:g0",)}
+    assert set(args) == set(methods)
+    for m in methods:
+        before = len(inner.calls)
+        getattr(ra, m)(*args[m])
+        assert len(inner.calls) == before + 1, \
+            f"{m} did not delegate exactly once"
+    assert ra.stats["calls"] == len(methods)
+    assert ra.stats["faults"] == 0
+    # value passthrough on the healthy path
+    assert ra.reconfigure("T1", "2g.20gb") == 1.0
+    assert ra.free_slots() == ["slot"]
+    assert ra.headroom_units("h0:g0") == 3
+
+
+def test_retrying_actuator_wraps_the_real_simulator():
+    """The same wrapper heals a real ClusterSim whose actuator methods
+    raise injected ActuatorFaults: two failures, success on the third
+    attempt, one retried call on the books."""
+    from repro.core.tenancy import TenantRegistry
+    from repro.sim.cluster import ClusterSim
+    from repro.sim.params import SimParams
+
+    reg = TenantRegistry.slo_fleet(2, 2)
+    p = SimParams(duration_s=60.0, schedule=(), tenants=tuple(reg))
+    inj = FaultInjector([Fault(time=0.0, kind="actuator_fail",
+                               method="pin_cpu_away_from_irq", count=2,
+                               timeout_s=0.1)])
+    inj.due(0.0)                     # arm
+    sim = ClusterSim(p, faults=inj)
+    ra = RetryingActuator(sim, clock=lambda: sim.now)
+    first = next(iter(sim.lat))
+    ra.pin_cpu_away_from_irq(first)
+    assert sim.lat[first].pinned
+    assert ra.stats["faults"] == 2
+    assert ra.stats["retried_calls"] == 1
+    assert ra.stats["exhausted"] == 0
+
+
+def test_retry_backoff_is_charged_to_the_pause():
+    """A retried reconfigure is downtime: the injected timeout plus the
+    backoff delay land on the returned pause window."""
+    inner = _ScriptedActuator()
+    inj = FaultInjector([Fault(time=0.0, kind="actuator_fail",
+                               method="reconfigure", count=1,
+                               timeout_s=0.2)])
+    inj.due(0.0)
+    cfg = RetryConfig(max_attempts=3, base_backoff_s=0.05)
+    ra = RetryingActuator(inner, clock=lambda: 0.0, faults=inj, cfg=cfg)
+    pause = ra.reconfigure("T1", "2g.20gb")
+    assert pause == pytest.approx(1.0 + 0.2 + 0.05)
+    assert ra.time_lost_s == pytest.approx(0.25)
+
+
+def test_exhaustion_rolls_back_to_last_good_and_gates():
+    clock = [0.0]
+    inner = _ScriptedActuator()
+    inj = FaultInjector([])
+    cfg = RetryConfig(max_attempts=3, base_backoff_s=0.01,
+                      exhaustion_cooldown_s=10.0)
+    ra = RetryingActuator(inner, clock=lambda: clock[0], faults=inj,
+                          cfg=cfg)
+    ra.set_mps_quota("T1", 0.9)              # last known-good
+    assert inner.quota["T1"] == 0.9
+    inner.fail_next = 3                      # every attempt fails...
+    ra.set_mps_quota("T1", 0.5)              # ...rollback (4th) succeeds
+    assert ra.stats["exhausted"] == 1
+    assert ra.stats["rollbacks"] == 1
+    assert inner.quota["T1"] == 0.9          # rolled back, not 0.5
+    # gated during cooldown: no inner call at all
+    before = len(inner.calls)
+    assert ra.set_mps_quota("T1", 0.6) is None
+    assert len(inner.calls) == before and ra.stats["gated"] == 1
+    assert inner.quota["T1"] == 0.9
+    # cooldown over: healthy calls flow again
+    clock[0] = 11.0
+    ra.set_mps_quota("T1", 0.6)
+    assert inner.quota["T1"] == 0.6
+
+
+def test_fsm_cooldown_stops_the_retry_cycle():
+    """A cooling-down DecisionFSM ends the cycle after the FIRST failed
+    attempt — retries never thrash a lane the control law is holding
+    still."""
+    class _FSM:
+        def __init__(self, cooling):
+            self.cooling = cooling
+
+        def is_cooling_down(self):
+            return self.cooling
+
+    for cooling, want_faults in ((True, 1), (False, 3)):
+        inner = _ScriptedActuator()
+        inner.fail_next = 99
+        ra = RetryingActuator(inner, clock=lambda: 0.0,
+                              cfg=RetryConfig(max_attempts=3,
+                                              base_backoff_s=0.01),
+                              fsm_for=lambda t: _FSM(cooling))
+        assert ra.set_mps_quota("T1", 0.5) is None
+        assert ra.stats["faults"] == want_faults
+        assert ra.stats["exhausted"] == 1
+
+
+# ---------------------------------------- scheduler drain + stuck lanes
+def test_scheduler_drain_and_stuck_lane_mechanics():
+    """mark_stuck freezes a lane's progress without touching its pages;
+    drain_for_redrive empties the whole scheduler, releases every page,
+    and hands back restart-ready requests with their original
+    ``prefill_done`` stamp (TTFT is never double-counted)."""
+    rng = np.random.default_rng(9)
+    eng = mk_engine()
+    reqs = [Request(req_id=i, tenant="T1", prompt_len=12,
+                    max_new_tokens=6, arrival=0.0,
+                    prompt_tokens=rng.integers(0, CFG.vocab_size, 12))
+            for i in range(2)]
+    for r in reqs:
+        assert eng.submit(r)
+    t = 0.0
+    while not eng.runtime.sched.active:          # prefill both
+        t += 0.01
+        eng.finalize_step(eng.step(), t, t - 0.01)
+    sched = eng.runtime.sched
+    victim = min(s.req.req_id for s in sched.active)
+    sched.mark_stuck(victim)
+    frozen = next(s.req for s in sched.active if s.req.req_id == victim)
+    gen_before = frozen.generated
+    for _ in range(3):
+        t += 0.01
+        eng.finalize_step(eng.step(), t, t - 0.01)
+    assert frozen.generated == gen_before        # stuck lane: no tokens
+    others = [r for r in reqs if r.req_id != victim]
+    assert all(r.generated > 1 or r.done for r in others)
+    drained = eng.drain_requests()
+    assert {r.req_id for r in drained} == \
+        {r.req_id for r in reqs if not r.done}
+    assert eng.kv.reserved_pages == 0
+    assert not sched.active and not sched.prefilling and not sched.waiting
+    assert not sched.stuck
+    for r in drained:
+        assert r.generated == 0 and not r.output_tokens
+        assert r.prefill_done >= 0               # original TTFT stamp kept
+
+
+# --------------------------------------------- response-cache guard
+def test_response_cache_refuses_partials():
+    """Only a COMPLETED generation may prime draft hints: a crash- or
+    expiry-shaped partial (tokens present, generation short, no finish
+    stamp) is refused and counted."""
+    rc = ResponseCache()
+    full = Request(req_id=0, tenant="T1", prompt_len=4, max_new_tokens=3,
+                   arrival=0.0, prompt_tokens=np.array([1, 2, 3, 4]))
+    full.output_tokens.extend([7, 8, 9])
+    full.generated = 3
+    rc.record(full)
+    assert len(rc) == 1 and rc.partial_skips == 0
+    partial = Request(req_id=1, tenant="T1", prompt_len=4,
+                      max_new_tokens=8, arrival=0.0,
+                      prompt_tokens=np.array([5, 6, 7, 8]))
+    partial.output_tokens.extend([7, 8])
+    partial.generated = 2                        # 2 of 8: a partial
+    rc.record(partial)
+    assert len(rc) == 1 and rc.partial_skips == 1
+    probe = Request(req_id=2, tenant="T1", prompt_len=4, max_new_tokens=8,
+                    arrival=0.0, prompt_tokens=np.array([5, 6, 7, 8]))
+    assert not rc.prime(probe)                   # the partial never primed
+    # a finished-but-short generation (early stop) IS recordable
+    short = Request(req_id=3, tenant="T1", prompt_len=4, max_new_tokens=8,
+                    arrival=0.0, prompt_tokens=np.array([9, 9, 9, 9]))
+    short.output_tokens.extend([1, 2])
+    short.generated = 2
+    short.finished = 1.0
+    rc.record(short)
+    assert len(rc) == 2 and rc.partial_skips == 1

@@ -210,6 +210,48 @@ def test_transient_rejection_requeues_once_then_gives_up():
     gw.check()
 
 
+def test_redriven_request_gets_fresh_requeue_credit():
+    """Replica death is not the request's fault: a redriven request's
+    pool-exhaustion budget resets (attempts=0) and its redrives are
+    counted separately, so prior transient rejections on the dead
+    replica can never push it over ``max_attempts``."""
+    rng = np.random.default_rng(0)
+    a, b = StubEngine(1), StubEngine(1)
+    gw = Gateway({"T1": [a, b]},
+                 door_cfgs={"T1": DoorConfig(max_queue=8,
+                                             max_attempts=2)})
+    door = gw.door("T1")
+    gw.offer(make_req(0, max_new=1), 0.0)    # filler -> A, finishes fast
+    gw.offer(make_req(1, max_new=5), 0.0)    # filler -> B, stays busy
+    gw.offer(make_req(2, max_new=1), 0.0)    # X: the redriven request
+    gw.dispatch(0.0)
+    assert len(door.queue) == 1              # X burned attempt 1 of 2
+    gw.finalize("T1", a, a.fabricate_step(rng), 0.01, start_time=0.0)
+    assert door.completed == 1               # filler 0 done, A is free
+    gw.dispatch(0.02)                        # X lands on A
+    assert len(door.queue) == 0 and door.in_flight == 2
+    # A dies with X resident: drain it and redrive through the door
+    gw.mark_dead("T1", 0)
+    drained = list(a.queue) + list(a.running)
+    a.queue.clear()
+    a.running.clear()
+    assert [r.req_id for r in drained] == [2]
+    gw.redrive("T1", drained, 0.03, from_engine=0)
+    assert door.redriven == 1 and door.rejected == 0
+    # B is still full: X pool-exhausts AGAIN — but with fresh credit
+    # it is requeued, not rejected (old bookkeeping would reject here)
+    gw.dispatch(0.04)
+    assert door.rejected == 0 and len(door.queue) == 1
+    for _ in range(5):                       # drain filler 1 off B
+        gw.finalize("T1", b, b.fabricate_step(rng), 0.05, start_time=0.04)
+    gw.dispatch(0.06)                        # X finally lands on B
+    gw.finalize("T1", b, b.fabricate_step(rng), 0.07, start_time=0.06)
+    assert door.verdict_of(2) is Verdict.COMPLETED
+    assert door.counters()["completed"] == 3
+    assert door.counters()["redriven"] == 1
+    gw.check()
+
+
 # ------------------------------------------------------------ rate limit
 def test_rate_limit_rejects_429():
     gw = Gateway({"T1": [StubEngine(4)]},

@@ -252,6 +252,7 @@ def test_response_cache_key_includes_params():
     rc = ResponseCache()
     done = make_req(0, [1, 2, 3, 4], 8)
     done.output_tokens = [9, 8, 7]
+    done.finished = 1.0            # early-stopped but COMPLETED
     rc.record(done)
     same = make_req(1, [1, 2, 3, 4], 8)
     assert rc.prime(same)
@@ -271,6 +272,7 @@ def test_response_cache_never_overwrites_client_hints():
     rc = ResponseCache()
     done = make_req(0, [1, 2, 3, 4], 8)
     done.output_tokens = [9, 8, 7]
+    done.finished = 1.0
     rc.record(done)
     client = make_req(1, [1, 2, 3, 4], 8, hints=[5, 5, 5])
     assert not rc.prime(client)
@@ -283,6 +285,7 @@ def test_response_cache_lru_eviction():
     for i in range(3):
         done = make_req(i, [i, i + 1, i + 2, i + 3], 8)
         done.output_tokens = [i]
+        done.finished = 1.0
         rc.record(done)
     assert len(rc) == 2 and rc.evictions == 1
     assert not rc.prime(make_req(9, [0, 1, 2, 3], 8))     # oldest evicted
