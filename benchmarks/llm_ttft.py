@@ -992,6 +992,175 @@ def run_chaos(requests=48, qps=300.0, replicas=2, seed=0, verbose=True):
     return out
 
 
+def run_migrate(requests=24, qps=2000.0, replicas=2, prompt_len=112,
+                max_new=8, slots=24, seed=0, verbose=True):
+    """Live-migration A/B (the ``--chaos --migrate`` arm): the SAME
+    fault schedule — one replica crash mid-burst — through
+    ``launch.serve`` twice, recovery by verified KV-page shipping
+    (``migrate=True``) vs the recompute redrive.  Both arms plus a
+    fault-free reference run under ``det_timing`` AND ``exact_tokens``
+    (float32 + reference attention), so each run is bit-reproducible
+    and greedy output is a pure function of the prompt: the parity
+    checks below are exact, not statistical.
+
+    The crash is the only fault, so both arms' virtual schedules are
+    bit-identical to the fault-free run up to the crash instant and
+    they drain the SAME lane set — the redriven cohorts match and the
+    TTFT comparison is over identical request ids.  A warm-shipped lane
+    resumes on page bytes identical to the ones the fault-free run
+    decodes over; a cold (or recompute-redriven) lane re-prefills, and
+    with exact numerics re-prefill regenerates the same tokens — so
+    EVERY redriven request must be TOKEN-IDENTICAL to the fault-free
+    run (``token_parity_ok``), in both arms.  What differs is time: the
+    recompute arm re-prefills every drained lane, so the redriven
+    cohort pays re-prefill queueing the shipping arm skips —
+    ``redriven_ttft_p99_improvement`` is that gap, at equal completed
+    throughput.
+
+    Two more single-arm runs demonstrate the remaining triggers: a
+    planned drain (``drains=``: scale-down evacuates, sheds nothing)
+    and the gray-failure path (a ``replica_slow`` window; the
+    tail-based detector evacuates the degraded-but-alive replica before
+    the watchdog would fire).  Those schedules diverge timing-wise from
+    the reference the moment the slow window opens, so they demo the
+    triggers rather than gate on parity.
+    """
+    from repro.core.faults import Fault, FaultInjector
+    from repro.launch.serve import serve
+
+    def schedule():
+        # fresh injector per arm: delivery is stateful, the A/B needs
+        # both arms to consume the identical schedule.  Crash-only (see
+        # docstring: pre-crash bit-identity with the fault-free run is
+        # what makes the cohorts and the token streams comparable).
+        return FaultInjector([
+            Fault(time=0.05, kind="replica_crash", tenant="T1", replica=1),
+        ])
+
+    kw = dict(requests=requests, qps=qps, replicas=replicas, seed=seed,
+              prompt_len=prompt_len, max_new=max_new, slots=slots,
+              backend="paged", with_controller=False, verbose=False,
+              watchdog_timeout_s=0.5, det_timing=True,
+              # fully distinct per-request prompts: the prefix directory
+              # must not quietly refund the recompute arm's re-prefill
+              # (templated traffic would attach nearly every page, and
+              # the A/B would be measuring the directory, not shipping)
+              unique_prompts=True)
+    ab = dict(kw, exact_tokens=True)
+    base = serve(**ab)                          # fault-free reference
+    rec = serve(faults=schedule(), recover=True, migrate=False, **ab)
+    mig = serve(faults=schedule(), recover=True, migrate=True, **ab)
+
+    def arm(res):
+        d = res["T1"]
+        return {
+            "verdicts": {k: d[k] for k in ("offered", "completed", "shed",
+                                           "rejected", "expired",
+                                           "redriven", "preempted")},
+            "conservation_ok": (d["offered"] == d["completed"] + d["shed"]
+                                + d["rejected"] + d["expired"]),
+            "ttft_p99_ms": d["ttft_p99_ms"],
+            "redriven_ids": d["redriven_ids"],
+            "migrations": res.get("migrations", []),
+        }
+
+    a_rec, a_mig = arm(rec), arm(mig)
+    # the cohort: requests either arm had to rescue.  With a crash-only
+    # schedule both arms drain the same lanes, so the sets must match —
+    # assert it, or the p99 comparison silently goes apples-to-oranges.
+    rec_ids, mig_ids = set(a_rec["redriven_ids"]), set(a_mig["redriven_ids"])
+    cohort = sorted(rec_ids | mig_ids)
+    cohorts_match = rec_ids == mig_ids
+
+    def cohort_p99(res):
+        t = [res["T1"]["ttft_by_id"][i] for i in cohort
+             if i in res["T1"]["ttft_by_id"]]
+        return float(np.quantile(t, 0.99)) if t else 0.0
+
+    a_rec["redriven_ttft_p99_ms"] = cohort_p99(rec)
+    a_mig["redriven_ttft_p99_ms"] = cohort_p99(mig)
+    # token parity: every completed request either arm redrove must
+    # match the fault-free run's greedy output exactly — page shipping
+    # AND recompute both land on the same tokens, only the time differs
+    base_out = base["T1"]["outputs"]
+    parity_mismatches = sorted(
+        {rid for res in (rec, mig)
+         for rid in cohort
+         if rid in res["T1"]["outputs"] and rid in base_out
+         and res["T1"]["outputs"][rid] != base_out[rid]})
+    warm_lanes = sum(m["warm"] for m in mig.get("migrations", ()))
+    imp = 1.0 - (a_mig["redriven_ttft_p99_ms"]
+                 / max(a_rec["redriven_ttft_p99_ms"], 1e-9))
+
+    # ---- remaining triggers, single-arm demos ------------------------
+    drain = serve(drains=[(0.04, "T1", 1)], migrate=True, **kw)
+    gray = serve(faults=FaultInjector([
+        Fault(time=0.04, kind="replica_slow", tenant="T1", replica=1,
+              factor=4.0, duration_s=0.8)]),
+        recover=True, migrate=True, **kw)
+    gray_migs = [m for m in gray.get("migrations", ())
+                 if m["reason"] == "gray"]
+    drain_migs = [m for m in drain.get("migrations", ())
+                  if m["reason"] == "drain"]
+
+    out = {
+        "workload": {"requests": requests, "qps": qps,
+                     "replicas": replicas, "prompt_len": prompt_len,
+                     "max_new": max_new, "seed": seed},
+        "schedule": [(f.time, f.kind, f.tenant, f.replica)
+                     for f in schedule().schedule],
+        "recompute": a_rec,
+        "migrate": a_mig,
+        "redriven_requests": len(cohort),
+        "cohorts_match": cohorts_match,
+        "warm_lanes": warm_lanes,
+        "token_parity_ok": not parity_mismatches,
+        "token_parity_mismatches": parity_mismatches,
+        "redriven_ttft_p99_improvement": imp,
+        "throughput_equal": (a_mig["verdicts"]["completed"]
+                            == a_rec["verdicts"]["completed"]),
+        "conservation_ok": (a_rec["conservation_ok"]
+                            and a_mig["conservation_ok"]),
+        "drain": {"migrations": drain_migs,
+                  "shed": drain["T1"]["shed"],
+                  "completed": drain["T1"]["completed"],
+                  "offered": drain["T1"]["offered"]},
+        "gray": {"migrations": gray_migs,
+                 "evacuations": sum(1 for _, k, _ in
+                                    gray["faults"]["log"]
+                                    if k == "gray_evacuate"),
+                 "completed": gray["T1"]["completed"],
+                 "offered": gray["T1"]["offered"]},
+    }
+    if verbose:
+        print(f"== live-migration A/B ({replicas} paged replicas, "
+              f"crash mid-burst, same schedule) ==")
+        for label, a in (("recompute", a_rec), ("page-ship", a_mig)):
+            v = a["verdicts"]
+            print(f"  {label:9s}: completed {v['completed']}/{v['offered']}"
+                  f" redriven={v['redriven']} "
+                  f"redriven-TTFT p99={a['redriven_ttft_p99_ms']:.1f}ms "
+                  f"overall p99={a['ttft_p99_ms']:.1f}ms")
+        print(f"  warm lanes shipped: {warm_lanes} "
+              f"({sum(m['bytes'] for m in a_mig['migrations']) / 1e6:.2f}"
+              f" MB, {len(a_mig['migrations'])} migration(s)) "
+              f"cohorts match: {cohorts_match}")
+        print(f"  token parity ({len(cohort)} redriven req(s), both arms, "
+              f"vs fault-free): "
+              f"{'OK' if out['token_parity_ok'] else 'VIOLATED'}")
+        print(f"  redriven-TTFT p99 improvement: {imp * 100:+.1f}% "
+              f"(>= 25% expected) at equal throughput: "
+              f"{out['throughput_equal']}")
+        print(f"  drain trigger: {len(drain_migs)} migration(s), "
+              f"shed={out['drain']['shed']} (evacuate, never shed)  "
+              f"gray trigger: {out['gray']['evacuations']} evacuation(s)")
+    # token streams are for the parity check, not the artifact
+    for res in (base, rec, mig, drain, gray):
+        res["T1"].pop("outputs", None)
+        res["T1"].pop("ttft_by_id", None)
+    return out
+
+
 def run_backend(backend="dense", verbose=True, seed=0, duration=1800.0):
     static = run(with_controller=False, seed=seed, backend=backend,
                  duration=duration)
@@ -1022,9 +1191,12 @@ def _maybe_dump(out, json_path):
 
 def main(verbose=True, backend="dense", shared_prefix=False, spec=False,
          duration=1800.0, json_path=None, replicas=0, door=False,
-         trace=False, trace_out=None, chaos=False, chaos_requests=48):
+         trace=False, trace_out=None, chaos=False, chaos_requests=48,
+         migrate=False):
     if verbose:
         print("== LLM serving case study (vLLM-style, OLMo-2-7B) ==")
+    if chaos and migrate:
+        return _maybe_dump(run_migrate(verbose=verbose), json_path)
     if chaos:
         return _maybe_dump(run_chaos(requests=chaos_requests,
                                      verbose=verbose), json_path)
@@ -1099,6 +1271,12 @@ if __name__ == "__main__":
                          "conservation verdict")
     ap.add_argument("--chaos-requests", type=int, default=48,
                     help="--chaos: requests per arm")
+    ap.add_argument("--migrate", action="store_true",
+                    help="with --chaos: live-migration A/B — the same "
+                         "fault schedule recovered by verified KV-page "
+                         "shipping vs recompute redrive, with exact "
+                         "token-parity and redriven-TTFT asserts "
+                         "(deterministic timing model)")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="--trace: write the paged arm's Chrome/Perfetto "
                          "trace_event JSON here")
@@ -1112,4 +1290,4 @@ if __name__ == "__main__":
          spec=args.spec, duration=args.duration, json_path=args.json,
          replicas=args.replicas, door=args.door, trace=args.trace,
          trace_out=args.trace_out, chaos=args.chaos,
-         chaos_requests=args.chaos_requests)
+         chaos_requests=args.chaos_requests, migrate=args.migrate)

@@ -48,6 +48,8 @@ class Actuator(Protocol):
     def pin_cpu_away_from_irq(self, tenant: str) -> None: ...
     def free_slots(self) -> List[Slot]: ...
     def headroom_units(self, device: str) -> int: ...
+    def migrate(self, tenant: str, replica_from: int,
+                replica_to: int) -> float: ...
 
 
 @dataclass(frozen=True)

@@ -52,6 +52,10 @@ class Fault:
     - ``fabric_degrade``: factor (>1 inflates step durations), duration_s
     - ``lane_stuck``: tenant, replica (the harness picks the victim lane
       deterministically; the lane stays stuck until recovered)
+    - ``replica_slow``: tenant, replica, factor (>1 inflates that one
+      replica's step durations), duration_s — a gray failure: the
+      replica keeps answering, just slowly, so the crash detector and
+      the watchdog both stay quiet while the tail degrades
     """
     time: float
     kind: str
@@ -86,6 +90,8 @@ class FaultInjector:
         self._armed_fail: Dict[str, int] = {}       # method -> calls left
         self._fail_timeout: Dict[str, float] = {}   # method -> timeout_s
         self._fabric: List[Tuple[float, float, float]] = []  # (t0, t1, fac)
+        # (t0, t1, tenant, replica, factor) gray-failure windows
+        self._slow: List[Tuple[float, float, str, int, float]] = []
         # replay-identity record: (time, kind, detail)
         self.log: List[Tuple[float, str, str]] = []
 
@@ -98,7 +104,10 @@ class FaultInjector:
              methods: Sequence[str] = ("reconfigure", "move"),
              fail_count: int = 2, fail_timeout_s: float = 0.5,
              fabric_factor: float = 2.0,
-             fabric_duration_s: float = 5.0) -> "FaultInjector":
+             fabric_duration_s: float = 5.0,
+             slow_replicas: int = 0,
+             slow_factor: float = 4.0,
+             slow_duration_s: float = 5.0) -> "FaultInjector":
         """Generate a schedule deterministically from ``seed`` and the
         plan arguments — no other entropy source exists."""
         rng = np.random.default_rng(seed)
@@ -127,6 +136,13 @@ class FaultInjector:
                 time=float(rng.uniform(0.1, 0.8) * duration_s),
                 kind="fabric_degrade",
                 factor=fabric_factor, duration_s=fabric_duration_s))
+        for _ in range(slow_replicas):
+            events.append(Fault(
+                time=float(rng.uniform(0.15, 0.6) * duration_s),
+                kind="replica_slow",
+                tenant=tenants[int(rng.integers(len(tenants)))],
+                replica=int(rng.integers(replicas)),
+                factor=slow_factor, duration_s=slow_duration_s))
         return cls(events)
 
     # ---------------------------------------------------------- delivery
@@ -145,6 +161,9 @@ class FaultInjector:
             elif f.kind == "fabric_degrade":
                 self._fabric.append((f.time, f.time + f.duration_s,
                                      f.factor))
+            elif f.kind == "replica_slow":
+                self._slow.append((f.time, f.time + f.duration_s,
+                                   f.tenant, f.replica, f.factor))
             self.log.append((f.time, f.kind,
                              f"{f.tenant}/{f.replica}/{f.method}"))
             out.append(f)
@@ -171,6 +190,17 @@ class FaultInjector:
         factor = 1.0
         for t0, t1, fac in self._fabric:
             if t0 <= now < t1:
+                factor *= fac
+        return factor
+
+    def replica_factor(self, tenant: str, replica: int,
+                       now: float) -> float:
+        """Step-duration multiplier for one replica from any active
+        ``replica_slow`` window (overlapping windows multiply), on top
+        of the global :meth:`fabric_factor`."""
+        factor = 1.0
+        for t0, t1, ten, rep, fac in self._slow:
+            if ten == tenant and rep == replica and t0 <= now < t1:
                 factor *= fac
         return factor
 
@@ -361,3 +391,8 @@ class RetryingActuator:
 
     def headroom_units(self, device):
         return self._call("headroom_units", "", (device,), default=0)
+
+    def migrate(self, tenant, replica_from, replica_to):
+        return self._call("migrate", tenant,
+                          (tenant, replica_from, replica_to),
+                          charge_pause=True, default=0.0)

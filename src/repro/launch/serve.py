@@ -87,7 +87,11 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
           trace: bool = False, trace_out: str = None,
           chaos: bool = False, chaos_seed: int = None,
           recover: bool = True, faults=None,
-          watchdog_timeout_s: float = 1.5):
+          watchdog_timeout_s: float = 1.5,
+          migrate: bool = False, drains=None,
+          gray_threshold: float = 2.5, gray_cooldown_s: float = 2.0,
+          det_timing: bool = False, exact_tokens: bool = False,
+          unique_prompts: bool = False):
     """Virtual-time multi-tenant serving run; returns per-tenant stats.
 
     ``listen=True`` (the ``--listen`` flag) turns on the gateway's
@@ -126,6 +130,34 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
     ``llm_ttft --chaos`` benchmark measures against.  Either way every
     request still gets exactly one terminal verdict and the gateway's
     conservation ledger holds.
+
+    ``migrate=True`` upgrades recovery from recompute to *verified
+    state transfer* (``serving/migrate.py``): a failing replica's lanes
+    ship their KV page chains (chain-hashed, with int8 scales) to the
+    least-loaded live peer, which recomputes every chain hash before
+    committing — a mismatch silently degrades that lane to the
+    recompute redrive, never a wrong token.  Three triggers: replica
+    crash (warm adoption from the shared host pool), ``drains=``
+    planned scale-downs (evacuate instead of shed), and gray failure —
+    a tail-based detector compares per-token step cost across live
+    peers and evacuates a degraded-but-alive replica (quarantined
+    for ``gray_cooldown_s``, then readmitted) before the watchdog
+    fires.  Transfer time is priced against the ledger's per-root
+    fabric demand like any tenant flow.
+
+    ``det_timing=True`` replaces the measured wall-clock step time with
+    a deterministic per-token cost model.  Normally each step's
+    ``compute_s`` is real measured time, so machine noise perturbs the
+    virtual schedule (and with it batching, chunk boundaries and
+    ultimately greedy argmax near-ties) run to run.  With the model,
+    the whole run is bit-reproducible — which is what lets the
+    ``llm_ttft --migrate`` A/B assert exact token parity between arms.
+    ``exact_tokens=True`` additionally pins float32 weights and the
+    reference attention path, making greedy output a pure function of
+    the prompt: batch shape and chunk boundaries stop perturbing argmax
+    near-ties, so even recomputed (re-prefilled) lanes regenerate
+    byte-identical tokens — the same setup ``tests/test_faults.py``
+    uses for its token-parity property.
     """
     from collections import deque
 
@@ -155,6 +187,12 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
     if route not in ("cache", "load"):
         raise SystemExit("--route must be 'cache' or 'load'")
     cfg = reduced(get_config(arch))
+    if exact_tokens:
+        # float32 + reference attention: greedy argmax becomes a pure
+        # function of the prompt, independent of batch shape and chunk
+        # boundaries — required for cross-arm token-parity asserts
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, dtype="float32")
     paged = backend == "paged"
     names = ["T1"] if num_tenants == 1 else [f"L{i}"
                                              for i in range(num_tenants)]
@@ -167,11 +205,16 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
             tenants=list(names), replicas=replicas,
             # a crash needs a survivor to redrive onto
             crashes=1 if replicas > 1 else 0,
-            actuator_failures=2, stuck_lanes=1, fabric_windows=1)
+            actuator_failures=2, stuck_lanes=1, fabric_windows=1,
+            # gray failure only matters when migration can evacuate it;
+            # plain --chaos keeps the historical schedule bit-identical
+            slow_replicas=1 if (migrate and replicas > 1) else 0)
     # spec_k is passed unconditionally: requesting speculation on the
     # dense backend must hit the engine's ValueError, not silently no-op
     eng_kw = dict(max_slots=slots, seq_cap=128, backend=backend,
                   spec_k=spec_k)
+    if exact_tokens:
+        eng_kw["attn_impl"] = "ref"
     if paged:
         eng_kw.update(kv_dtype=kv_dtype, prefix_cache=prefix_cache)
     # one response cache per tenant, SHARED across its replicas: a
@@ -184,7 +227,10 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
             kw["response_cache"] = rcaches.setdefault(name, ResponseCache())
         return kw
 
-    engines = {name: [ServingEngine(cfg, seed=seed + 17 * i + j,
+    # one seed per TENANT, identical across its replicas: replicas of a
+    # model serve the same weights, so a redriven (or page-shipped)
+    # request regenerates the same greedy tokens on any of them
+    engines = {name: [ServingEngine(cfg, seed=seed + 17 * i,
                                     **tenant_kw(name))
                       for j in range(replicas)]
                for i, name in enumerate(names)}
@@ -334,9 +380,21 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
     # prefix (page-aligned, so replicas publish identical chain hashes)
     # plus a random tail — the workload shape cache-aware routing is
     # for.  Dense traffic keeps synthetic prompts (tokens unused).
-    tmpl_len = (prompt_len * 2 // 3) // 16 * 16 if paged else 0
+    # unique_prompts drops the shared templates: every prompt is fully
+    # distinct, so a crashed replica's KV is genuinely lost state (the
+    # prefix directory cannot resurrect it on the survivors) — the
+    # workload where page shipping vs recompute differs most honestly
+    tmpl_len = (prompt_len * 2 // 3) // 16 * 16 \
+        if paged and not unique_prompts else 0
 
     def make_prompt(templates):
+        if unique_prompts:
+            # real harness-drawn tokens, distinct per request: engines
+            # synthesize from their own rng when handed None, and
+            # identically-seeded replicas would then mint COLLIDING
+            # prompts for different requests
+            return rng.integers(0, cfg.vocab_size,
+                                prompt_len).astype(np.int64)
         if templates is None:
             return None
         head = templates[int(rng.integers(len(templates)))]
@@ -357,6 +415,12 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
     for name in names:
         gen_traffic(name)
     preempts = {name: 0 for name in names}
+    # ---- lane-migration state ----------------------------------------
+    migrations = []                       # completed-migration summaries
+    redriven_ids = {name: set() for name in names}   # req_ids that moved
+    drain_events = deque(sorted(drains)) if drains else deque()
+    step_hist = {}       # (tenant, replica) -> deque of per-token cost
+    quarantine = {}      # (tenant, replica) -> readmit time (gray)
     # per-engine availability clock: engines run in parallel
     avail = {(name, j): 0.0 for name in names for j in range(replicas)}
     next_sample = 1.0
@@ -394,6 +458,7 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
         windows[name] = LatencyWindow()
         gateway.door_cfgs[name] = door_cfg_for(spec)
         preempts[name] = 0
+        redriven_ids[name] = set()
         avail[(name, 0)] = t
         fabric.set_on_root(name, any(
             topo.root_of(s.device) == contended for s in slots_))
@@ -424,6 +489,145 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
                 on_admitted(spec, slots_, now[0])
 
     # ---- failure-domain recovery handlers ----------------------------
+    def migrate_replica(name, j, reason):
+        """Evacuate replica ``j`` by KV-page shipping: drain its lanes
+        WITH state, price the transfer against the fabric, and import
+        each page chain into the least-loaded live peer.  Verified
+        lanes are adopted warm (handoff span covers the transfer, TTFT
+        stamp conserved); cold / checksum-rejected lanes take the
+        recompute redrive — never a wrong token.  Returns
+        ``(dst, transfer_s)`` or None when there is no live peer or the
+        (possibly fault-injected) actuator call did not land."""
+        live = [k for k in gateway.live_replicas(name) if k != j]
+        if not live:
+            return None
+        dst = min(live, key=lambda k: (len(engines[name][k].queue)
+                                       + len(engines[name][k].active()), k))
+        n_before = len(actuator.migrations)
+        act = retrying if retrying is not None else actuator
+        act.migrate(name, j, dst)
+        if len(actuator.migrations) == n_before:
+            return None            # injected failure ate the call
+        rec = actuator.migrations.pop()
+        arrive = now[0] + rec["transfer_s"]
+        moved = rec["warm"] + rec["cold"]
+        gateway.adopt_warm(name, rec["warm"], now[0], arrive,
+                           from_engine=j, to_engine=dst)
+        gateway.redrive(name, rec["cold"], now[0], from_engine=j)
+        redriven_ids[name].update(r.req_id for r in moved)
+        if watchdog is not None:
+            for r in moved:
+                watchdog.forget((name, j, r.req_id))
+        # the destination stalls for the transfer: migration is fabric
+        # traffic like any tenant flow, and it pays in virtual time too
+        avail[(name, dst)] = max(avail.get((name, dst), 0.0), arrive)
+        migrations.append({
+            "t": now[0], "tenant": name, "from": j, "to": dst,
+            "reason": reason, "warm": len(rec["warm"]),
+            "cold": len(rec["cold"]), "pages": rec["pages"],
+            "bytes": rec["bytes"], "transfer_s": rec["transfer_s"],
+            "attached_pages": rec["attached_pages"],
+            "copied_pages": rec["copied_pages"],
+            "verify_failures": rec["verify_failures"]})
+        if verbose:
+            print(f"  t={now[0]:6.1f}s MIGRATE {name}/r{j}->r{dst} "
+                  f"({reason}): {len(rec['warm'])} warm "
+                  f"({rec['attached_pages']} attached / "
+                  f"{rec['copied_pages']} shipped pages, "
+                  f"{rec['bytes'] / 1e6:.2f} MB in "
+                  f"{rec['transfer_s'] * 1e3:.1f} ms), "
+                  f"{len(rec['cold'])} recompute")
+        return dst, rec["transfer_s"]
+
+    def run_drains():
+        """Planned scale-down: evacuate the replica's lanes (page
+        shipping under ``migrate``, recompute redrive otherwise — never
+        shed), then release its slots for good."""
+        while drain_events and drain_events[0][0] <= now[0]:
+            _, name, j = drain_events.popleft()
+            if name not in engines or j >= len(engines[name]):
+                continue
+            if j not in gateway.live_replicas(name):
+                continue
+            if len(gateway.live_replicas(name)) <= 1:
+                continue             # never drain the last live replica
+            gateway.mark_dead(name, j)
+            routers[name].mark_dead(j)
+            directory.retract_replica(name, j)
+            if recorder is not None:
+                recorder.on_fault(now[0], "planned_drain", tenant=name,
+                                  replica=j)
+            res = migrate_replica(name, j, "drain") if migrate else None
+            if res is None:
+                drained = engines[name][j].drain_requests()
+                redriven_ids[name].update(r.req_id for r in drained)
+                if watchdog is not None:
+                    for r in drained:
+                        watchdog.forget((name, j, r.req_id))
+                n = gateway.redrive(name, drained, now[0], from_engine=j)
+                if verbose:
+                    print(f"  t={now[0]:6.1f}s DRAIN {name}/r{j}: "
+                          f"redrove {n} request(s) cold")
+            ledger.release(name, replica=j)
+            avail[(name, j)] = now[0]
+
+    def run_gray_detector():
+        """Tail-based gray-failure detection: a replica whose recent
+        per-token step cost is ``gray_threshold`` x its best live
+        peer's gets evacuated (warm, under ``migrate``) and quarantined
+        before the per-lane watchdog would fire."""
+        for name in list(names):
+            live = [k for k in gateway.live_replicas(name)
+                    if (name, k) not in quarantine]
+            if len(live) < 2:
+                continue
+            means = {}
+            for k in live:
+                h = step_hist.get((name, k))
+                if h is not None and len(h) >= 4:
+                    means[k] = sum(h) / len(h)
+            if len(means) < 2:
+                continue
+            best = min(means.values())
+            if best <= 0:
+                continue
+            for k, m in sorted(means.items()):
+                if m > gray_threshold * best:
+                    evacuate_gray(name, k)
+                    break            # one evacuation per tenant per tick
+
+    def evacuate_gray(name, j):
+        gateway.mark_dead(name, j)       # quarantine: reversible mask
+        directory.retract_replica(name, j)
+        if recorder is not None:
+            recorder.on_fault(now[0], "gray_evacuate", tenant=name,
+                              replica=j)
+        res = migrate_replica(name, j, "gray")
+        if res is None:
+            drained = engines[name][j].drain_requests()
+            redriven_ids[name].update(r.req_id for r in drained)
+            if watchdog is not None:
+                for r in drained:
+                    watchdog.forget((name, j, r.req_id))
+            gateway.redrive(name, drained, now[0], from_engine=j)
+        quarantine[(name, j)] = now[0] + gray_cooldown_s
+        step_hist.pop((name, j), None)
+        if injector is not None:
+            injector.log.append((now[0], "gray_evacuate", f"{name}/{j}"))
+        if verbose:
+            print(f"  t={now[0]:6.1f}s GRAY {name}/r{j}: evacuated, "
+                  f"quarantined until t={quarantine[(name, j)]:.1f}s")
+
+    def run_quarantine():
+        for (name, j), until in list(quarantine.items()):
+            if now[0] >= until:
+                del quarantine[(name, j)]
+                gateway.mark_live(name, j)
+                avail[(name, j)] = max(avail[(name, j)], now[0])
+                if verbose:
+                    print(f"  t={now[0]:6.1f}s GRAY {name}/r{j}: "
+                          f"readmitted")
+
     def crash_replica(name, j):
         """Replica death: mask it everywhere a request could still reach
         it, release every resource it held, then redrive (or, recovery
@@ -434,6 +638,14 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
             return
         live = gateway.live_replicas(name)
         if j not in live:
+            if (name, j) in quarantine:
+                # the quarantined gray replica died for real: make its
+                # mask permanent instead of readmitting a corpse
+                del quarantine[(name, j)]
+                routers[name].mark_dead(j)
+                ledger.release(name, replica=j)
+                injector.log.append(
+                    (now[0], "crash_in_quarantine", f"{name}/{j}"))
             return                       # already dead
         if len(live) <= 1:
             # never kill the last live replica: redriven work (and all
@@ -446,6 +658,14 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
         gateway.mark_dead(name, j)
         routers[name].mark_dead(j)
         directory.retract_replica(name, j)
+        if recover and migrate:
+            # warm standby adoption: the corpse's pages survive in the
+            # shared host pool, so ship them instead of recomputing
+            res = migrate_replica(name, j, "crash")
+            if res is not None:
+                ledger.release(name, replica=j)
+                avail[(name, j)] = now[0]
+                return
         drained = eng.drain_requests()
         ledger.release(name, replica=j)
         if watchdog is not None:
@@ -453,6 +673,7 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
                 watchdog.forget((name, j, r.req_id))
         if recover:
             n = gateway.redrive(name, drained, now[0], from_engine=j)
+            redriven_ids[name].update(r.req_id for r in drained)
             verb = "redrove"
         else:
             n = gateway.abandon(name, drained, now[0])
@@ -546,6 +767,12 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
             run_admissions()
         if injector is not None:
             apply_faults()
+        if drain_events:
+            run_drains()
+        if quarantine:
+            run_quarantine()
+        if injector is not None and migrate and recover:
+            run_gray_detector()
         submit_due()
         if controller and now[0] >= next_sample:
             tenants = {}
@@ -577,11 +804,27 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
                 # fabric transfer
                 transfer = (rep.prefill_tokens * 0.4e6
                             / fabric.bandwidth(name))
-                dur = rep.compute_s * actuator.compute_scale_of(name) \
-                    + transfer
+                # det_timing: deterministic token-cost model instead of
+                # measured wall time — bit-reproducible schedules
+                comp = (2e-4 + 2e-5 * rep.prefill_tokens
+                        + 3e-4 * rep.decode_tokens) if det_timing \
+                    else rep.compute_s
+                dur = comp * actuator.compute_scale_of(name) + transfer
                 if injector is not None:
+                    base = dur
                     # transient fabric degradation inflates the step
                     dur *= injector.fabric_factor(now[0])
+                    # gray failure: one replica quietly runs slow —
+                    # per-replica, so the tail detector can see the
+                    # skew against its live peers
+                    dur *= injector.replica_factor(name, j, now[0])
+                    # detector signal: measured step time over the
+                    # model's own prediction.  Batch composition and
+                    # tenant-wide effects (compute scale, fabric
+                    # windows) hit every replica's ratio alike, so a
+                    # sustained cross-replica skew is a sick replica
+                    h = step_hist.setdefault((name, j), deque(maxlen=8))
+                    h.append(dur / max(base, 1e-12))
                 end = now[0] + dur
                 avail[(name, j)] = end
                 # gateway finalize = engine timestamps + token-stream
@@ -606,6 +849,8 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
                 horizon.append(actuator.paused_until(name))
         horizon.extend(t for t in avail.values() if t > now[0])
         horizon.extend(t for t, _ in admit_events)
+        horizon.extend(t for t, _, _ in drain_events)
+        horizon.extend(t for t in quarantine.values() if t > now[0])
         # door-queued requests: retry a beat later, and never sleep past
         # a dispatch deadline (expiry is an event too)
         for door in gateway.doors.values():
@@ -639,6 +884,17 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
             "ttft_p99_ms": float(np.quantile(ttfts, .99)) if len(done) else 0.0,
             "itl_p99_ms": (float(np.quantile(np.array(itls) * 1e3, .99))
                            if itls else 0.0),
+            # TTFTs of requests that survived an evacuation (warm or
+            # cold) — what the migrate A/B compares — and the token
+            # streams for exact-parity checks against a fault-free run
+            "redriven_ids": sorted(int(i) for i in redriven_ids[name]),
+            "redriven_ttft_ms": sorted(
+                float(r.ttft * 1e3) for r in done
+                if r.req_id in redriven_ids[name]),
+            "outputs": {int(r.req_id): [int(t) for t in r.output_tokens]
+                        for r in done},
+            "ttft_by_id": {int(r.req_id): float(r.ttft * 1e3)
+                           for r in done},
         }
         if verbose:
             print(f"  {name}: completed {len(done)}/{door.offered} "
@@ -688,6 +944,15 @@ def serve(arch: str = "stablelm_3b", requests: int = 32, qps: float = 4.0,
                   f"redriven={out['faults']['redriven']}, "
                   f"watchdog_fired={watchdog.fired}, "
                   f"actuator={out['faults'].get('actuator')}")
+    if migrations or migrate or drains:
+        out["migrations"] = migrations
+        if verbose and migrations:
+            warm_n = sum(m["warm"] for m in migrations)
+            cold_n = sum(m["cold"] for m in migrations)
+            print(f"migrations: {len(migrations)} "
+                  f"({warm_n} warm lane(s), {cold_n} recompute, "
+                  f"{sum(m['bytes'] for m in migrations) / 1e6:.2f} MB "
+                  f"shipped)")
     out["gateway"] = gateway.counters()
     out["prometheus"] = gateway.prometheus(now[0])
     gateway.check()     # offered == completed+rejected+shed+expired+in_flight
@@ -774,8 +1039,35 @@ def main():
                     help="keep the fault schedule but disable recovery: "
                          "crashed replicas shed their in-flight requests "
                          "instead of redriving them (A/B baseline)")
+    ap.add_argument("--migrate", action="store_true",
+                    help="recover by verified KV-page shipping instead of "
+                         "recompute: crashed / drained / gray-failed "
+                         "replicas ship their lanes' page chains to a live "
+                         "peer, chain-hash-verified before commit "
+                         "(serving/migrate.py)")
+    ap.add_argument("--drain-at", action="append", default=[],
+                    metavar="T:TENANT:REPLICA",
+                    help="planned scale-down: at virtual time T evacuate "
+                         "TENANT's replica REPLICA (repeatable; lanes are "
+                         "migrated or redriven, never shed)")
+    ap.add_argument("--det-timing", action="store_true",
+                    help="deterministic per-token step-cost model instead "
+                         "of measured wall time: bit-reproducible virtual "
+                         "schedules (token-parity A/Bs need this)")
+    ap.add_argument("--unique-prompts", action="store_true",
+                    help="no shared prompt templates: each prompt is fully "
+                         "distinct, so crashed-replica KV cannot be "
+                         "resurrected from the prefix directory")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    drains = []
+    for spec in args.drain_at:
+        try:
+            t, tenant, rep = spec.split(":")
+            drains.append((float(t), tenant, int(rep)))
+        except ValueError:
+            raise SystemExit(f"--drain-at wants T:TENANT:REPLICA, "
+                             f"got {spec!r}")
     serve(arch=args.arch, requests=args.requests, qps=args.qps,
           prompt_len=args.prompt_len, max_new=args.max_new,
           slots=args.slots, num_tenants=args.tenants,
@@ -790,7 +1082,10 @@ def main():
           door_deadline_ms=args.door_deadline_ms,
           trace=args.trace, trace_out=args.trace_out,
           chaos=args.chaos, chaos_seed=args.chaos_seed,
-          recover=not args.no_recover)
+          recover=not args.no_recover,
+          migrate=args.migrate, drains=drains or None,
+          det_timing=args.det_timing,
+          unique_prompts=args.unique_prompts)
 
 
 if __name__ == "__main__":

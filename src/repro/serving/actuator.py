@@ -137,6 +137,11 @@ class ServingActuator:
             t: 1.0 for t in self.engines}     # MIG-profile compute multiplier
         self.pauses: Dict[str, float] = {t: 0.0 for t in self.engines}
         self.reconfigs: List[float] = []
+        # completed migrate() results (dicts), appended per call for the
+        # serving loop to pop: the actuator re-homes lanes engine-side
+        # but holds no gateway reference, so the caller finishes the
+        # request-plane half (warm adoption / cold redrive)
+        self.migrations: List[Dict] = []
         # the hot fabric path is the root hosting the heaviest bandwidth
         # (ETL-class) background stream, whatever it is named
         bw = [e for e in self.ledger.entries()
@@ -252,6 +257,59 @@ class ServingActuator:
     def headroom_units(self, device: str) -> int:
         self._trace("query_headroom_units", "", device=device)
         return self.ledger.headroom_units(device)
+
+    def _replica_device(self, tenant: str, replica: int) -> Optional[str]:
+        for e in self.ledger.entries():
+            if e.tenant == tenant and e.replica == replica:
+                return e.slot.device
+        return None
+
+    def migrate(self, tenant: str, replica_from: int,
+                replica_to: int) -> float:
+        """Live lane migration: ship ``replica_from``'s resident lanes
+        (KV pages + cursors, chain-hashed) to ``replica_to`` and resume
+        them there.  The transfer is priced against the ledger's
+        per-root fabric demand — migration is PS traffic like any tenant
+        flow — and returned as the pause the victim's lanes observe.
+        Lanes that fail the importer's verify-then-commit handshake (or
+        never held pages) land in the result's ``cold`` list: the caller
+        must finish those through ``Gateway.redrive`` — the PR 9
+        recompute path — so a corrupted transfer degrades to latency,
+        never a wrong token.  The engine-side re-homing happens here;
+        the request-plane half (warm adoption / cold redrive) is the
+        caller's, via the appended ``self.migrations`` record."""
+        from repro.serving.migrate import MigrationPlanner, PageImporter
+        key = self._key(tenant)
+        engs = self.engines[key]
+        src, dst = engs[replica_from], engs[replica_to]
+        manifests = src.drain_requests(ship_state=True)
+        planner = MigrationPlanner(self.fabric, self.topo, self.ledger)
+        plan = planner.price(manifests,
+                             src_device=self._replica_device(key,
+                                                             replica_from),
+                             dst_device=self._replica_device(key,
+                                                             replica_to))
+        warm: List = []
+        cold: List = []
+        importer = PageImporter(dst.runtime) if dst.runtime is not None \
+            else None
+        for man in manifests:
+            if importer is not None and importer.import_lane(man):
+                warm.append(man.req)
+            else:
+                cold.append(man.req)
+        self.migrations.append({
+            "tenant": key, "from": replica_from, "to": replica_to,
+            "warm": warm, "cold": cold, "transfer_s": plan.transfer_s,
+            "pages": plan.pages, "bytes": plan.bytes,
+            "attached_pages": importer.attached_pages if importer else 0,
+            "copied_pages": importer.copied_pages if importer else 0,
+            "verify_failures": importer.verify_failures if importer else 0})
+        self._trace("migrate", key, dur=plan.transfer_s,
+                    replica_from=replica_from, replica_to=replica_to,
+                    lanes=plan.lanes, warm=len(warm), cold=len(cold),
+                    pages=plan.pages, bytes=plan.bytes)
+        return plan.transfer_s
 
     # ------------------------------------------------------- KV observability
     def kv_pressure(self, tenant: str) -> Dict[str, float]:

@@ -211,16 +211,29 @@ class ServingEngine:
             return self.runtime.has_work()
         return bool(self.queue) or any(s is not None for s in self.slots)
 
-    def drain_requests(self) -> List[Request]:
-        """Replica death: release every KV page and return the resident
-        requests (queued, prefilling and decoding alike) so the dispatcher
-        can redrive them onto surviving replicas.  Requests come back
-        rolled to a restartable state (outputs cleared, original
-        ``prefill_done`` stamp kept so TTFT is not double-counted)."""
+    def drain_requests(self, ship_state: bool = False):
+        """Replica death / planned drain: release every KV page and return
+        the resident requests (queued, prefilling and decoding alike) so
+        the dispatcher can redrive them onto surviving replicas.  Requests
+        come back rolled to a restartable state (outputs cleared, original
+        ``prefill_done`` stamp kept so TTFT is not double-counted).
+
+        ``ship_state=True`` returns ``serving/migrate.LaneManifest``
+        objects instead of bare requests: each resident lane's KV pages
+        are serialized (with chain hashes) BEFORE the drain resets its
+        cursors, so a ``PageImporter`` on another replica can resume the
+        lane warm — and any lane that fails the import's verification
+        degrades to the cold redrive exactly as if ``ship_state`` were
+        False.  The dense backend holds no shippable page chains, so its
+        manifests are always cold (recompute is the only path)."""
         if self.runtime is not None:
+            manifests = None
+            if ship_state:
+                from repro.serving.migrate import PageExporter
+                manifests = PageExporter(self.runtime).export_all()
             drained = self.runtime.drain_for_redrive()
             self.kv.release_all()        # safety net: no page outlives death
-            return drained
+            return manifests if manifests is not None else drained
         drained = list(self.queue)
         self.queue.clear()
         for i, req in enumerate(self.slots):
@@ -234,6 +247,13 @@ class ServingEngine:
             req.output_tokens.clear()
             req.decode_times.clear()
         self.kv.release_all()
+        if ship_state:
+            from repro.serving.migrate import LaneManifest
+            return [LaneManifest(
+                req=r,
+                prompt_tokens=np.asarray(r.prompt_tokens, np.int64)
+                if r.prompt_tokens is not None else np.zeros(0, np.int64))
+                for r in drained]
         return drained
 
     # ----------------------------------------------------------------- step
@@ -276,12 +296,13 @@ class ServingEngine:
             # any gateway-queue wait) — the SLO the paper's per-tenant
             # attainment is measured against
             self.metrics.latency.observe(end_time, (end_time - req.arrival),
-                                         slo=(req.slo_ms or 0) / 1e3 or None)
+                                         slo=(req.slo_ms or 0) / 1e3 or None,
+                                         req_id=req.req_id)
             # engine-measured TTFT: from the moment the gateway handed the
             # request to this engine (absent a gateway, never observed)
             if req.submitted >= 0:
                 self.metrics.engine_ttft.observe(
-                    end_time, end_time - req.submitted)
+                    end_time, end_time - req.submitted, req_id=req.req_id)
         for req in report.decoded:
             # per-token decode timestamp: the gap to the previous emission
             # (prefill for the first decode) is this token's ITL
@@ -289,7 +310,8 @@ class ServingEngine:
                 else req.prefill_done
             req.decode_times.append(end_time)
             if prev >= 0:
-                self.metrics.itl.observe(end_time, end_time - prev)
+                self.metrics.itl.observe(end_time, end_time - prev,
+                                         req_id=req.req_id)
         for req in report.completed:
             req.finished = end_time
         if report.tokens:

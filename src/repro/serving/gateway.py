@@ -270,6 +270,12 @@ class Gateway:
         """Stop routing/submitting tenant ``name`` to replica ``idx``."""
         self._dead.setdefault(name, set()).add(idx)
 
+    def mark_live(self, name: str, idx: int) -> None:
+        """Readmit a replica to routing — a gray-failed replica that was
+        evacuated (quarantined) can come back once its slowdown window
+        passes, unlike a crashed one."""
+        self._dead.get(name, set()).discard(idx)
+
     def live_replicas(self, name: str) -> List[int]:
         dead = self._dead.get(name, ())
         return [j for j in range(len(self.engines.get(name, [])))
@@ -300,6 +306,29 @@ class Gateway:
             n += 1
             if self.tracer is not None:
                 self.tracer.on_redrive(req, now, from_engine=from_engine)
+        return n
+
+    def adopt_warm(self, name: str, reqs: List[Request], now: float,
+                   arrive_time: float, *, from_engine: int = -1,
+                   to_engine: int = -1) -> int:
+        """Live migration landed: ``reqs`` are already resident on the
+        destination replica (their KV pages shipped and verified), so
+        unlike :meth:`redrive` they do NOT re-enter the door queue and
+        their token streams do NOT roll back — the lane resumes where it
+        left off, TTFT stamp conserved.  Still ACCEPTED, still in
+        flight: conservation is untouched.  The flight recorder's
+        handoff segment spans the transfer (``now`` → ``arrive_time``).
+        Returns the number adopted."""
+        door = self.door(name)
+        n = 0
+        for req in reqs:
+            if door._state.get(req.req_id) is not Verdict.ACCEPTED:
+                continue
+            door.redriven += 1
+            n += 1
+            if self.tracer is not None:
+                self.tracer.on_redrive(req, now, from_engine=from_engine)
+                self.tracer.on_admit(req, arrive_time, engine=to_engine)
         return n
 
     def abandon(self, name: str, reqs: List[Request], now: float, *,
@@ -518,19 +547,33 @@ class Gateway:
                 windows = [getattr(e.metrics, attr) for e in engs[n]]
                 acc: List[List[float]] = []
                 total_sum = 0.0
+                # per-bucket exemplar: slowest retained sample across the
+                # tenant's replicas (OpenMetrics `# {req_id="..."} v ts`
+                # suffix on the bucket line) — the request a dashboard
+                # drill-down from this bucket should land on
+                exemplars: List[Optional[tuple]] = []
                 for w in windows:
                     h = w.hist()
                     if not acc:
                         acc = [[le, float(c)] for le, c in h]
+                        exemplars = list(w.exemplars)
                     else:
                         for i, (_, c) in enumerate(h):
                             acc[i][1] += c
+                        for i, ex in enumerate(w.exemplars):
+                            if ex is not None and (exemplars[i] is None
+                                                   or ex[0] > exemplars[i][0]):
+                                exemplars[i] = ex
                     total_sum += w.sum
                 count = acc[-1][1] if acc else 0.0
-                for le, c in acc:
+                for i, (le, c) in enumerate(acc):
                     tag = "+Inf" if le == float("inf") else f"{le:g}"
-                    lines.append(
-                        f'{metric}_bucket{{tenant="{n}",le="{tag}"}} {c:g}')
+                    line = f'{metric}_bucket{{tenant="{n}",le="{tag}"}} {c:g}'
+                    ex = exemplars[i] if i < len(exemplars) else None
+                    if ex is not None:
+                        val, rid, ts = ex
+                        line += f' # {{req_id="{rid}"}} {val:g} {ts:g}'
+                    lines.append(line)
                 lines.append(f'{metric}_sum{{tenant="{n}"}} {total_sum:g}')
                 lines.append(f'{metric}_count{{tenant="{n}"}} {count:g}')
 

@@ -44,13 +44,21 @@ class LatencyWindow:
         self.buckets = tuple(buckets)
         self.bucket_counts = [0] * (len(self.buckets) + 1)  # +Inf last
         self.sum = 0.0
+        # per-bucket OpenMetrics exemplar: the SLOWEST sample that landed
+        # in each bucket, as (latency, req_id, time) — the request a
+        # dashboard user drills into from a bucket is the one closest to
+        # spilling into the next, i.e. the bucket's worst case.  Only
+        # samples observed with a req_id are retained.
+        self.exemplars: List[Optional[Tuple[float, int, float]]] = \
+            [None] * (len(self.buckets) + 1)
 
     @property
     def samples(self):
         return list(zip(self._times, self._vals))
 
     def observe(self, now: float, latency: float,
-                slo: Optional[float] = None) -> None:
+                slo: Optional[float] = None,
+                req_id: Optional[int] = None) -> None:
         if self._times and now < self._times[-1]:
             i = bisect.bisect_right(self._times, now)
             self._times.insert(i, now)
@@ -67,7 +75,12 @@ class LatencyWindow:
             self._vals = self._vals[-self.max_samples:]
         self.total += 1
         self.sum += latency
-        self.bucket_counts[bisect.bisect_left(self.buckets, latency)] += 1
+        b = bisect.bisect_left(self.buckets, latency)
+        self.bucket_counts[b] += 1
+        if req_id is not None:
+            ex = self.exemplars[b]
+            if ex is None or latency > ex[0]:
+                self.exemplars[b] = (latency, req_id, now)
         if slo is not None and latency > slo:
             self.misses += 1
 

@@ -316,6 +316,28 @@ class ClusterSim:
         self._trace("query_headroom_units", "", device=device)
         return self.ledger.headroom_units(device)
 
+    def migrate(self, tenant: str, replica_from: int,
+                replica_to: int) -> float:
+        """Live lane migration: ship the source replica's *queued* work
+        to the destination (jobs already in service finish where they
+        started — their completion events are scheduled).  In the
+        discrete-event model the KV transfer collapses to a short pause;
+        the serving stack prices it against fabric demand for real."""
+        self._maybe_fault("migrate")
+        lt = self.lat[tenant]
+        src = lt.replicas[replica_from]
+        dst = lt.replicas[replica_to]
+        moved = len(src.queue)
+        dst.queue.extend(src.queue)
+        src.queue.clear()
+        self._pause(tenant, self.p.migrate_pause_s)
+        self.timeline.append(
+            (self.now, f"migrate:{tenant}:r{replica_from}->r{replica_to}"))
+        self._trace("migrate", tenant, dur=self.p.migrate_pause_s,
+                    replica_from=replica_from, replica_to=replica_to,
+                    moved=moved)
+        return self.p.migrate_pause_s
+
     # -------------------------------------------------------- fabric state
     def _bg_effective_pcie(self, bg: _BackgroundTenant) -> float:
         if not bg.active or bg.spec.pcie_demand <= 0:

@@ -86,6 +86,9 @@ class SimParams:
     mig_reconfig_std_s: float = 3.0
     mig_reconfig_min_s: float = 8.0
     move_pause_s: float = 2.0
+    # live lane migration: KV-page shipping is far cheaper than a MIG
+    # re-slice or a replica move — only the victim's lanes stall
+    migrate_pause_s: float = 0.25
     # controller sampling
     sample_period_s: float = 1.0
     schedule: Tuple[InterferenceWindow, ...] = field(

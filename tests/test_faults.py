@@ -139,6 +139,11 @@ def run_cached(key):
 
 
 # ------------------------------------------------------- chaos property
+# The five cluster-chaos properties below drive 450-step clusters and
+# are tier-2 (the chaos CI job runs this whole file); the deterministic
+# subset — injector purity/replay, watchdog, RetryingActuator — stays
+# tier-1 so fault-path regressions block merges.
+@pytest.mark.tier2
 def test_chaos_recovery_conserves_everything():
     """450 checked steps of crash + stuck-lane chaos with recovery on:
     every offered request completes with exactly one terminal verdict,
@@ -164,6 +169,7 @@ def test_chaos_recovery_conserves_everything():
     assert {"replica_crash", "lane_stuck"} <= kinds
 
 
+@pytest.mark.tier2
 def test_redriven_timeline_carries_handoff_segment():
     """A redriven request keeps ONE conserved timeline across engines:
     the crash opens an explicit ``handoff`` segment, the survivor's
@@ -181,6 +187,7 @@ def test_redriven_timeline_carries_handoff_segment():
         assert "handoff" not in summaries[rid].segs
 
 
+@pytest.mark.tier2
 def test_chaos_tokens_match_fault_free_run():
     """Greedy decode + full-restart recovery: the chaos run's committed
     tokens are identical to the fault-free run's, for untouched AND
@@ -196,6 +203,7 @@ def test_chaos_tokens_match_fault_free_run():
             f"req {r.req_id} diverged (redriven={r.req_id in chaos['redriven']})"
 
 
+@pytest.mark.tier2
 def test_recovery_off_sheds_with_one_verdict_each():
     """Same crash, recovery disabled: the dead replica's in-flight
     requests are SHED — still exactly one terminal verdict each, the
@@ -215,6 +223,7 @@ def test_recovery_off_sheds_with_one_verdict_each():
     assert run_cached("chaos")["gw"].door("T1").completed > door.completed
 
 
+@pytest.mark.tier2
 def test_chaos_run_is_deterministic():
     """Same schedule, same seed, fixed virtual grid: a second run is
     bit-identical — fault log, gateway counters, committed tokens."""
@@ -234,9 +243,11 @@ def test_chaos_run_is_deterministic():
 def test_fault_schedule_replays_bit_identically(seed, data):
     mk = lambda: FaultInjector.plan(
         seed, 20.0, tenants=["A", "B"], replicas=3, crashes=2,
-        actuator_failures=2, stuck_lanes=2, fabric_windows=1)
+        actuator_failures=2, stuck_lanes=2, fabric_windows=1,
+        slow_replicas=1)
     a, b = mk(), mk()
     assert a.schedule == b.schedule
+    assert any(f.kind == "replica_slow" for f in a.schedule)
     times = sorted(data.draw(st.lists(
         st.floats(min_value=0.0, max_value=25.0, allow_nan=False,
                   allow_infinity=False),
@@ -246,6 +257,10 @@ def test_fault_schedule_replays_bit_identically(seed, data):
         assert a.actuator_fault("reconfigure", t) == \
             b.actuator_fault("reconfigure", t)
         assert a.fabric_factor(t) == b.fabric_factor(t)
+        for tenant in ("A", "B"):
+            for rep in range(3):
+                assert a.replica_factor(tenant, rep, t) == \
+                    b.replica_factor(tenant, rep, t)
     assert a.replay_key() == b.replay_key()
     assert a.pending() == b.pending()
 
@@ -324,6 +339,11 @@ class _ScriptedActuator:
         self.calls.append(("headroom_units", device))
         return 3
 
+    def migrate(self, tenant, replica_from, replica_to):
+        self._maybe_fail()
+        self.calls.append(("migrate", tenant, replica_from, replica_to))
+        return 0.25
+
 
 def _protocol_methods():
     from repro.core.controller import Actuator
@@ -345,7 +365,7 @@ def test_retrying_actuator_covers_every_protocol_method():
             "set_io_throttle": ("ETL", 3e8),
             "set_mps_quota": ("T1", 0.7),
             "pin_cpu_away_from_irq": ("T1",), "free_slots": (),
-            "headroom_units": ("h0:g0",)}
+            "headroom_units": ("h0:g0",), "migrate": ("T1", 0, 1)}
     assert set(args) == set(methods)
     for m in methods:
         before = len(inner.calls)

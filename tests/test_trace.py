@@ -412,11 +412,16 @@ def _protocol_methods():
 
 
 class _QuotaEngine:
+    runtime = None                  # no paged runtime -> imports skipped
+
     def __init__(self):
         self.quota = 1.0
 
     def set_quota(self, q):
         self.quota = q
+
+    def drain_requests(self, ship_state=False):
+        return []
 
 
 def _lint_actuator(act, tracer, first, second):
@@ -438,6 +443,7 @@ def _lint_actuator(act, tracer, first, second):
             lambda: act.pin_cpu_away_from_irq(first),
         "free_slots": lambda: act.free_slots(),
         "headroom_units": lambda: act.headroom_units(cur.device),
+        "migrate": lambda: act.migrate(first, 0, 1),
     }
     methods = _protocol_methods()
     # lint: a protocol method added without trace coverage fails here
@@ -450,7 +456,7 @@ def _lint_actuator(act, tracer, first, second):
             f"{len(tracer.events) - before} trace events, expected 1"
         ev = tracer.events[-1]
         assert tracer.actions and tracer.actions[-1] is ev
-        if name in ("reconfigure", "move"):
+        if name in ("reconfigure", "move", "migrate"):
             assert ev.ph == "X" and ev.dur > 0    # pause window recorded
         else:
             assert ev.ph == "i"
